@@ -1,0 +1,46 @@
+"""LM substrate step costs on reduced configs (CPU): train step,
+prefill and decode step for a dense and the hybrid arch."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config, smoke_batch
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.training import init_training, make_serve_step, make_train_step
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready()
+                 if hasattr(x, "block_until_ready") else x, out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready()
+                 if hasattr(x, "block_until_ready") else x, out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(report):
+    for arch in ("granite-8b", "zamba2-1.2b"):
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        batch = smoke_batch(cfg, batch=4, seq=64)
+        params, opt = init_training(model, jax.random.key(0))
+        ts = jax.jit(make_train_step(model, AdamWConfig(warmup_steps=1)))
+        t = _time(ts, params, opt, batch)
+        toks = 4 * 64
+        report(f"train_step_{arch}_smoke", t * 1e6,
+               f"{toks / t:.0f} tok/s (reduced cfg, cpu)")
+
+        _, cache = model.prefill(params, batch, max_len=96)
+        step = jax.jit(make_serve_step(model))
+        tok = np.zeros((4, 1), np.int32)
+        t = _time(step, params, tok, cache)
+        report(f"decode_step_{arch}_smoke", t * 1e6,
+               f"{4 / t:.0f} tok/s decode (reduced cfg, cpu)")

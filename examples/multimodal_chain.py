@@ -1,0 +1,99 @@
+"""Fig-10 reproduction: a multi-modal mapping-tomography chain.
+
+Two loaders create 'absorb' and 'fluo' datasets; the fluorescence data
+is corrected *using* the absorption data (2-in plugin), then both are
+reconstructed — multiple datasets alive simultaneously, each with its
+own processing history, exactly the paper's multi-modal story.
+
+    PYTHONPATH=src python examples/multimodal_chain.py
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import (BaseLoader, BasePlugin, BaseSaver, DataSet,
+                        InMemoryTransport, PluginRunner, ProcessList,
+                        PROJECTION, SINOGRAM)
+from repro.tomo import (FBPRecon, ParallelGeometry, SinogramFilter,
+                        forward_project, phantom_stack)
+
+
+class MappingLoader(BaseLoader):
+    """Simulates a mapping scan: absorption (3-D) + fluorescence (3-D,
+    here one emission channel of a 4-D stack)."""
+    name = "mapping_loader"
+    parameters = {"n_det": 48, "n_angles": 72, "kind": "absorb"}
+
+    def load(self):
+        p = self.params
+        geom = ParallelGeometry(p["n_angles"], p["n_det"], 2)
+        vol = phantom_stack(p["n_det"], 2)
+        if p["kind"] == "fluo":
+            vol = np.roll(vol, 3, axis=1) * 0.7    # different contrast
+        proj = forward_project(vol, geom).astype(np.float32)
+        ds = DataSet(self.out_dataset_names[0], proj.shape, np.float32,
+                     ("rotation_angle", "detector_y", "detector_x"),
+                     backing=proj)
+        ds.add_pattern(PROJECTION, core=("detector_y", "detector_x"),
+                       slice_=("rotation_angle",))
+        ds.add_pattern(SINOGRAM, core=("rotation_angle", "detector_x"),
+                       slice_=("detector_y",))
+        ds.metadata.update({"geometry": geom, "mu": 1.0, "truth": vol})
+        return [ds]
+
+
+class AbsorptionCorrection(BasePlugin):
+    """Correct fluorescence by absorption attenuation (2-in, 1-out) —
+    the multi-dataset plugin type from paper §II.B."""
+    name = "absorption_correction"
+    n_in_datasets = 2
+    n_out_datasets = 1
+
+    def setup(self, ins):
+        absorb, fluo = ins
+        dout = fluo.like(self.out_dataset_names[0])
+        dout.metadata = dict(fluo.metadata)
+        self.chunk_frames(PROJECTION, 1)
+        return [dout]
+
+    def process_frames(self, frames):
+        absorb, fluo = frames
+        atten = jnp.exp(-0.01 * absorb)
+        return fluo / jnp.maximum(atten, 0.1)
+
+
+class PrintSaver(BaseSaver):
+    name = "print_saver"
+
+    def save(self, ds):
+        arr = np.asarray(ds.materialise())
+        print(f"  saved {ds.name}: shape={arr.shape} "
+              f"range=({arr.min():.2f}, {arr.max():.2f}) "
+              f"produced_by={ds.produced_by}")
+
+
+def main():
+    pl = ProcessList()
+    pl.add(MappingLoader, params={"kind": "absorb"},
+           out_datasets=("absorb",))
+    pl.add(MappingLoader, params={"kind": "fluo"}, out_datasets=("fluo",))
+    # fluo corrected using absorb (both alive simultaneously)
+    pl.add(AbsorptionCorrection, in_datasets=("absorb", "fluo"),
+           out_datasets=("fluo",))
+    # each dataset then gets its own recon path
+    for name in ("absorb", "fluo"):
+        pl.add(SinogramFilter, in_datasets=(name,), out_datasets=(name,))
+        pl.add(FBPRecon, in_datasets=(name,),
+               out_datasets=(f"{name}_vol",))
+    pl.add(PrintSaver, in_datasets=("absorb_vol",))
+    pl.add(PrintSaver, in_datasets=("fluo_vol",))
+
+    runner = PluginRunner(pl, InMemoryTransport())
+    print("running multi-modal chain (Fig 10):")
+    runner.run()
+    print()
+    print(runner.profiler.report())
+
+
+if __name__ == "__main__":
+    main()

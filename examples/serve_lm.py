@@ -1,0 +1,13 @@
+"""Batched serving example: continuous batching over decode slots.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "zamba2-1.2b", "--smoke",
+                "--requests", "6", "--slots", "3",
+                "--max-new", "8", "--max-len", "32"] + sys.argv[1:]
+    main()

@@ -1,0 +1,15 @@
+"""End-to-end training example: train a small decoder LM for a few
+hundred steps with checkpointing + restart (kill it mid-run and rerun —
+it resumes).  Thin wrapper over the production driver.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "granite-8b", "--smoke",
+                "--steps", "200", "--batch", "8", "--seq", "128",
+                "--ckpt-dir", "out/train_lm_ckpt"] + sys.argv[1:]
+    main()

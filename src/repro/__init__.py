@@ -1,0 +1,7 @@
+"""repro — Savu-in-JAX: a pattern-driven, multi-pod processing framework.
+
+The paper's pipeline engine lives in repro.core; the tomography
+substrate in repro.tomo; the LM model zoo, training/serving and
+distribution layers support the assigned architecture × shape grid.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+from .registry import (ARCH_IDS, SHAPES, SUBQUADRATIC, CellSpec, all_cells,
+                       cell_supported, get_config, input_specs, smoke_batch)
+
+__all__ = ["ARCH_IDS", "SHAPES", "SUBQUADRATIC", "CellSpec", "all_cells",
+           "cell_supported", "get_config", "input_specs", "smoke_batch"]

@@ -1,0 +1,29 @@
+# The paper's primary contribution — a pattern-driven, plugin-based
+# processing framework (Savu) re-expressed for JAX/TPU meshes.
+from .patterns import (BATCH, DIFFRACTION, EXPERT, HEADS, PROJECTION,
+                       SEQUENCE, SINOGRAM, SPECTRUM, TIMESERIES, TOKENS,
+                       VOLUME_XZ, Pattern, pattern_from_labels)
+from .dataset import DataSet
+from .plugin import (BaseFilter, BaseLoader, BasePlugin, BaseRecon,
+                     BaseSaver, CPU_DRIVER, GPU_DRIVER, LambdaFilter,
+                     MeshDriver, PluginData)
+from .process_list import PluginEntry, ProcessList, ProcessListError
+from .framework import PluginRunner, run_process_list
+from .transport import (ChunkedFile, ChunkedFileTransport, InMemoryTransport,
+                        IOStats, ShardedTransport, Transport)
+from .chunking import (DEFAULT_CACHE_BYTES, chunks_touched, naive_chunks,
+                       optimise_block_shape, optimise_chunks)
+from .profiler import Event, Profiler
+
+__all__ = [
+    "Pattern", "pattern_from_labels", "DataSet", "BasePlugin", "BaseFilter",
+    "BaseRecon", "BaseLoader", "BaseSaver", "LambdaFilter", "MeshDriver",
+    "PluginData", "CPU_DRIVER", "GPU_DRIVER", "ProcessList", "PluginEntry",
+    "ProcessListError", "PluginRunner", "run_process_list", "Transport",
+    "InMemoryTransport", "ShardedTransport", "ChunkedFileTransport",
+    "ChunkedFile", "IOStats", "optimise_chunks", "optimise_block_shape",
+    "naive_chunks", "chunks_touched", "DEFAULT_CACHE_BYTES", "Profiler",
+    "Event", "PROJECTION", "SINOGRAM", "SPECTRUM", "DIFFRACTION",
+    "VOLUME_XZ", "TIMESERIES", "BATCH", "SEQUENCE", "TOKENS", "EXPERT",
+    "HEADS",
+]

@@ -1,0 +1,211 @@
+"""Plugin base classes + drivers (paper §III.F).
+
+A plugin is an independent processing step.  It declares how many
+in/out datasets it needs, sets up its out_datasets (shape, axis labels,
+patterns) in ``setup``, and implements a pure ``process_frames`` that
+maps m input frames -> m output frames.  The framework owns all data
+movement; the plugin never sees more than its requested frames.
+
+Drivers (paper §III.F.1): the CPU driver lets every process run the
+plugin; the GPU driver restricts execution to a sub-communicator.  In
+the mesh adaptation a driver names the mesh axes the plugin's jit may
+shard over — ``MeshDriver(axes=("data",))`` is the CPU-driver analogue
+(everyone participates along ``data``); a reduced driver such as
+``MeshDriver(axes=("model",))`` or a sub-mesh driver reproduces the
+GPU-communicator behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from .dataset import DataSet
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshDriver:
+    """Names the mesh axes a plugin distributes over."""
+    axes: tuple[str, ...] = ("data",)
+    #: run on a sub-mesh only (e.g. GPU-driver analogue); empty = all
+    submesh: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def data_axis(self) -> str | None:
+        return self.axes[0] if self.axes else None
+
+
+CPU_DRIVER = MeshDriver(axes=("data",))
+GPU_DRIVER = MeshDriver(axes=("data",), submesh={"model": 1})
+
+
+@dataclasses.dataclass
+class PluginData:
+    """Per-plugin view onto a dataset (paper §III.F.4): which access
+    pattern and how many frames per processing call."""
+    dataset: DataSet
+    pattern_name: str = ""
+    n_frames: int = 1
+    #: frame-padding in core dims: {axis_label: pad} (framework applies)
+    padding: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def pattern(self):
+        return self.dataset.get_pattern(self.pattern_name)
+
+
+class BasePlugin:
+    """Base of all plugins.  Subclass one of BaseFilter/BaseRecon/
+    BaseLoader/BaseSaver rather than this directly."""
+
+    name: str = "base_plugin"
+    n_in_datasets: int = 1
+    n_out_datasets: int = 1
+    #: pattern for out_datasets when it differs from the input pattern
+    #: (e.g. recon: SINOGRAM in, VOLUME_XZ out); None = same as input.
+    out_pattern_name: str | None = None
+    driver: MeshDriver = CPU_DRIVER
+    #: user-tunable parameters with defaults; overridden per process-list
+    parameters: dict[str, Any] = {}
+
+    def __init__(self, **params):
+        self.params = {**self.__class__.parameters}
+        unknown = set(params) - set(self.params) - {"in_datasets",
+                                                    "out_datasets"}
+        if unknown:
+            raise ValueError(
+                f"plugin {self.name!r}: unknown parameters {sorted(unknown)} "
+                f"(valid: {sorted(self.params)})")
+        self.params.update({k: v for k, v in params.items()
+                            if k not in ("in_datasets", "out_datasets")})
+        #: dataset names, filled from the process list at check time
+        self.in_dataset_names: list[str] = list(params.get("in_datasets", []))
+        self.out_dataset_names: list[str] = list(params.get("out_datasets", []))
+        #: PluginData views, attached by the framework when plugged in
+        self.in_data: list[PluginData] = []
+        self.out_data: list[PluginData] = []
+
+    # -- mandatory interface ------------------------------------------
+    def setup(self, in_datasets: list[DataSet]) -> list[DataSet]:
+        """Describe out_datasets given in_datasets, and set the pattern +
+        n_frames on every PluginData.  Default: single in -> single out of
+        identical shape, same patterns, first pattern, 1 frame."""
+        (din,) = in_datasets
+        dout = din.like(self.out_dataset_names[0])
+        pat = self.default_pattern(din)
+        self.chunk_frames(pat)
+        return [dout]
+
+    def process_frames(self, frames: Sequence[Any]) -> Any:
+        """Pure function: list of per-in-dataset frame blocks -> per-out
+        blocks.  Each block has shape (m, *core_shape).  Must be jax-
+        traceable for the sharded transport."""
+        raise NotImplementedError
+
+    # -- optional hooks -------------------------------------------------
+    def pre_process(self) -> None:  # once, before the frame loop
+        pass
+
+    def post_process(self) -> None:  # once, after an implicit barrier
+        pass
+
+    # -- helpers ---------------------------------------------------------
+    def default_pattern(self, din: DataSet) -> str:
+        if not din.patterns:
+            raise ValueError(f"dataset {din.name!r} has no patterns")
+        return next(iter(din.patterns))
+
+    def chunk_frames(self, pattern_name: str, n_frames: int = 1) -> None:
+        """Set pattern/nframes on all attached PluginData (in then out)."""
+        for pd in self.in_data + self.out_data:
+            pd.pattern_name = pattern_name
+            pd.n_frames = n_frames
+
+    def get_param(self, key: str):
+        return self.params[key]
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.name})"
+
+
+class BaseFilter(BasePlugin):
+    """1-in 1-out, same shape — the common filter plugin type."""
+    name = "base_filter"
+    pattern_name: str | None = None   # subclass fixes its space
+    frames: int = 1
+
+    def setup(self, in_datasets):
+        (din,) = in_datasets
+        dout = din.like(self.out_dataset_names[0])
+        pat = self.pattern_name or self.default_pattern(din)
+        self.chunk_frames(pat, self.frames)
+        return [dout]
+
+
+class BaseRecon(BasePlugin):
+    """Sinogram-in, volume-slice-out reconstruction plugins."""
+    name = "base_recon"
+
+
+class BaseLoader(BasePlugin):
+    """Creates DataSets lazily (paper: loader loads *information*, not
+    data).  ``load`` returns fully-described datasets whose backing may be
+    a thunk."""
+    name = "base_loader"
+    n_in_datasets = 0
+
+    def setup(self, in_datasets):  # loaders use load() instead
+        raise RuntimeError("loaders use .load()")
+
+    def load(self) -> list[DataSet]:
+        raise NotImplementedError
+
+    def process_frames(self, frames):
+        raise RuntimeError("loaders do not process frames")
+
+
+class BaseSaver(BasePlugin):
+    """Persists datasets; called after loaders, retains a link with the
+    framework until the chain completes (paper §III.F.2)."""
+    name = "base_saver"
+    n_out_datasets = 0
+
+    def setup(self, in_datasets):
+        self.chunk_frames(self.default_pattern(in_datasets[0]))
+        return []
+
+    def create(self, dataset: DataSet, now, next_) -> None:
+        """Allocate backing storage for an out_dataset (chunked)."""
+        raise NotImplementedError
+
+    def save(self, dataset: DataSet) -> None:
+        raise NotImplementedError
+
+    def process_frames(self, frames):
+        raise RuntimeError("savers do not process frames")
+
+
+# ----------------------------------------------------------------------
+class LambdaFilter(BaseFilter):
+    """Quick functional filter: wraps fn(block)->block (testing/examples)."""
+    name = "lambda_filter"
+
+    def __init__(self, fn: Callable, pattern: str | None = None,
+                 frames: int = 1, out_dtype=None, **params):
+        super().__init__(**params)
+        self._fn = fn
+        self.pattern_name = pattern
+        self.frames = frames
+        self._out_dtype = out_dtype
+
+    def setup(self, in_datasets):
+        (din,) = in_datasets
+        dout = din.like(self.out_dataset_names[0],
+                        dtype=self._out_dtype or din.dtype)
+        pat = self.pattern_name or self.default_pattern(din)
+        self.chunk_frames(pat, self.frames)
+        return [dout]
+
+    def process_frames(self, frames):
+        return self._fn(frames[0])

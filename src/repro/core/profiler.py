@@ -1,0 +1,101 @@
+"""Per-plugin profiler — the MPI-profiler analogue (paper §IV.B, Fig 9).
+
+Savu ships a profiler that visualises, per MPI process, the time each
+processing step took.  Here every plugin execution records wall time per
+phase (setup / pre / process / post), the participating device count,
+and — when the sharded transport provides a compiled artifact — the HLO
+FLOPs and bytes from ``cost_analysis()``.  ``report()`` renders the
+Fig-9-style ASCII bar chart; ``save()`` emits JSON for the benchmark
+harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any
+
+
+@dataclasses.dataclass
+class Event:
+    plugin: str
+    phase: str          # 'setup' | 'pre' | 'process' | 'post' | 'io'
+    start: float
+    end: float
+    devices: int = 1
+    flops: float | None = None
+    bytes: float | None = None
+    extra: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def wall(self) -> float:
+        return self.end - self.start
+
+
+class Profiler:
+    def __init__(self):
+        self.events: list[Event] = []
+        self._t0 = time.perf_counter()
+
+    # ------------------------------------------------------------------
+    def record(self, plugin: str, phase: str, start: float, end: float,
+               devices: int = 1, flops=None, bytes=None, **extra) -> None:
+        self.events.append(Event(plugin, phase, start, end, devices,
+                                 flops, bytes, extra))
+
+    class _Timer:
+        def __init__(self, prof, plugin, phase, devices, extra):
+            self.prof, self.plugin, self.phase = prof, plugin, phase
+            self.devices, self.extra = devices, extra
+
+        def __enter__(self):
+            self.start = time.perf_counter()
+            return self
+
+        def __exit__(self, *exc):
+            self.prof.record(self.plugin, self.phase, self.start,
+                             time.perf_counter(), self.devices,
+                             **self.extra)
+            return False
+
+    def timer(self, plugin: str, phase: str, devices: int = 1, **extra):
+        return Profiler._Timer(self, plugin, phase, devices, extra)
+
+    # ------------------------------------------------------------------
+    def totals(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for e in self.events:
+            out[e.plugin] = out.get(e.plugin, 0.0) + e.wall
+        return out
+
+    def report(self, width: int = 50) -> str:
+        """Fig-9-style per-plugin bar chart."""
+        totals = self.totals()
+        if not totals:
+            return "(no events)"
+        tmax = max(totals.values()) or 1.0
+        lines = [f"{'plugin':<32} {'wall(s)':>9}  profile"]
+        for name, t in totals.items():
+            bar = "#" * max(1, int(width * t / tmax))
+            lines.append(f"{name:<32} {t:9.4f}  {bar}")
+        phases: dict[str, float] = {}
+        for e in self.events:
+            phases[e.phase] = phases.get(e.phase, 0.0) + e.wall
+        lines.append("")
+        lines.append("per-phase: " + "  ".join(
+            f"{k}={v:.4f}s" for k, v in sorted(phases.items())))
+        return "\n".join(lines)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump([dataclasses.asdict(e) for e in self.events], fh,
+                      indent=2, default=str)
+
+    @staticmethod
+    def load(path: str) -> "Profiler":
+        p = Profiler()
+        with open(path) as fh:
+            for d in json.load(fh):
+                extra = d.pop("extra", {})
+                p.events.append(Event(**d, extra=extra))
+        return p

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for parallel-beam filtered backprojection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def backproject_ref(sino: jnp.ndarray, angles: jnp.ndarray, out_size: int,
+                    centre: float | None = None) -> jnp.ndarray:
+    """(n_angles, n_det) filtered sinogram -> (out_size, out_size) image.
+
+    out(y, x) = (π / n_angles) · Σ_θ lerp(sino_zeropad[θ], t),
+    t = (x - cx)·cosθ + (y - cy)·sinθ + centre.
+
+    Boundary convention: the detector row is zero-padded, so rays whose
+    t falls in (-1, 0) or (n_det-1, n_det) taper linearly to zero and
+    rays further outside contribute exactly 0 — identical to the
+    hat-function-matmul semantics of the Pallas kernel.
+    """
+    n_angles, n_det = sino.shape
+    if centre is None:
+        centre = (n_det - 1) / 2.0
+    c = (out_size - 1) / 2.0
+    xs = jnp.arange(out_size, dtype=sino.dtype) - c
+    ys = jnp.arange(out_size, dtype=sino.dtype) - c
+
+    def one_angle(row, theta):
+        row_p = jnp.pad(row, (1, 1))
+        ct, st = jnp.cos(theta), jnp.sin(theta)
+        t = xs[None, :] * ct + ys[:, None] * st + centre
+        tp = jnp.clip(t + 1.0, 0.0, n_det + 1.0)  # into padded coords
+        t0 = jnp.floor(tp)
+        frac = tp - t0
+        i0 = jnp.clip(t0.astype(jnp.int32), 0, n_det)
+        i1 = jnp.clip(i0 + 1, 0, n_det + 1)
+        val = row_p[i0] * (1 - frac) + row_p[i1] * frac
+        inside = (t > -1.0) & (t < n_det)
+        return jnp.where(inside, val, 0.0)
+
+    acc = jax.vmap(one_angle)(sino, angles.astype(sino.dtype))
+    return jnp.sum(acc, axis=0) * (jnp.pi / n_angles)

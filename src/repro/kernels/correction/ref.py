@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: fused dark/flat-field correction + linearisation.
+
+corrected = clip((raw - dark) / (flat - dark), eps, hi)
+out       = -log(corrected)
+
+This is the first plugin of every full-field chain (paper §II.A:
+"a simple correction, linearisation").
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-6
+HI = 10.0  # transmission clip ceiling (dead/hot pixels)
+
+
+def correct_ref(raw: jnp.ndarray, dark: jnp.ndarray, flat: jnp.ndarray,
+                eps: float = EPS, hi: float = HI) -> jnp.ndarray:
+    raw = raw.astype(jnp.float32)
+    dark = dark.astype(jnp.float32)
+    flat = flat.astype(jnp.float32)
+    denom = jnp.maximum(flat - dark, eps)
+    trans = jnp.clip((raw - dark) / denom, eps, hi)
+    return -jnp.log(trans)

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: blockwise (flash) attention with GQA head mapping.
+
+FlashAttention-2-style streaming softmax: grid (B, Hq, Sq/bq, Sk/bk)
+with the key axis innermost; running max m, normaliser l and the output
+accumulator live in VMEM scratch across the k sweep.  GQA is expressed
+in the k/v BlockSpec index maps (kv head = q head // group) so grouped
+heads reuse the same KV block without materialising repeats — on real
+hardware this is the difference between streaming K/V once per kv-head
+group vs once per q head.
+
+Causal blocks strictly above the diagonal are skipped with pl.when
+(zero VMEM traffic, zero FLOPs), giving the ~2× causal speedup.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, d: int, causal: bool, scale: float):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # k block
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = (not causal) or (j <= i)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)               # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                            # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                   # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    last = i if causal else nk - 1
+
+    @pl.when(j == last)
+    def _finalise():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True, bq: int = 128,
+                           bk: int = 128, interpret: bool = True
+                           ) -> jnp.ndarray:
+    """q (B,Hq,S,D), k/v (B,Hkv,S,D) -> (B,Hq,S,D)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    bq = min(bq, s)
+    bk = min(bk, s)
+    while s % bq:
+        bq //= 2
+    while s % bk:
+        bk //= 2
+    if causal:
+        bq = bk = min(bq, bk)   # diagonal finalisation needs bq == bk
+    grid = (b, hq, s // bq, s // bk)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, d=d,
+                               causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

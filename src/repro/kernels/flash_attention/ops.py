@@ -1,0 +1,33 @@
+"""Public attention entry point used by the model zoo.
+
+Dispatch: Pallas flash kernel for prefill/train shapes on TPU (or
+interpret mode when validating on CPU); pure-jnp reference otherwise.
+The models call `attention(...)`; the switch is config-driven so the
+dry-run can lower either implementation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import mha_chunked_ref, mha_ref
+
+#: sequences at or above this length route to the chunked
+#: online-softmax path (O(S·bq) memory) instead of materialised scores.
+CHUNKED_THRESHOLD = 8192
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas",
+                                             "interpret"))
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, use_pallas: bool = False,
+              interpret: bool = True) -> jnp.ndarray:
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      interpret=interpret)
+    if q.shape[2] >= CHUNKED_THRESHOLD and q.shape[2] == k.shape[2]:
+        return mha_chunked_ref(q, k, v, causal=causal)
+    return mha_ref(q, k, v, causal=causal)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles: (G)QA scaled-dot-product attention, plus a
+chunked online-softmax variant (flash-attention dataflow expressed in
+XLA: lax.scan over query blocks) whose peak memory is O(S·bq) instead
+of O(S²) — the compile path for the 32k/500k sequence cells on hosts
+where the Pallas kernel can't lower."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True) -> jnp.ndarray:
+    """q (B, Hq, S, D); k/v (B, Hkv, S, D) with Hq % Hkv == 0.
+
+    fp32 softmax accumulation regardless of input dtype (matches the
+    kernel's accumulator precision)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mha_chunked_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 512
+                    ) -> jnp.ndarray:
+    """Blockwise online-softmax attention (flash dataflow in XLA).
+
+    Scans over query blocks; each block sees the full K/V but only a
+    (bq × S) score tile lives at once.  Matches mha_ref to fp32
+    accumulation error.  q (B,Hq,S,D), k/v (B,Hkv,S,D).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    bq = min(block_q, s)
+    while s % bq:
+        bq //= 2
+    n_blocks = s // bq
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # fold group into batch for a single einsum pattern
+    qf = (q.astype(jnp.float32) * scale).reshape(b, hkv, group, s, d)
+    q_blocks = qf.reshape(b, hkv, group, n_blocks, bq, d)
+    q_blocks = jnp.moveaxis(q_blocks, 3, 0)          # (nb, b, hkv, g, bq, d)
+    kpos = jnp.arange(s)
+
+    def one_block(i, qb):
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kf)
+        if causal:
+            qpos = i * bq + jnp.arange(bq)
+            mask = qpos[:, None] >= kpos[None, :]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m = logits.max(-1, keepdims=True)
+        p = jnp.exp(logits - m)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+        return out / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+
+    outs = jax.lax.map(lambda args: one_block(*args),
+                       (jnp.arange(n_blocks), q_blocks))
+    out = jnp.moveaxis(outs, 0, 3)                   # (b,hkv,g,nb,bq,d)
+    return out.reshape(b, hq, s, d).astype(q.dtype)

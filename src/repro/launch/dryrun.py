@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape
+× mesh) cell, print memory/cost analysis, and derive the roofline
+terms.  The two lines above MUST stay first — jax locks the device
+count on first init.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k --mesh pod                              # one cell
+    ... --mesh both --out experiments/dryrun                     # default
+
+Results are cached as JSON per cell; reruns skip completed cells unless
+--force.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import (ARCH_IDS, SHAPES, all_cells, cell_supported,
+                       get_config, input_specs)
+from ..distributed.param_sharding import (batch_shardings, param_shardings,
+                                          replicated)
+from ..models import build_model, make_rules, use_rules
+from ..models.model_zoo import Model
+from ..optim import AdamWConfig, init_opt_state
+from ..roofline.analysis import analyse, summarise
+from ..training import make_serve_step, make_train_step
+from .mesh import make_production_mesh
+
+OUT_DIR = "experiments/dryrun"
+
+
+def _tree_size_bytes(tree: Any) -> int:
+    return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree) if hasattr(l, "shape"))
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, *,
+               microbatch: int | None = None,
+               remat_policy: str = "dots",
+               moments: str = "fp32",
+               sp: bool = True,
+               seq_fallback: bool = False,
+               moe_grouped: bool = False,
+               param_dtype=None,
+               rules_overrides: dict | None = None,
+               serve_params: str = "train",
+               donate: bool = True) -> dict:
+    """Lower + compile one cell; return the dry-run record."""
+    import dataclasses
+    extra = {}
+    if param_dtype is not None:
+        extra["param_dtype"] = param_dtype
+    cfg = dataclasses.replace(get_config(arch_id),
+                              remat_policy=remat_policy,
+                              seq_shard_fallback=seq_fallback,
+                              moe_grouped=moe_grouped, **extra)
+    spec = input_specs(arch_id, shape_name, cfg=cfg)
+    model = build_model(cfg)
+    overrides = dict(rules_overrides or {})
+    if not sp:
+        overrides["seq_sp"] = None
+    rules = make_rules(mesh, overrides)
+    t0 = time.time()
+
+    with use_rules(rules), mesh:
+        params_shape = jax.eval_shape(model.init, jax.random.key(0))
+        p_sh = param_shardings(params_shape, mesh, mode=serve_params)
+
+        if spec.kind == "train":
+            opt_shape = jax.eval_shape(
+                lambda p: init_opt_state(p, moments), params_shape)
+            o_sh = param_shardings(opt_shape, mesh)
+            b_sh = batch_shardings(spec.batch, mesh)
+            opt_cfg = AdamWConfig(moments_dtype=moments)
+            step = make_train_step(model, opt_cfg, microbatch=microbatch)
+            jfn = jax.jit(step,
+                          in_shardings=(p_sh, o_sh, b_sh),
+                          out_shardings=(p_sh, o_sh, None),
+                          donate_argnums=(0, 1) if donate else ())
+            lowered = jfn.lower(params_shape, opt_shape, spec.batch)
+            state_bytes = (_tree_size_bytes(params_shape) +
+                           _tree_size_bytes(opt_shape))
+        elif spec.kind == "prefill":
+            def prefill(params, batch):
+                return model.prefill(params, batch, spec.seq_len)
+            b_sh = batch_shardings(spec.batch, mesh)
+            jfn = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+            lowered = jfn.lower(params_shape, spec.batch)
+            state_bytes = _tree_size_bytes(params_shape)
+        else:  # decode
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(spec.global_batch, spec.seq_len))
+            # cache shardings: lower+compile the (pure-constraint) cache
+            # initialiser and read its output shardings — exercises the
+            # same pattern-constraint logic the serving path uses.
+            cache_init = jax.jit(
+                lambda: model.init_cache(spec.global_batch, spec.seq_len))
+            c_sh = cache_init.lower().compile().output_shardings
+            from jax.sharding import NamedSharding, PartitionSpec
+            c_sh = jax.tree.map(
+                lambda s: s if isinstance(s, NamedSharding) and
+                s.mesh.shape == mesh.shape
+                else NamedSharding(mesh, PartitionSpec()), c_sh,
+                is_leaf=lambda s: hasattr(s, "device_set"))
+            b_sh = batch_shardings(spec.batch, mesh)
+            serve = make_serve_step(model)
+            jfn = jax.jit(serve,
+                          in_shardings=(p_sh, b_sh["token"], c_sh),
+                          out_shardings=(b_sh["token"], c_sh),
+                          donate_argnums=(2,) if donate else ())
+            lowered = jfn.lower(params_shape, spec.batch["token"],
+                                cache_shape)
+            state_bytes = (_tree_size_bytes(params_shape) +
+                           _tree_size_bytes(cache_shape))
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    n_dev = mesh.size
+    # model flops: 6·N_active·D tokens for train (×3 for bwd already in 6ND);
+    # 2·N_active per token forward-only for prefill/decode.
+    n_active = cfg.active_param_count()
+    if spec.kind == "train":
+        tokens = spec.seq_len * spec.global_batch
+        model_flops = 6.0 * n_active * tokens
+    elif spec.kind == "prefill":
+        tokens = spec.seq_len * spec.global_batch
+        model_flops = 2.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * spec.global_batch
+    roof = analyse(cost, hlo, n_devices=n_dev, model_flops=model_flops)
+
+    rec = {
+        "arch": arch_id, "shape": shape_name, "kind": spec.kind,
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "n_devices": n_dev,
+        "seq_len": spec.seq_len, "global_batch": spec.global_batch,
+        "params_total": cfg.param_count(),
+        "params_active": n_active,
+        "state_bytes_global": state_bytes,
+        "state_bytes_per_device": state_bytes // n_dev,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate": mem.argument_size_in_bytes +
+            mem.output_size_in_bytes + mem.temp_size_in_bytes -
+            mem.alias_size_in_bytes,
+        },
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "roofline": roof.to_json(),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    return rec
+
+
+HBM_PER_CHIP = 16 * 2**30      # v5e
+
+
+def run_cells(cells, meshes: list[str], out_dir: str, force: bool,
+              microbatch: int | None = None) -> list[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+        for arch, shape, ok, why in cells:
+            tag = f"{arch}__{shape}__{mesh_name}"
+            path = os.path.join(out_dir, tag + ".json")
+            if not ok:
+                print(f"SKIP {tag}: {why}")
+                continue
+            if os.path.exists(path) and not force:
+                with open(path) as fh:
+                    results.append(json.load(fh))
+                print(f"CACHED {tag}")
+                continue
+            print(f"LOWER {tag} ...", flush=True)
+            try:
+                _, gb, kind = SHAPES[shape]
+                mb = microbatch if kind == "train" else None
+                if mb is None and kind == "train":
+                    mb = 8
+                remat, moments = "dots", "fp32"
+                rec = lower_cell(arch, shape, mesh, microbatch=mb)
+                # memory ladder: (1) more grad accumulation while the
+                # per-chunk batch still divides the FULL dp extent
+                # (pod x data), (2) tighter remat, (3) 8-bit moments.
+                sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+                dp = sizes.get("data", 1) * sizes.get("pod", 1)
+                while (kind == "train"
+                       and rec["memory"]["peak_estimate"] > HBM_PER_CHIP):
+                    if (gb // (mb * 2)) % dp == 0:
+                        mb *= 2
+                    elif remat == "dots":
+                        remat = "nothing"
+                    elif moments == "fp32":
+                        moments = "int8"
+                    else:
+                        break
+                    print(f"  over HBM "
+                          f"({rec['memory']['peak_estimate'] / 2**30:.1f}"
+                          f"GiB); retry microbatch={mb} remat={remat} "
+                          f"moments={moments}", flush=True)
+                    rec = lower_cell(arch, shape, mesh, microbatch=mb,
+                                     remat_policy=remat, moments=moments)
+                rec["microbatch"] = mb
+                rec["remat_policy"] = remat
+                rec["moments"] = moments
+                rec["tag"] = tag
+                with open(path, "w") as fh:
+                    json.dump(rec, fh, indent=1)
+                results.append(rec)
+                r = rec["roofline"]
+                print(f"  OK compile={rec['compile_s']}s "
+                      f"mem/dev={rec['memory']['peak_estimate'] / 2**30:.2f}GiB "
+                      f"compute={r['compute_s'] * 1e3:.1f}ms "
+                      f"mem={r['memory_s'] * 1e3:.1f}ms "
+                      f"coll={r['collective_s'] * 1e3:.1f}ms "
+                      f"-> {r['bottleneck']}", flush=True)
+            except Exception as e:
+                print(f"  FAIL {tag}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+                with open(os.path.join(out_dir, tag + ".FAIL"), "w") as fh:
+                    fh.write(traceback.format_exc())
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + ["all"])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + ["all"])
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "pod2", "both"])
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.arch in (None, "all") and args.shape in (None, "all"):
+        cells = all_cells(include_skipped=True)
+    else:
+        archs = ARCH_IDS if args.arch in (None, "all") else [args.arch]
+        shapes = list(SHAPES) if args.shape in (None, "all") \
+            else [args.shape]
+        cells = []
+        for a in archs:
+            for s in shapes:
+                ok, why = cell_supported(a, s)
+                cells.append((a, s, ok, why))
+    meshes = ["pod", "pod2"] if args.mesh == "both" else [args.mesh]
+    results = run_cells(cells, meshes, args.out, args.force,
+                        microbatch=args.microbatch)
+    print(f"\n{len(results)} cells recorded in {args.out}")
+
+
+if __name__ == "__main__":
+    main()

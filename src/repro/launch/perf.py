@@ -1,0 +1,115 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: re-lowers the three chosen cells with one
+knob flipped per iteration and records before/after JSON pairs in
+experiments/perf/.
+
+    PYTHONPATH=src python -m repro.launch.perf --thread A
+"""
+import argparse
+import json
+
+from .dryrun import lower_cell
+from .mesh import make_production_mesh
+
+OUT = "experiments/perf"
+
+
+def save(rec, name):
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, name + ".json"), "w") as fh:
+        json.dump(rec, fh, indent=1)
+    ro = rec["roofline"]
+    print(f"{name:52s} mem/dev={rec['memory']['peak_estimate'] / 2**30:7.2f}GiB "
+          f"comp={ro['compute_s'] * 1e3:9.1f} mem={ro['memory_s'] * 1e3:9.1f} "
+          f"coll={ro['collective_s'] * 1e3:9.1f} -> {ro['bottleneck']}",
+          flush=True)
+    return rec
+
+
+def thread_a3(mesh):
+    """A3: grouped dispatch + explicit ZeRO-3 gather of expert weights
+    (contract-over-sharded-d otherwise all-reduces full partials)."""
+    base = dict(microbatch=8, remat_policy="nothing")
+    save(lower_cell("qwen3-moe-235b-a22b", "train_4k", mesh,
+                    moe_grouped=True, **base),
+         "A3_qwen3_train_grouped_zero3gather")
+
+
+def thread_b2(mesh):
+    """B2: is the decode collective the seq-sharded (split-K) cache?"""
+    save(lower_cell("granite-34b", "decode_32k", mesh,
+                    rules_overrides={"kv_seq": None}),
+         "B2_g34_decode_no_kvseq")
+
+
+def thread_b3(mesh):
+    """B3: TP-only bf16 weights for serving (no per-layer FSDP weight
+    all-gathers; decode batch can't amortise them)."""
+    import jax.numpy as jnp
+    save(lower_cell("granite-34b", "decode_32k", mesh,
+                    param_dtype=jnp.bfloat16, serve_params="serve"),
+         "B3_g34_decode_tp_only_bf16")
+
+
+def thread_a(mesh):
+    """qwen3-moe train_4k: MoE dispatch collective volume."""
+    base = dict(microbatch=8, remat_policy="nothing")
+    save(lower_cell("qwen3-moe-235b-a22b", "train_4k", mesh, **base),
+         "A0_qwen3_train_flat")
+    save(lower_cell("qwen3-moe-235b-a22b", "train_4k", mesh,
+                    moe_grouped=True, **base),
+         "A1_qwen3_train_grouped")
+    # A2: grouped + no-SP (does SP still pay under grouped dispatch?)
+    save(lower_cell("qwen3-moe-235b-a22b", "train_4k", mesh,
+                    moe_grouped=True, sp=False, **base),
+         "A2_qwen3_train_grouped_nosp")
+
+
+def thread_b(mesh):
+    """granite-34b decode_32k: serving memory floor."""
+    save(lower_cell("granite-34b", "decode_32k", mesh),
+         "B0_g34_decode_fp32params")
+    import jax.numpy as jnp
+    save(lower_cell("granite-34b", "decode_32k", mesh,
+                    param_dtype=jnp.bfloat16),
+         "B1_g34_decode_bf16params")
+
+
+def thread_c(mesh):
+    """llava train_4k: 56 heads don't divide the 16-way TP axis."""
+    base = dict(microbatch=16, remat_policy="nothing")
+    save(lower_cell("llava-next-34b", "train_4k", mesh, **base),
+         "C0_llava_train_replicated_heads")
+    save(lower_cell("llava-next-34b", "train_4k", mesh,
+                    seq_fallback=True, **base),
+         "C1_llava_train_seqshard")
+    # C2: seq-fallback + tighter microbatch
+    save(lower_cell("llava-next-34b", "train_4k", mesh, seq_fallback=True,
+                    microbatch=16, remat_policy="dots"),
+         "C2_llava_train_seqshard_dots")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--thread", default="all",
+                    choices=["A", "A3", "B", "B2", "B3", "C", "all", "round2"])
+    args = ap.parse_args()
+    mesh = make_production_mesh()
+    if args.thread in ("A", "all"):
+        thread_a(mesh)
+    if args.thread in ("B", "all"):
+        thread_b(mesh)
+    if args.thread in ("C", "all"):
+        thread_c(mesh)
+    if args.thread in ("A3", "round2"):
+        thread_a3(mesh)
+    if args.thread in ("B2", "round2"):
+        thread_b2(mesh)
+    if args.thread in ("B3", "round2"):
+        thread_b3(mesh)
+
+
+if __name__ == "__main__":
+    main()

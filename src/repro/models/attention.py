@@ -1,0 +1,154 @@
+"""GQA attention: train/prefill forward + cached decode step.
+
+TP: q heads shard over ``model``; kv heads shard over ``model`` only when
+divisible (granite's kv=1 replicates — the MQA fallback).  The KV cache
+shards (batch -> data, kv_heads -> model when divisible).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention.ops import attention as flash_attention
+from .common import ModelConfig, dense_init, split_keys
+from .layers import apply_rope, rope_freqs
+from .sharding import get_rules
+
+
+def init_attention(key, cfg: ModelConfig, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    hd = cfg.hd
+    ks = split_keys(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, (d, cfg.n_heads, hd), cfg.param_dtype),
+        "wk": dense_init(ks[1], d, (d, cfg.n_kv_heads, hd), cfg.param_dtype),
+        "wv": dense_init(ks[2], d, (d, cfg.n_kv_heads, hd), cfg.param_dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, (cfg.n_heads, hd, d),
+                         cfg.param_dtype),
+    }
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray      # (B, Hkv, S_max, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray  # scalar int32 — tokens filled
+
+
+def _head_axes(r, cfg: ModelConfig, n_heads: int, kind: str):
+    """('batch', seq_axis, head_axis, None) with the context-parallel
+    fallback when heads don't divide the TP extent (cfg flag)."""
+    if cfg.seq_shard_fallback and r.mesh is not None:
+        sizes = dict(zip(r.mesh.axis_names, r.mesh.devices.shape))
+        ext = sizes.get("model", 1)
+        if ext > 1 and n_heads % ext != 0:
+            return ("batch", "seq_sp", None, None)
+    return ("batch", "seq", kind, None)
+
+
+def _qkv(params, x, cfg: ModelConfig, positions):
+    r = get_rules()
+    dt = cfg.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    q = r.constrain(q, *_head_axes(r, cfg, cfg.n_heads, "heads"))
+    k = r.constrain(k, *_head_axes(r, cfg, cfg.n_kv_heads, "kv_heads"))
+    v = r.constrain(v, *_head_axes(r, cfg, cfg.n_kv_heads, "kv_heads"))
+    if cfg.rope_fraction > 0:
+        cos, sin = rope_freqs(cfg.hd, cfg.rope_fraction, cfg.rope_theta,
+                              positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attention_fwd(params, x: jnp.ndarray, cfg: ModelConfig, *,
+                  causal: bool = True,
+                  positions: jnp.ndarray | None = None,
+                  kv_override: tuple | None = None) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill).  x: (B, S, d)."""
+    r = get_rules()
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    if kv_override is None:
+        q, k, v = _qkv(params, x, cfg, positions)
+    else:                       # cross-attention: kv from encoder output
+        dt = cfg.dtype
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+        ctx = kv_override[0]
+        k = jnp.einsum("bsd,dhk->bshk", ctx, params["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", ctx, params["wv"].astype(dt))
+        causal = False
+    # (B, H, S, hd) layout for the kernel
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qh, kh, vh, causal=causal,
+                          use_pallas=cfg.use_flash)
+    out = out.transpose(0, 2, 1, 3)            # (B, S, H, hd)
+    out = r.constrain(out, *_head_axes(r, cfg, cfg.n_heads, "heads"))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cfg.dtype))
+    return r.constrain(y, "batch", "seq", "embed_act")
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               n_layers: int | None = None) -> KVCache:
+    """Stacked-over-layers KV cache pytree (leading dim = layers)."""
+    L = n_layers or cfg.n_layers
+    shape = (L, batch, cfg.n_kv_heads, max_len, cfg.hd)
+    r = get_rules()
+    k = jnp.zeros(shape, cfg.dtype)
+    v = jnp.zeros(shape, cfg.dtype)
+    k = r.constrain(k, "layers", "batch", "kv_heads", "kv_seq", None)
+    v = r.constrain(v, "layers", "batch", "kv_heads", "kv_seq", None)
+    return KVCache(k, v, jnp.zeros((), jnp.int32))
+
+
+def attention_decode(params, x: jnp.ndarray, cache_k: jnp.ndarray,
+                     cache_v: jnp.ndarray, length: jnp.ndarray,
+                     cfg: ModelConfig) -> tuple[jnp.ndarray, jnp.ndarray,
+                                                jnp.ndarray]:
+    """One-token decode.  x: (B, 1, d); cache_k/v: (B, Hkv, S_max, hd).
+
+    Returns (y, new_k, new_v).  Attention runs over the first ``length+1``
+    cache slots via masking (static shapes — serving-friendly).
+    """
+    r = get_rules()
+    b, one, d = x.shape
+    s_max = cache_k.shape[2]
+    # re-pin the cache sharding: scan slicing/reshapes drop constraints
+    # and XLA would otherwise gather the full cache per step.
+    cache_k = r.constrain(cache_k, "batch", "kv_heads", "kv_seq", None)
+    cache_v = r.constrain(cache_v, "batch", "kv_heads", "kv_seq", None)
+    positions = jnp.full((1,), length, dtype=jnp.int32)
+    q, k, v = _qkv(params, x, cfg, positions)
+    # insert new kv at slot `length`
+    kh = k.transpose(0, 2, 1, 3)               # (B, Hkv, 1, hd)
+    vh = v.transpose(0, 2, 1, 3)
+    new_k = jax.lax.dynamic_update_slice(
+        cache_k, kh.astype(cache_k.dtype), (0, 0, length, 0))
+    new_v = jax.lax.dynamic_update_slice(
+        cache_v, vh.astype(cache_v.dtype), (0, 0, length, 0))
+    new_k = r.constrain(new_k, "batch", "kv_heads", "kv_seq", None)
+    new_v = r.constrain(new_v, "batch", "kv_heads", "kv_seq", None)
+    qh = q.transpose(0, 2, 1, 3)               # (B, Hq, 1, hd)
+    group = cfg.n_heads // cfg.n_kv_heads
+    qg = qh.reshape(b, cfg.n_kv_heads, group, cfg.hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.hd, jnp.float32))
+    # NB: never .astype(f32) the cache — XLA hoists the convert out of
+    # the layer loop and materialises the whole cache in fp32.  bf16
+    # inputs + preferred_element_type gives fp32 accumulation instead.
+    logits = jnp.einsum("bhgk,bhsk->bhgs", qg.astype(new_k.dtype), new_k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(s_max)[None, None, None, :] <= length
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsk->bhgk", probs.astype(new_v.dtype), new_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, cfg.n_heads, 1, cfg.hd).transpose(0, 2, 1, 3)
+    out = out.astype(cfg.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cfg.dtype))
+    return r.constrain(y, "batch", None, "embed_act"), new_k, new_v

@@ -1,0 +1,75 @@
+"""Shared layers: norms, rotary embeddings, token embedding, dense."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init
+from .sharding import get_rules
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+# ----------------------------------------------------------------------
+def rope_freqs(head_dim: int, fraction: float, theta: float,
+               positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables (…, rot_dim/2) for given positions (any shape)."""
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x (..., S, H, D); cos/sin (..., S, rot/2) -> rotated x.
+
+    Partial rotary: only the first ``2*cos.shape[-1]`` dims rotate
+    (chatglm-style 2-d / half rope), the rest pass through.
+    """
+    rot = 2 * cos.shape[-1]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    # broadcast cos/sin over the head axis: (..., S, 1, rot/2)
+    c = cos[..., :, None, :].astype(jnp.float32)
+    s = sin[..., :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = x1f * c - x2f * s
+    o2 = x2f * c + x1f * s
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if xp.shape[-1] else out
+
+
+# ----------------------------------------------------------------------
+def init_embedding(key, cfg: ModelConfig):
+    return dense_init(key, cfg.d_model, (cfg.vocab, cfg.d_model),
+                      cfg.param_dtype)
+
+
+def embed_tokens(table: jnp.ndarray, tokens: jnp.ndarray, dtype
+                 ) -> jnp.ndarray:
+    r = get_rules()
+    out = jnp.take(table.astype(dtype), tokens, axis=0)
+    return r.constrain(out, "batch", "seq", "embed_act")
+
+
+def unembed(table: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, d) -> (B, S, vocab) logits, fp32."""
+    r = get_rules()
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    return r.constrain(logits, "batch", "seq", "vocab_act")

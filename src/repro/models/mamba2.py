@@ -1,0 +1,154 @@
+"""Mamba-2 block (SSD) — used standalone and inside the Zamba2 hybrid.
+
+Structure per block (Mamba-2 paper, arXiv:2405.21060):
+  in_proj -> [z | x | B | C | dt] ; causal conv1d on [x|B|C] ; SiLU;
+  SSD over heads (state N, head dim P); +D·x skip; RMSNorm; gate by
+  SiLU(z); out_proj.
+
+Group count G=1 (B/C shared across heads).  Decode keeps a (conv
+window, SSD state) cache per layer.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, split_keys
+from .layers import rms_norm
+from .sharding import get_rules
+from .ssd import chunked_linear_scan, linear_scan_step
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = cfg.ssm_heads or max(1, d_inner // 64)
+    p = d_inner // n_heads
+    n = cfg.ssm_state
+    return d_inner, n_heads, p, n
+
+
+def init_mamba_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, h, p, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n           # x, B, C all convolved (G=1)
+    ks = split_keys(key, 6)
+    dt_bias = jnp.log(jnp.expm1(
+        jnp.linspace(1e-3, 0.1, h, dtype=jnp.float32)))  # softplus⁻¹ init
+    return {
+        "ln": jnp.ones((d,), cfg.param_dtype),
+        "w_in": dense_init(ks[0], d,
+                           (d, 2 * d_inner + 2 * n + h), cfg.param_dtype),
+        "conv_w": dense_init(ks[1], cfg.conv_width,
+                             (cfg.conv_width, conv_dim), cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "A_log": jnp.zeros((h,), jnp.float32) +
+        jnp.log(jnp.linspace(1.0, 16.0, h)),
+        "dt_bias": dt_bias,
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((d_inner,), cfg.param_dtype),
+        "w_out": dense_init(ks[2], d_inner, (d_inner, d), cfg.param_dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv along seq.  x (B, S, C), w (W, C)."""
+    width = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = prev.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out + b[None, None, :]
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray     # (B, W-1, conv_dim) rolling window
+    ssd: jnp.ndarray      # (B, H, N, P) state
+
+
+def mamba_fwd(params, x: jnp.ndarray, cfg: ModelConfig, *,
+              chunk: int = 64) -> jnp.ndarray:
+    """(B, S, d) -> (B, S, d), full-sequence (train / prefill)."""
+    r = get_rules()
+    b, s, d = x.shape
+    d_inner, h, p, n = _dims(cfg)
+    dt_ = cfg.dtype
+    hx = rms_norm(x, params["ln"].astype(dt_), cfg.norm_eps)
+    proj = jnp.einsum("bsd,dk->bsk", hx, params["w_in"].astype(dt_))
+    z, xs, bc, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"].astype(dt_),
+                            params["conv_b"].astype(dt_))
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(dt_)
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :])   # (B,S,H)
+    a = -jnp.exp(params["A_log"])[None, None, :]             # (H,) < 0
+    log_decay = a * dt                                       # (B,S,H)
+
+    xh = xs.reshape(b, s, h, p)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    kq_b = jnp.broadcast_to(bmat[:, :, None, :], (b, s, h, n))
+    kq_c = jnp.broadcast_to(cmat[:, :, None, :], (b, s, h, n))
+    xdt = r.constrain(xdt, "batch", None, "heads", None)
+
+    y, _ = chunked_linear_scan(kq_c, kq_b, xdt, log_decay, chunk=chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(dt_)
+    y = rms_norm(y, params["norm"].astype(dt_), cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    out = jnp.einsum("bsk,kd->bsd", y, params["w_out"].astype(dt_))
+    return r.constrain(out, "batch", "seq", "embed_act")
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> MambaCache:
+    d_inner, h, p, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), cfg.dtype),
+        ssd=jnp.zeros((batch, h, n, p), jnp.float32))
+
+
+def mamba_step(params, x: jnp.ndarray, cache: MambaCache, cfg: ModelConfig
+               ) -> tuple[jnp.ndarray, MambaCache]:
+    """Single-token decode.  x (B, 1, d) -> (B, 1, d)."""
+    b, _, d = x.shape
+    d_inner, h, p, n = _dims(cfg)
+    dt_ = cfg.dtype
+    hx = rms_norm(x, params["ln"].astype(dt_), cfg.norm_eps)
+    proj = jnp.einsum("bsd,dk->bsk", hx, params["w_in"].astype(dt_))
+    z, xs, bc, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)        # (B, 1, conv_dim)
+    window = jnp.concatenate([cache.conv, conv_in], axis=1)
+    w = params["conv_w"].astype(dt_)
+    conv_out = jnp.sum(window * w[None], axis=1, keepdims=True) + \
+        params["conv_b"].astype(dt_)[None, None, :]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(dt_)
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) +
+                         params["dt_bias"][None, :])       # (B, H)
+    a = -jnp.exp(params["A_log"])[None, :]
+    log_decay = a * dt
+    xh = xs[:, 0].reshape(b, h, p)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    kb = jnp.broadcast_to(bmat[:, 0, None, :], (b, h, n))
+    kc = jnp.broadcast_to(cmat[:, 0, None, :], (b, h, n))
+    y, ssd_new = linear_scan_step(kc, kb, xdt, log_decay, cache.ssd)
+    y = y + params["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, d_inner).astype(dt_)
+    y = rms_norm(y, params["norm"].astype(dt_), cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    out = jnp.einsum("bsk,kd->bsd", y, params["w_out"].astype(dt_))
+    new_cache = MambaCache(conv=window[:, 1:].astype(cfg.dtype),
+                           ssd=ssd_new)
+    return out, new_cache

@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU (llama-family default) and GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, split_keys
+from .sharding import get_rules
+
+
+def init_mlp(key, d_model: int, d_ff: int, param_dtype, gated: bool = True):
+    ks = split_keys(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], d_model, (d_model, d_ff), param_dtype),
+        "w_down": dense_init(ks[1], d_ff, (d_ff, d_model), param_dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, (d_model, d_ff),
+                                 param_dtype)
+    return p
+
+
+def mlp_fwd(params, x: jnp.ndarray, dtype, activation: str = "silu"
+            ) -> jnp.ndarray:
+    """x (..., d) -> (..., d); SwiGLU when w_gate present, else GELU."""
+    r = get_rules()
+    lead = ("batch", "seq") if x.ndim == 3 else ("batch",) * (x.ndim - 1)
+    up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dtype))
+    up = r.constrain(up, *lead, "ffn_act")
+    if "w_gate" in params:
+        gate = jnp.einsum("...d,df->...f", x,
+                          params["w_gate"].astype(dtype))
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(dtype) * up
+    else:
+        if activation == "gelu":
+            act = jax.nn.gelu(up.astype(jnp.float32)).astype(dtype)
+        else:
+            act = jax.nn.silu(up.astype(jnp.float32)).astype(dtype)
+    out = jnp.einsum("...f,fd->...d", act, params["w_down"].astype(dtype))
+    return r.constrain(out, *lead, "embed_act")

@@ -1,0 +1,14 @@
+"""Remat policy selection (ModelConfig.remat_policy).
+
+'dots'    — save dot outputs without batch dims (recompute elementwise):
+            fastest backward, highest activation memory.
+'nothing' — save only the scan carries (recompute the whole layer in
+            backward): ~1.3x compute for the memory-tightest footprint.
+"""
+import jax
+
+
+def _remat_policy(cfg):
+    if cfg.remat_policy == "nothing":
+        return jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint_policies.dots_with_no_batch_dims_saveable

@@ -1,0 +1,187 @@
+"""Logical-axis sharding for the LM substrate, built on core patterns.
+
+The Savu insight — "data declares patterns; the framework derives
+placement" — applied to model tensors: every weight/activation carries
+*logical axes* (('batch','seq','embed'), ('embed','ffn'), …) and a rules
+table maps logical axes -> mesh axes.  This module is the LM analogue of
+Pattern.to_pspec and the single source of sharding truth for the zoo.
+
+Divisibility-aware: a logical axis only binds to a mesh axis when the
+dimension divides the axis size (e.g. granite's single KV head never
+shards over a 16-way model axis; it silently replicates instead, the
+standard MQA fallback).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# default rules: logical axis -> preferred mesh axis (None = replicate)
+DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
+    # activations
+    "batch": ("pod", "data"),       # dp over pod×data jointly
+    "seq": None,                    # sharded only in CP mode (see below)
+    "seq_cp": "data",               # context-parallel prefill
+    "seq_sp": "model",              # sequence-parallel residual stream
+    #   (Korthikanti-style SP: the layer-scan carry/residual is sharded
+    #   over the TP axis along seq; attention/mlp re-gather per shard.
+    #   Auto-disabled for seq==1 (decode) by the divisibility gate.)
+    "embed_act": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "kv_seq": "model",              # cache seq dim: takes `model` when
+    #   the kv-head dim can't (MQA/GQA with few heads) — split-K decode
+    "ffn_act": "model",
+    "vocab_act": "model",
+    "expert_act": ("pod", "model"),
+    # weights (2-D sharded: fsdp over data, tp over model)
+    "embed": "data",                # fsdp shard of d_model weight dim
+    "ffn": "model",
+    "kv_embed": None,
+    "vocab": "model",
+    "expert": ("pod", "model"),     # expert parallelism
+    "expert_ffn": None,
+    "layers": None,                 # stacked-layer leading dim
+    "state": None,                  # ssm / recurrent state dims
+    "conv": None,
+    "frames": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh | None
+    rules: dict[str, str | tuple[str, ...] | None]
+
+    def spec(self, *logical_axes: str | None) -> PartitionSpec:
+        """PartitionSpec for a tensor with the given logical axes.
+
+        Each mesh axis may be used at most once per spec (XLA rule); later
+        duplicates replicate instead.
+        """
+        used: set[str] = set()
+        out = []
+        for ax in logical_axes:
+            m = self.rules.get(ax) if ax else None
+            if m is None:
+                out.append(None)
+                continue
+            cands = (m,) if isinstance(m, str) else tuple(m)
+            cands = tuple(c for c in cands
+                          if self.mesh is None or c in self.mesh.axis_names)
+            cands = tuple(c for c in cands if c not in used)
+            if not cands:
+                out.append(None)
+            elif len(cands) == 1:
+                used.add(cands[0])
+                out.append(cands[0])
+            else:
+                used.update(cands)
+                out.append(cands)
+        return PartitionSpec(*out)
+
+    def divisible_spec(self, shape: Sequence[int],
+                       *logical_axes: str | None) -> PartitionSpec:
+        """Allocation-aware spec: walk the dims in order, binding each
+        logical axis's mesh axis only when (a) still unused and (b) the
+        dim divides the axis extent.  A later dim can therefore pick up
+        a mesh axis an earlier dim had to decline (e.g. the KV-cache seq
+        dim takes ``model`` when kv_heads isn't divisible — MQA)."""
+        if self.mesh is None:
+            return self.spec(*logical_axes)
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        used: set[str] = set()
+        out: list = []
+        padded = tuple(logical_axes) + (None,) * (len(shape) -
+                                                  len(logical_axes))
+        for dim, ax in zip(shape, padded):
+            m = self.rules.get(ax) if ax else None
+            if m is None:
+                out.append(None)
+                continue
+            cands = (m,) if isinstance(m, str) else tuple(m)
+            cands = tuple(c for c in cands if c in self.mesh.axis_names
+                          and c not in used)
+            # try the full compound binding first, then single axes
+            bound = None
+            if len(cands) > 1:
+                extent = 1
+                for c in cands:
+                    extent *= sizes[c]
+                if dim % extent == 0:
+                    bound = cands
+            if bound is None:
+                for c in cands:
+                    if dim % sizes[c] == 0 and sizes[c] > 1:
+                        bound = c
+                        break
+            if bound is None:
+                out.append(None)
+            else:
+                out.append(bound)
+                used.update((bound,) if isinstance(bound, str) else bound)
+        return PartitionSpec(*out)
+
+    def sharding(self, shape: Sequence[int], *logical_axes: str | None
+                 ) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.divisible_spec(shape,
+                                                            *logical_axes))
+
+    def constrain(self, x: jax.Array, *logical_axes: str | None) -> jax.Array:
+        """with_sharding_constraint when a mesh is active; no-op otherwise."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh,
+                             self.divisible_spec(x.shape, *logical_axes)))
+
+
+def make_rules(mesh: Mesh | None = None,
+               overrides: Mapping[str, str | tuple[str, ...] | None] | None
+               = None) -> ShardingRules:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    return ShardingRules(mesh, rules)
+
+
+# A module-level "current rules" the model code reads; the launcher sets
+# it under the production mesh, tests leave it at no-mesh (no-op).
+_CURRENT = make_rules(None)
+
+
+def set_rules(rules: ShardingRules) -> None:
+    global _CURRENT
+    _CURRENT = rules
+
+
+def get_rules() -> ShardingRules:
+    return _CURRENT
+
+
+def sp_residual(x):
+    """Sequence-parallel constraint for the residual stream / scan carry
+    (B, S, d): batch->data, seq->model.  The saved per-layer carries are
+    the dominant training-memory term; SP divides them by the TP size."""
+    return get_rules().constrain(x, "batch", "seq_sp", "embed_act")
+
+
+class use_rules:
+    """Context manager: with use_rules(make_rules(mesh)): ..."""
+
+    def __init__(self, rules: ShardingRules):
+        self.rules = rules
+
+    def __enter__(self):
+        self.prev = get_rules()
+        set_rules(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        set_rules(self.prev)
+        return False

@@ -1,0 +1,121 @@
+"""Chunked linear-recurrence engine (Mamba-2 "SSD" form).
+
+One engine serves both SSM families in the zoo:
+
+  * Mamba2 / SSD:   h_t = exp(a_t)·h_{t-1} + B_t xᵀ_t ;  y_t = C_t h_t
+  * mLSTM (xLSTM):  C_t = f_t·C_{t-1} + i_t·k_t vᵀ_t ;   h_t = C_t q_t
+                     (q→C, k→B, i_t folded into v, log f_t → a_t)
+
+with per-(step, head) scalar log-decay ``a_t``.  The sequence is split
+into chunks of Q steps: the intra-chunk part is a masked quadratic
+attention (MXU-friendly), the inter-chunk part is a tiny scan over
+chunk states (B, H, N, P).  This is the standard quadratic↔recurrent
+duality trade: O(S·Q) FLOPs instead of a length-S sequential scan.
+
+All math in fp32 (long products of exponentials are precision-
+sensitive); inputs are cast in, outputs cast back by callers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """(..., Q) log-decays -> (..., Q, Q) lower-tri cumulative sums.
+
+    out[t, s] = Σ_{r=s+1..t} a_r  for t >= s, -inf above the diagonal.
+    """
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def chunked_linear_scan(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        log_a: jnp.ndarray, *, chunk: int = 64,
+                        h0: jnp.ndarray | None = None
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute y_t = q_t · h_t with h_t = exp(a_t) h_{t-1} + k_t vᵀ_t.
+
+    q, k: (B, S, H, N); v: (B, S, H, P); log_a: (B, S, H).
+    Returns (y (B, S, H, P), h_final (B, H, N, P)).
+    S must be a multiple of ``chunk``.
+    """
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    chunk = max(1, chunk)
+    c = s // chunk
+    qc = q.reshape(b, c, chunk, h, n).astype(jnp.float32)
+    kc = k.reshape(b, c, chunk, h, n).astype(jnp.float32)
+    vc = v.reshape(b, c, chunk, h, p).astype(jnp.float32)
+    ac = log_a.reshape(b, c, chunk, h).astype(jnp.float32)
+
+    # --- intra-chunk (quadratic, masked by decay kernel) ---------------
+    seg = segsum(ac.transpose(0, 1, 3, 2))           # (b, c, h, Q, Q)
+    L = jnp.exp(seg)
+    scores = jnp.einsum("bcthn,bcshn->bchts", qc, kc)
+    y_diag = jnp.einsum("bchts,bchts,bcshp->bcthp",
+                        scores, L, vc)
+
+    # --- chunk summaries ------------------------------------------------
+    a_cum = jnp.cumsum(ac, axis=2)                   # (b, c, Q, h)
+    a_tot = a_cum[:, :, -1:, :]                      # (b, c, 1, h)
+    decay_to_end = jnp.exp(a_tot - a_cum)            # (b, c, Q, h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp",
+                        kc, decay_to_end, vc)        # per-chunk new state
+
+    # --- inter-chunk recurrence over c (tiny scan) ----------------------
+    a_chunk = jnp.exp(a_tot[:, :, 0, :])             # (b, c, h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(hprev, inp):
+        a_c, s_c = inp                               # (b, h), (b, h, n, p)
+        hnew = hprev * a_c[..., None, None] + s_c
+        return hnew, hprev                           # emit state *before*
+
+    a_sw = jnp.moveaxis(a_chunk, 1, 0)               # (c, b, h)
+    s_sw = jnp.moveaxis(states, 1, 0)                # (c, b, h, n, p)
+    h_final, h_prevs = jax.lax.scan(step, h0.astype(jnp.float32),
+                                    (a_sw, s_sw))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)            # (b, c, h, n, p)
+
+    # --- inter-chunk contribution ---------------------------------------
+    decay_from_start = jnp.exp(a_cum)                # (b, c, Q, h)
+    y_off = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp",
+                       qc, decay_from_start, h_prevs)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, h_final
+
+
+def linear_scan_step(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     log_a: jnp.ndarray, h: jnp.ndarray
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step.  q/k (B, H, N), v (B, H, P), log_a (B, H),
+    h (B, H, N, P) -> (y (B, H, P), h_new)."""
+    hf = h.astype(jnp.float32)
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    h_new = hf * a + jnp.einsum("bhn,bhp->bhnp", k.astype(jnp.float32),
+                                v.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), h_new)
+    return y, h_new
+
+
+def reference_scan(q, k, v, log_a, h0=None):
+    """Naive sequential oracle for tests (fp32)."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    hst = (jnp.zeros((b, h, n, p), jnp.float32) if h0 is None
+           else h0.astype(jnp.float32))
+    ys = []
+    for t in range(s):
+        y, hst = linear_scan_step(q[:, t], k[:, t], v[:, t], log_a[:, t],
+                                  hst)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), hst

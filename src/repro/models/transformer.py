@@ -1,0 +1,222 @@
+"""Decoder-only transformer LM (dense + MoE variants).
+
+Layer stacking: parameters carry a leading ``layers`` dim and the
+forward pass is a single ``lax.scan`` over it — compile time and HLO
+size are O(1) in depth (essential for the 88/94-layer dry-runs).
+MoE interleaving (llama4's alternate dense/MoE) is expressed by
+scanning over *groups* of ``moe_every`` layers so the stacked params
+stay homogeneous within each scan.
+
+Remat: each scan step is wrapped in jax.checkpoint with a
+dots-saveable policy so the backward pass recomputes cheap elementwise
+work but keeps matmul outputs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import _qkv, attention_decode, attention_fwd, init_attention
+from .common import ModelConfig, split_keys
+from .kernels_glue import flash_attention
+from .layers import embed_tokens, init_embedding, rms_norm, unembed
+from .mlp import init_mlp, mlp_fwd
+from .moe import init_moe, moe_fwd
+from .remat import _remat_policy
+from .sharding import get_rules, sp_residual
+
+
+# ----------------------------------------------------------------------
+def _group_structure(cfg: ModelConfig) -> tuple[int, list[str]]:
+    """(n_groups, sublayer kinds per group).  kinds: 'dense' | 'moe'."""
+    if not cfg.is_moe or cfg.moe_every == 0:
+        return cfg.n_layers, ["dense"]
+    g = cfg.moe_every
+    assert cfg.n_layers % g == 0, (cfg.n_layers, g)
+    kinds = ["dense"] * (g - 1) + ["moe"]
+    return cfg.n_layers // g, kinds
+
+
+def _init_group(key, cfg: ModelConfig):
+    _, kinds = _group_structure(cfg)
+    ks = split_keys(key, len(kinds))
+    subs = []
+    for kk, kind in zip(ks, kinds):
+        k1, k2 = split_keys(kk, 2)
+        sub = {
+            "ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "attn": init_attention(k1, cfg),
+            "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        }
+        if kind == "moe":
+            sub["moe"] = init_moe(k2, cfg)
+        else:
+            sub["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff,
+                                  cfg.param_dtype)
+        subs.append(sub)
+    return tuple(subs)
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    n_groups, _ = _group_structure(cfg)
+    k_emb, k_layers, k_out = split_keys(key, 3)
+    layer_keys = jax.random.split(k_layers, n_groups)
+    layers = jax.vmap(lambda k: _init_group(k, cfg))(layer_keys)
+    params = {
+        "embed": init_embedding(k_emb, cfg),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(k_out, cfg)
+    return params
+
+
+# ----------------------------------------------------------------------
+def _ffn(sub: dict, x: jnp.ndarray, cfg: ModelConfig, kind: str
+         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    h = rms_norm(x, sub["ln2"].astype(cfg.dtype), cfg.norm_eps)
+    if kind == "moe":
+        y, aux = moe_fwd(sub["moe"], h, cfg)
+    else:
+        y, aux = mlp_fwd(sub["mlp"], h, cfg.dtype), jnp.zeros((),
+                                                              jnp.float32)
+    return x + y, aux
+
+
+def lm_forward(params: dict, cfg: ModelConfig, *,
+               tokens: jnp.ndarray | None = None,
+               embeds: jnp.ndarray | None = None
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (logits (B, S, vocab) fp32, aux_loss scalar)."""
+    if embeds is None:
+        x = embed_tokens(params["embed"], tokens, cfg.dtype)
+    else:
+        x = embeds.astype(cfg.dtype)
+    b, s, d = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    _, kinds = _group_structure(cfg)
+
+    def body(x, group):
+        aux = jnp.zeros((), jnp.float32)
+        for sub, kind in zip(group, kinds):
+            h = rms_norm(x, sub["ln1"].astype(cfg.dtype), cfg.norm_eps)
+            x = sp_residual(
+                x + attention_fwd(sub["attn"], h, cfg,
+                                  positions=positions))
+            x, a = _ffn(sub, x, cfg, kind)
+            x = sp_residual(x)
+            aux = aux + a
+        return x, aux
+
+    step = body
+    if cfg.remat:
+        step = jax.checkpoint(body, policy=_remat_policy(cfg))
+    x, auxs = jax.lax.scan(step, x, params["layers"])
+    x = rms_norm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    return unembed(table, x), jnp.sum(auxs)
+
+
+# ----------------------------------------------------------------------
+# Serving: prefill + single-token decode with stacked KV caches.
+def lm_prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+               max_len: int | None = None) -> tuple[jnp.ndarray, dict]:
+    """Run the prompt, return (last-position logits, cache pytree).
+
+    The cache holds exactly the prompt K/V (padded to ``max_len`` slots
+    when given) with layout (L, B, Hkv, S, hd), sharded batch->data.
+    """
+    x = embed_tokens(params["embed"], tokens, cfg.dtype)
+    return _prefill_from_embeds(params, cfg, x, max_len)
+
+
+def lm_prefill_embeds(params: dict, cfg: ModelConfig, embeds: jnp.ndarray,
+                      max_len: int | None = None
+                      ) -> tuple[jnp.ndarray, dict]:
+    """Prefill from precomputed embeddings (VLM patch+token prompts)."""
+    return _prefill_from_embeds(params, cfg, embeds.astype(cfg.dtype),
+                                max_len)
+
+
+def _prefill_from_embeds(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                         max_len: int | None = None
+                         ) -> tuple[jnp.ndarray, dict]:
+    r = get_rules()
+    b, s, _ = x.shape
+    max_len = max_len or s
+    pad = max_len - s
+    positions = jnp.arange(s, dtype=jnp.int32)
+    _, kinds = _group_structure(cfg)
+
+    def body(x, group):
+        ks, vs = [], []
+        for sub, kind in zip(group, kinds):
+            h = rms_norm(x, sub["ln1"].astype(cfg.dtype), cfg.norm_eps)
+            q, k, v = _qkv(sub["attn"], h, cfg, positions)
+            qh, kh, vh = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+            o = flash_attention(qh, kh, vh, causal=True,
+                                use_pallas=cfg.use_flash)
+            o = o.transpose(0, 2, 1, 3)
+            y = jnp.einsum("bshk,hkd->bsd", o,
+                           sub["attn"]["wo"].astype(cfg.dtype))
+            x = sp_residual(x + y)
+            x, _ = _ffn(sub, x, cfg, kind)
+            x = sp_residual(x)
+            ks.append(jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0))))
+            vs.append(jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    step = body
+    if cfg.remat:
+        step = jax.checkpoint(body, policy=_remat_policy(cfg))
+    x, (k_all, v_all) = jax.lax.scan(step, x, params["layers"])
+    k_all = k_all.reshape((-1,) + k_all.shape[2:])
+    v_all = v_all.reshape((-1,) + v_all.shape[2:])
+    k_all = r.constrain(k_all, "layers", "batch", "kv_heads", "kv_seq", None)
+    v_all = r.constrain(v_all, "layers", "batch", "kv_heads", "kv_seq", None)
+    x = rms_norm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    logits = unembed(table, x[:, -1:, :])
+    return logits, {"k": k_all, "v": v_all,
+                    "length": jnp.asarray(s, jnp.int32)}
+
+
+def lm_decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
+                   cache: dict) -> tuple[jnp.ndarray, dict]:
+    """token (B, 1) int32 -> (logits (B, 1, vocab), updated cache)."""
+    r = get_rules()
+    x = embed_tokens(params["embed"], token, cfg.dtype)
+    length = cache["length"]
+    n_groups, kinds = _group_structure(cfg)
+    g = len(kinds)
+    ck = cache["k"].reshape((n_groups, g) + cache["k"].shape[1:])
+    cv = cache["v"].reshape((n_groups, g) + cache["v"].shape[1:])
+    ck = r.constrain(ck, None, None, "batch", "kv_heads", "kv_seq", None)
+    cv = r.constrain(cv, None, None, "batch", "kv_heads", "kv_seq", None)
+
+    def body(x, inp):
+        group, k_g, v_g = inp
+        new_ks, new_vs = [], []
+        for i, kind in enumerate(kinds):
+            sub = group[i]
+            h = rms_norm(x, sub["ln1"].astype(cfg.dtype), cfg.norm_eps)
+            y, nk, nv = attention_decode(sub["attn"], h, k_g[i], v_g[i],
+                                         length, cfg)
+            x = x + y
+            x, _ = _ffn(sub, x, cfg, kind)
+            new_ks.append(nk)
+            new_vs.append(nv)
+        return x, (jnp.stack(new_ks), jnp.stack(new_vs))
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], ck, cv))
+    nk = nk.reshape(cache["k"].shape)
+    nv = nv.reshape(cache["v"].shape)
+    nk = r.constrain(nk, "layers", "batch", "kv_heads", "kv_seq", None)
+    nv = r.constrain(nv, "layers", "batch", "kv_heads", "kv_seq", None)
+    x = rms_norm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    logits = unembed(table, x)
+    return logits, {"k": nk, "v": nv, "length": length + 1}

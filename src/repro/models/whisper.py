@@ -1,0 +1,216 @@
+"""Whisper-style encoder–decoder backbone (arXiv:2212.04356).
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs()``
+feeds precomputed frame embeddings (B, T, d_model) straight into the
+encoder.  Encoder layers are bidirectional attention + GELU MLP;
+decoder layers add cross-attention into the encoded audio.  Sinusoidal
+positions (no rope), pre-LayerNorm.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .attention import _qkv, attention_decode, attention_fwd, init_attention
+from .common import ModelConfig, dense_init, split_keys
+from .layers import embed_tokens, init_embedding, layer_norm, unembed
+from .mlp import init_mlp, mlp_fwd
+from .remat import _remat_policy
+from .sharding import get_rules, sp_residual
+
+
+def _sinusoids(length: int, d: int) -> np.ndarray:
+    t = np.arange(length)[:, None]
+    inv = np.exp(-np.log(10000.0) * np.arange(0, d, 2) / d)
+    ang = t * inv[None]
+    out = np.zeros((length, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+def _init_ln(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def _ln(x, p, eps, dtype):
+    return layer_norm(x, p["scale"].astype(dtype), p["bias"].astype(dtype),
+                      eps)
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    k1, k2 = split_keys(key, 2)
+    return {
+        "ln1": _init_ln(cfg.d_model, cfg.param_dtype),
+        "attn": init_attention(k1, cfg),
+        "ln2": _init_ln(cfg.d_model, cfg.param_dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype,
+                        gated=False),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "ln1": _init_ln(cfg.d_model, cfg.param_dtype),
+        "attn": init_attention(k1, cfg),
+        "ln_x": _init_ln(cfg.d_model, cfg.param_dtype),
+        "xattn": init_attention(k2, cfg),
+        "ln2": _init_ln(cfg.d_model, cfg.param_dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.param_dtype,
+                        gated=False),
+    }
+
+
+def init_whisper(key, cfg: ModelConfig) -> dict:
+    ks = split_keys(key, 4)
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    enc_keys = jax.random.split(ks[0], n_enc)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_ln_f": _init_ln(cfg.d_model, cfg.param_dtype),
+        "dec_ln_f": _init_ln(cfg.d_model, cfg.param_dtype),
+        "embed": init_embedding(ks[2], cfg),
+    }
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jnp.ndarray
+           ) -> jnp.ndarray:
+    """frames (B, T, d) -> encoded (B, T, d)."""
+    dt = cfg.dtype
+    b, t, d = frames.shape
+    pos = jnp.asarray(_sinusoids(t, d), dt)
+    x = frames.astype(dt) + pos[None]
+
+    def body(x, layer):
+        h = _ln(x, layer["ln1"], cfg.norm_eps, dt)
+        x = sp_residual(x + attention_fwd(layer["attn"], h, cfg,
+                                          causal=False))
+        h = _ln(x, layer["ln2"], cfg.norm_eps, dt)
+        x = sp_residual(x + mlp_fwd(layer["mlp"], h, dt,
+                                    activation="gelu"))
+        return x, None
+
+    step = body
+    if cfg.remat:
+        step = jax.checkpoint(body, policy=_remat_policy(cfg))
+    x, _ = jax.lax.scan(step, x, params["enc_layers"])
+    return _ln(x, params["enc_ln_f"], cfg.norm_eps, dt)
+
+
+def whisper_forward(params: dict, cfg: ModelConfig, *,
+                    frames: jnp.ndarray, tokens: jnp.ndarray
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    dt = cfg.dtype
+    ctx = encode(params, cfg, frames)
+    x = embed_tokens(params["embed"], tokens, dt)
+    b, s, d = x.shape
+    x = x + jnp.asarray(_sinusoids(s, d), dt)[None]
+
+    def body(x, layer):
+        h = _ln(x, layer["ln1"], cfg.norm_eps, dt)
+        x = sp_residual(x + attention_fwd(layer["attn"], h, cfg,
+                                          causal=True))
+        h = _ln(x, layer["ln_x"], cfg.norm_eps, dt)
+        x = sp_residual(x + attention_fwd(layer["xattn"], h, cfg,
+                                          kv_override=(ctx,)))
+        h = _ln(x, layer["ln2"], cfg.norm_eps, dt)
+        x = sp_residual(x + mlp_fwd(layer["mlp"], h, dt,
+                                    activation="gelu"))
+        return x, None
+
+    step = body
+    if cfg.remat:
+        step = jax.checkpoint(body, policy=_remat_policy(cfg))
+    x, _ = jax.lax.scan(step, x, params["dec_layers"])
+    x = _ln(x, params["dec_ln_f"], cfg.norm_eps, dt)
+    return unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+# ----------------------------------------------------------------------
+def whisper_prefill(params: dict, cfg: ModelConfig, frames: jnp.ndarray,
+                    tokens: jnp.ndarray, max_len: int
+                    ) -> tuple[jnp.ndarray, dict]:
+    """Encode audio + run prompt tokens; build self- and cross-KV caches."""
+    r = get_rules()
+    dt = cfg.dtype
+    ctx = encode(params, cfg, frames)
+    x = embed_tokens(params["embed"], tokens, dt)
+    b, s, d = x.shape
+    x = x + jnp.asarray(_sinusoids(s, d), dt)[None]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    pad = max_len - s
+
+    def body(x, layer):
+        h = _ln(x, layer["ln1"], cfg.norm_eps, dt)
+        q, k, v = _qkv(layer["attn"], h, cfg, positions)
+        x = x + attention_fwd(layer["attn"], h, cfg, causal=True)
+        h = _ln(x, layer["ln_x"], cfg.norm_eps, dt)
+        xk = jnp.einsum("bsd,dhk->bshk", ctx,
+                        layer["xattn"]["wk"].astype(dt))
+        xv = jnp.einsum("bsd,dhk->bshk", ctx,
+                        layer["xattn"]["wv"].astype(dt))
+        x = x + attention_fwd(layer["xattn"], h, cfg, kv_override=(ctx,))
+        h = _ln(x, layer["ln2"], cfg.norm_eps, dt)
+        x = x + mlp_fwd(layer["mlp"], h, dt, activation="gelu")
+        kc = jnp.pad(k.transpose(0, 2, 1, 3),
+                     ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(v.transpose(0, 2, 1, 3),
+                     ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return x, (kc, vc, xk.transpose(0, 2, 1, 3),
+                   xv.transpose(0, 2, 1, 3))
+
+    x, (k_all, v_all, xk_all, xv_all) = jax.lax.scan(
+        body, x, params["dec_layers"])
+    x = _ln(x, params["dec_ln_f"], cfg.norm_eps, dt)
+    logits = unembed(params["embed"], x[:, -1:, :])
+    cache = {"k": k_all, "v": v_all, "xk": xk_all, "xv": xv_all,
+             "length": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def whisper_decode_step(params: dict, cfg: ModelConfig,
+                        token: jnp.ndarray, cache: dict
+                        ) -> tuple[jnp.ndarray, dict]:
+    dt = cfg.dtype
+    length = cache["length"]
+    x = embed_tokens(params["embed"], token, dt)
+    b, _, d = x.shape
+    pos_table = jnp.asarray(_sinusoids(cache["k"].shape[3], d), dt)
+    x = x + jax.lax.dynamic_slice_in_dim(pos_table, length, 1, 0)[None]
+
+    def body(x, inp):
+        layer, ck, cv, xk, xv = inp
+        h = _ln(x, layer["ln1"], cfg.norm_eps, dt)
+        y, nk, nv = attention_decode(layer["attn"], h, ck, cv, length, cfg)
+        x = x + y
+        h = _ln(x, layer["ln_x"], cfg.norm_eps, dt)
+        # cross-attention: full (non-causal) attention over encoder kv
+        q = jnp.einsum("bsd,dhk->bshk", h,
+                       layer["xattn"]["wq"].astype(dt)).transpose(0, 2, 1, 3)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.hd, jnp.float32))
+        group = cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(b, cfg.n_kv_heads, group, cfg.hd)
+        logits = jnp.einsum("bhgk,bhsk->bhgs", qg.astype(xk.dtype), xk,
+                            preferred_element_type=jnp.float32) * scale
+        probs = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhgs,bhsk->bhgk", probs.astype(xv.dtype), xv,
+                       preferred_element_type=jnp.float32)
+        o = o.reshape(b, cfg.n_heads, 1, cfg.hd).transpose(0, 2, 1, 3)
+        y = jnp.einsum("bshk,hkd->bsd", o.astype(dt),
+                       layer["xattn"]["wo"].astype(dt))
+        x = x + y
+        h = _ln(x, layer["ln2"], cfg.norm_eps, dt)
+        x = x + mlp_fwd(layer["mlp"], h, dt, activation="gelu")
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = _ln(x, params["dec_ln_f"], cfg.norm_eps, dt)
+    logits = unembed(params["embed"], x)
+    return logits, dict(cache, k=nk, v=nv, length=length + 1)

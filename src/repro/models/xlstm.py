@@ -1,0 +1,217 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelisable)
+and sLSTM (scalar memory, true recurrence), interleaved 7:1 as in the
+released xLSTM-1.3b recipe (``slstm_every = 8``).
+
+mLSTM maps onto the same chunked linear-recurrence engine as Mamba-2
+(q→query, k→key, i_t folded into v, log σ(f̃) as decay); the
+normaliser state n_t is carried as one extra value column appended to v
+(state columns P+1), so one engine invocation yields both C_t·q and
+n_t·q.  Denominator per the paper: max(|nᵀq|, 1).
+
+sLSTM keeps the exponential-gate scalar recurrence with the m-state
+stabiliser and a per-head recurrent matrix R — sequential by
+construction (lax.scan over time).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, split_keys
+from .layers import rms_norm
+from .sharding import get_rules
+from .ssd import chunked_linear_scan, linear_scan_step
+
+
+# ======================================================================
+# mLSTM
+def init_mlstm_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    ks = split_keys(key, 7)
+    return {
+        "ln": jnp.ones((d,), cfg.param_dtype),
+        "wq": dense_init(ks[0], d, (d, h, p), cfg.param_dtype),
+        "wk": dense_init(ks[1], d, (d, h, p), cfg.param_dtype),
+        "wv": dense_init(ks[2], d, (d, h, p), cfg.param_dtype),
+        "w_if": dense_init(ks[3], d, (d, 2 * h), cfg.param_dtype),
+        "w_o": dense_init(ks[4], d, (d, d), cfg.param_dtype),
+        "w_out": dense_init(ks[5], d, (d, d), cfg.param_dtype),
+        "norm": jnp.ones((d,), cfg.param_dtype),
+    }
+
+
+def _mlstm_gates(params, hx, dtype):
+    gates = jnp.einsum("bsd,dg->bsg", hx, params["w_if"].astype(dtype))
+    h2 = gates.shape[-1] // 2
+    i_raw = gates[..., :h2].astype(jnp.float32)
+    f_raw = gates[..., h2:].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_raw)                # decay ≤ 0
+    log_i = -jax.nn.softplus(-i_raw)                 # = log σ(ĩ) ≤ 0
+    return log_i, log_f
+
+
+def mlstm_fwd(params, x: jnp.ndarray, cfg: ModelConfig, *,
+              chunk: int = 64) -> jnp.ndarray:
+    r = get_rules()
+    b, s, d = x.shape
+    h = cfg.n_heads
+    p = d // h
+    dt = cfg.dtype
+    hx = rms_norm(x, params["ln"].astype(dt), cfg.norm_eps)
+    q = jnp.einsum("bsd,dhp->bshp", hx, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhp->bshp", hx, params["wk"].astype(dt)) / \
+        jnp.sqrt(jnp.asarray(p, dt))
+    v = jnp.einsum("bsd,dhp->bshp", hx, params["wv"].astype(dt))
+    q = r.constrain(q, "batch", None, "heads", None)
+    log_i, log_f = _mlstm_gates(params, hx, dt)
+
+    # fold input gate into v; append ones column for the normaliser n.
+    vf = v.astype(jnp.float32) * jnp.exp(log_i)[..., None]
+    ones = jnp.exp(log_i)[..., None]                  # n accumulates i_t·k
+    v_ext = jnp.concatenate([vf, ones], axis=-1)      # (B,S,H,P+1)
+    y_ext, _ = chunked_linear_scan(q.astype(jnp.float32),
+                                   k.astype(jnp.float32), v_ext, log_f,
+                                   chunk=chunk)
+    y_num, y_den = y_ext[..., :p], y_ext[..., p:]
+    denom = jnp.maximum(jnp.abs(y_den), 1.0)
+    y = (y_num / denom).astype(dt).reshape(b, s, d)
+
+    og = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", hx, params["w_o"].astype(dt))
+        .astype(jnp.float32)).astype(dt)
+    y = rms_norm(y * og, params["norm"].astype(dt), cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, params["w_out"].astype(dt))
+    return r.constrain(out, "batch", "seq", "embed_act")
+
+
+class MLSTMCache(NamedTuple):
+    state: jnp.ndarray     # (B, H, P, P+1)
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> MLSTMCache:
+    h = cfg.n_heads
+    p = cfg.d_model // h
+    return MLSTMCache(jnp.zeros((batch, h, p, p + 1), jnp.float32))
+
+
+def mlstm_step(params, x: jnp.ndarray, cache: MLSTMCache,
+               cfg: ModelConfig) -> tuple[jnp.ndarray, MLSTMCache]:
+    b, _, d = x.shape
+    h = cfg.n_heads
+    p = d // h
+    dt = cfg.dtype
+    hx = rms_norm(x, params["ln"].astype(dt), cfg.norm_eps)
+    q = jnp.einsum("bsd,dhp->bshp", hx, params["wq"].astype(dt))[:, 0]
+    k = (jnp.einsum("bsd,dhp->bshp", hx, params["wk"].astype(dt))
+         / jnp.sqrt(jnp.asarray(p, dt)))[:, 0]
+    v = jnp.einsum("bsd,dhp->bshp", hx, params["wv"].astype(dt))[:, 0]
+    log_i, log_f = _mlstm_gates(params, hx, dt)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]           # (B, H)
+    vf = v.astype(jnp.float32) * jnp.exp(log_i)[..., None]
+    v_ext = jnp.concatenate([vf, jnp.exp(log_i)[..., None]], axis=-1)
+    y_ext, new_state = linear_scan_step(q.astype(jnp.float32),
+                                        k.astype(jnp.float32), v_ext,
+                                        log_f, cache.state)
+    y_num, y_den = y_ext[..., :p], y_ext[..., p:]
+    y = (y_num / jnp.maximum(jnp.abs(y_den), 1.0)).astype(dt)
+    y = y.reshape(b, 1, d)
+    og = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", hx, params["w_o"].astype(dt))
+        .astype(jnp.float32)).astype(dt)
+    y = rms_norm(y * og, params["norm"].astype(dt), cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, params["w_out"].astype(dt))
+    return out, MLSTMCache(new_state)
+
+
+# ======================================================================
+# sLSTM
+def init_slstm_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    ks = split_keys(key, 3)
+    return {
+        "ln": jnp.ones((d,), cfg.param_dtype),
+        "w_gates": dense_init(ks[0], d, (d, 4 * d), cfg.param_dtype),
+        "r_gates": dense_init(ks[1], p, (h, p, 4 * p), cfg.param_dtype),
+        "w_out": dense_init(ks[2], d, (d, d), cfg.param_dtype),
+        "norm": jnp.ones((d,), cfg.param_dtype),
+    }
+
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray   # (B, H, P)
+    n: jnp.ndarray   # (B, H, P)
+    m: jnp.ndarray   # (B, H, P) stabiliser
+    h: jnp.ndarray   # (B, H, P) hidden
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> SLSTMCache:
+    hh = cfg.n_heads
+    p = cfg.d_model // hh
+    z = jnp.zeros((batch, hh, p), jnp.float32)
+    return SLSTMCache(z, z, z - 1e30, z)
+
+
+def _slstm_cell(params, xt, cache: SLSTMCache, cfg: ModelConfig
+                ) -> tuple[jnp.ndarray, SLSTMCache]:
+    """xt: pre-computed gate inputs (B, H, 4P) fp32."""
+    b, hh, _ = xt.shape
+    p = xt.shape[-1] // 4
+    rec = jnp.einsum("bhp,hpq->bhq", cache.h, params["r_gates"]
+                     .astype(jnp.float32))
+    g = xt + rec
+    zr, ir, fr, orr = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(zr)
+    log_i = ir                                    # exp input gate (log dom)
+    log_f = jax.nn.log_sigmoid(fr)
+    m_new = jnp.maximum(log_f + cache.m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + cache.m - m_new)
+    c_new = f_s * cache.c + i_s * z
+    n_new = jnp.maximum(f_s * cache.n + i_s, 1e-6)
+    h_tilde = c_new / n_new
+    h_new = jax.nn.sigmoid(orr) * h_tilde
+    return h_new, SLSTMCache(c_new, n_new, m_new, h_new)
+
+
+def slstm_fwd(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    r = get_rules()
+    b, s, d = x.shape
+    hh = cfg.n_heads
+    p = d // hh
+    dt = cfg.dtype
+    hx = rms_norm(x, params["ln"].astype(dt), cfg.norm_eps)
+    gates_in = jnp.einsum("bsd,dg->bsg", hx, params["w_gates"].astype(dt))
+    gates_in = gates_in.reshape(b, s, hh, 4 * p).astype(jnp.float32)
+
+    def step(cache, gt):
+        h_new, cache = _slstm_cell(params, gt, cache, cfg)
+        return cache, h_new
+
+    cache0 = init_slstm_cache(cfg, b)
+    _, hs = jax.lax.scan(step, cache0, jnp.moveaxis(gates_in, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(dt)
+    y = rms_norm(y, params["norm"].astype(dt), cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, params["w_out"].astype(dt))
+    return r.constrain(out, "batch", "seq", "embed_act")
+
+
+def slstm_step(params, x: jnp.ndarray, cache: SLSTMCache,
+               cfg: ModelConfig) -> tuple[jnp.ndarray, SLSTMCache]:
+    b, _, d = x.shape
+    hh = cfg.n_heads
+    p = d // hh
+    dt = cfg.dtype
+    hx = rms_norm(x, params["ln"].astype(dt), cfg.norm_eps)
+    gt = jnp.einsum("bsd,dg->bsg", hx, params["w_gates"].astype(dt))
+    gt = gt.reshape(b, hh, 4 * p).astype(jnp.float32)
+    h_new, cache = _slstm_cell(params, gt, cache, cfg)
+    y = h_new.reshape(b, 1, d).astype(dt)
+    y = rms_norm(y, params["norm"].astype(dt), cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, params["w_out"].astype(dt))
+    return out, cache

@@ -1,0 +1,131 @@
+"""xLSTM LM assembly: groups of (slstm_every−1) mLSTM + 1 sLSTM blocks
+(the released 7:1 recipe), scan-stacked per group kind."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, split_keys
+from .layers import embed_tokens, init_embedding, rms_norm, unembed
+from .remat import _remat_policy
+from .sharding import get_rules, sp_residual
+from .xlstm import (init_mlstm_block, init_mlstm_cache, init_slstm_block,
+                    init_slstm_cache, mlstm_fwd, mlstm_step, slstm_fwd,
+                    slstm_step)
+
+
+def _layout(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_groups, mlstm_per_group). slstm_every==0 -> pure mLSTM."""
+    if cfg.slstm_every == 0:
+        return cfg.n_layers, 0
+    assert cfg.n_layers % cfg.slstm_every == 0
+    return cfg.n_layers // cfg.slstm_every, cfg.slstm_every - 1
+
+
+def init_xlstm(key, cfg: ModelConfig) -> dict:
+    g, m = _layout(cfg)
+    ks = split_keys(key, 4)
+    params: dict = {
+        "embed": init_embedding(ks[0], cfg),
+        "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if cfg.slstm_every == 0:
+        mk = jax.random.split(ks[1], g)
+        params["mlstm"] = jax.vmap(lambda k: init_mlstm_block(k, cfg))(mk)
+    else:
+        mk = jax.random.split(ks[1], (g, m))
+        params["mlstm"] = jax.vmap(jax.vmap(
+            lambda k: init_mlstm_block(k, cfg)))(mk)
+        sk = jax.random.split(ks[2], g)
+        params["slstm"] = jax.vmap(lambda k: init_slstm_block(k, cfg))(sk)
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(ks[3], cfg)
+    return params
+
+
+def xlstm_forward(params: dict, cfg: ModelConfig, *,
+                  tokens: jnp.ndarray | None = None,
+                  embeds: jnp.ndarray | None = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    x = (embed_tokens(params["embed"], tokens, cfg.dtype)
+         if embeds is None else embeds.astype(cfg.dtype))
+    g, m = _layout(cfg)
+
+    if cfg.slstm_every == 0:
+        def body(x, layer):
+            return sp_residual(x + mlstm_fwd(layer, x, cfg)), None
+        xs = params["mlstm"]
+    else:
+        def body(x, group):
+            mls, sls = group
+
+            def inner(x, layer):
+                return sp_residual(x + mlstm_fwd(layer, x, cfg)), None
+            x, _ = jax.lax.scan(inner, x, mls)
+            return sp_residual(x + slstm_fwd(sls, x, cfg)), None
+        xs = (params["mlstm"], params["slstm"])
+
+    step = body
+    if cfg.remat:
+        step = jax.checkpoint(body, policy=_remat_policy(cfg))
+    x, _ = jax.lax.scan(step, x, xs)
+    x = rms_norm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    return unembed(table, x), jnp.zeros((), jnp.float32)
+
+
+# ----------------------------------------------------------------------
+def init_xlstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    rules = get_rules()
+    g, m = _layout(cfg)
+    mc = init_mlstm_cache(cfg, batch)
+
+    def pin(lead, a):
+        # every cache leaf is (B, H, ...) after the stacked lead dims
+        axes = [None] * len(lead) + ["batch", "heads"] + \
+            [None] * (a.ndim - 2)
+        return rules.constrain(jnp.broadcast_to(a, lead + a.shape), *axes)
+
+    if cfg.slstm_every == 0:
+        return {"mlstm": jax.tree.map(lambda a: pin((g,), a), mc),
+                "length": jnp.zeros((), jnp.int32)}
+    sc = init_slstm_cache(cfg, batch)
+    return {
+        "mlstm": jax.tree.map(lambda a: pin((g, m), a), mc),
+        "slstm": jax.tree.map(lambda a: pin((g,), a), sc),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def xlstm_decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
+                      cache: dict) -> tuple[jnp.ndarray, dict]:
+    x = embed_tokens(params["embed"], token, cfg.dtype)
+    g, m = _layout(cfg)
+
+    if cfg.slstm_every == 0:
+        def body(x, inp):
+            layer, mc = inp
+            y, mc_new = mlstm_step(layer, x, mc, cfg)
+            return x + y, mc_new
+        x, mc_new = jax.lax.scan(body, x, (params["mlstm"],
+                                           cache["mlstm"]))
+        new_cache = dict(cache, mlstm=mc_new, length=cache["length"] + 1)
+    else:
+        def body(x, inp):
+            mls, mcs, sls, scs = inp
+
+            def inner(x, inp2):
+                layer, mc = inp2
+                y, mc_new = mlstm_step(layer, x, mc, cfg)
+                return x + y, mc_new
+            x, mcs_new = jax.lax.scan(inner, x, (mls, mcs))
+            y, scs_new = slstm_step(sls, x, scs, cfg)
+            return x + y, (mcs_new, scs_new)
+        x, (mc_new, sc_new) = jax.lax.scan(
+            body, x, (params["mlstm"], cache["mlstm"], params["slstm"],
+                      cache["slstm"]))
+        new_cache = dict(cache, mlstm=mc_new, slstm=sc_new,
+                         length=cache["length"] + 1)
+    x = rms_norm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    return unembed(table, x), new_cache

@@ -1,0 +1,172 @@
+"""Zamba2-style hybrid: a Mamba-2 backbone with a *shared* attention+MLP
+block applied periodically (arXiv:2411.15242).  The shared block's
+weights are reused at every application (Zamba's parameter-sharing
+trick); each application keeps its own KV cache.
+
+Layer layout for n_layers = G·k + r with ``attn_every = k``:
+  G groups of [k stacked mamba layers → shared transformer block]
+  followed by r trailing mamba layers.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_decode, attention_fwd, init_attention
+from .common import ModelConfig, split_keys
+from .layers import embed_tokens, init_embedding, rms_norm, unembed
+from .mamba2 import (init_mamba_block, init_mamba_cache, mamba_fwd,
+                     mamba_step)
+from .mlp import init_mlp, mlp_fwd
+from .remat import _remat_policy
+from .sharding import get_rules, sp_residual
+
+
+def _layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    k = cfg.attn_every or cfg.n_layers
+    g = cfg.n_layers // k
+    r = cfg.n_layers - g * k
+    return g, k, r
+
+
+def init_zamba(key, cfg: ModelConfig) -> dict:
+    g, k, r = _layout(cfg)
+    ks = split_keys(key, 6)
+    group_keys = jax.random.split(ks[0], (g, k))
+    groups = jax.vmap(jax.vmap(lambda kk: init_mamba_block(kk, cfg)))(
+        group_keys)
+    params = {
+        "embed": init_embedding(ks[1], cfg),
+        "groups": groups,                       # leaves (G, k, ...)
+        "shared_ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "shared_attn": init_attention(ks[2], cfg),
+        "shared_ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "shared_mlp": init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                               cfg.param_dtype),
+        "ln_f": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if r:
+        tail_keys = jax.random.split(ks[4], r)
+        params["tail"] = jax.vmap(lambda kk: init_mamba_block(kk, cfg))(
+            tail_keys)
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(ks[5], cfg)
+    return params
+
+
+def _shared_block(params, x, cfg: ModelConfig, positions):
+    h = rms_norm(x, params["shared_ln1"].astype(cfg.dtype), cfg.norm_eps)
+    x = x + attention_fwd(params["shared_attn"], h, cfg,
+                          positions=positions)
+    h = rms_norm(x, params["shared_ln2"].astype(cfg.dtype), cfg.norm_eps)
+    return x + mlp_fwd(params["shared_mlp"], h, cfg.dtype)
+
+
+def zamba_forward(params: dict, cfg: ModelConfig, *,
+                  tokens: jnp.ndarray | None = None,
+                  embeds: jnp.ndarray | None = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    g, k, r = _layout(cfg)
+    x = (embed_tokens(params["embed"], tokens, cfg.dtype)
+         if embeds is None else embeds.astype(cfg.dtype))
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def group_body(x, group):
+        def mamba_body(x, layer):
+            return sp_residual(x + mamba_fwd(layer, x, cfg)), None
+        x, _ = jax.lax.scan(mamba_body, x, group)
+        x = sp_residual(_shared_block(params, x, cfg, positions))
+        return x, None
+
+    step = group_body
+    if cfg.remat:
+        step = jax.checkpoint(group_body, policy=_remat_policy(cfg))
+    x, _ = jax.lax.scan(step, x, params["groups"])
+    if r:
+        def mamba_body(x, layer):
+            return sp_residual(x + mamba_fwd(layer, x, cfg)), None
+        x, _ = jax.lax.scan(mamba_body, x, params["tail"])
+    x = rms_norm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    return unembed(table, x), jnp.zeros((), jnp.float32)
+
+
+# ----------------------------------------------------------------------
+def init_zamba_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    from .sharding import get_rules
+    rules = get_rules()
+    g, k, r = _layout(cfg)
+    one = init_mamba_cache(cfg, batch)
+
+    def pin(lead, tree):
+        # conv (B, W-1, conv) and ssd (B, H, N, P) leaves, stacked `lead`
+        return type(tree)(
+            conv=rules.constrain(
+                jnp.broadcast_to(tree.conv, lead + tree.conv.shape),
+                *([None] * len(lead)), "batch", None, "ffn_act"),
+            ssd=rules.constrain(
+                jnp.broadcast_to(tree.ssd, lead + tree.ssd.shape),
+                *([None] * len(lead)), "batch", "heads", None, None))
+
+    cache = {
+        "mamba": pin((g, k), one),
+        "attn_k": rules.constrain(
+            jnp.zeros((g, batch, cfg.n_kv_heads, max_len, cfg.hd),
+                      cfg.dtype), None, "batch", "kv_heads", "kv_seq", None),
+        "attn_v": rules.constrain(
+            jnp.zeros((g, batch, cfg.n_kv_heads, max_len, cfg.hd),
+                      cfg.dtype), None, "batch", "kv_heads", "kv_seq", None),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    if r:
+        cache["tail"] = pin((r,), one)
+    return cache
+
+
+def zamba_decode_step(params: dict, cfg: ModelConfig, token: jnp.ndarray,
+                      cache: dict) -> tuple[jnp.ndarray, dict]:
+    g, k, r = _layout(cfg)
+    x = embed_tokens(params["embed"], token, cfg.dtype)
+    length = cache["length"]
+
+    def group_body(x, inp):
+        group, mcaches, ck, cv = inp
+
+        def mamba_body(carry, inp2):
+            x = carry
+            layer, mc = inp2
+            y, mc_new = mamba_step(layer, x, mc, cfg)
+            return x + y, mc_new
+
+        x, mcaches_new = jax.lax.scan(mamba_body, x, (group, mcaches))
+        h = rms_norm(x, params["shared_ln1"].astype(cfg.dtype),
+                     cfg.norm_eps)
+        y, nk, nv = attention_decode(params["shared_attn"], h, ck, cv,
+                                     length, cfg)
+        x = x + y
+        h = rms_norm(x, params["shared_ln2"].astype(cfg.dtype),
+                     cfg.norm_eps)
+        x = x + mlp_fwd(params["shared_mlp"], h, cfg.dtype)
+        return x, (mcaches_new, nk, nv)
+
+    x, (mc_new, nk, nv) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], cache["mamba"], cache["attn_k"],
+         cache["attn_v"]))
+    new_cache = dict(cache, mamba=mc_new, attn_k=nk, attn_v=nv,
+                     length=length + 1)
+    if r:
+        def mamba_body(carry, inp2):
+            x = carry
+            layer, mc = inp2
+            y, mc_new = mamba_step(layer, x, mc, cfg)
+            return x + y, mc_new
+        x, tail_new = jax.lax.scan(mamba_body, x,
+                                   (params["tail"], cache["tail"]))
+        new_cache["tail"] = tail_new
+    x = rms_norm(x, params["ln_f"].astype(cfg.dtype), cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    return unembed(table, x), new_cache

@@ -1,0 +1,5 @@
+from .adamw import (AdamWConfig, adamw_update, clip_by_global_norm,
+                    cosine_lr, global_norm, init_opt_state)
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "cosine_lr",
+           "global_norm", "clip_by_global_norm"]

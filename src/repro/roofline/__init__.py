@@ -1,0 +1,1 @@
+from .analysis import (HBM_BW, ICI_BW_EFF, PEAK_FLOPS, Roofline, analyse, collective_bytes, summarise)

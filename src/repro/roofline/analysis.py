@@ -1,0 +1,129 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per (arch × shape × mesh):
+
+    compute_s    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory_s     = HLO_bytes_per_device / HBM_BW
+    collective_s = Σ collective_bytes_per_device / ICI_BW_EFF
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device numbers:
+the module is the SPMD per-device program).  collective bytes are NOT
+in cost_analysis — they are parsed from the optimized HLO text: the
+output shapes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (per-device shapes after SPMD
+partitioning), with an all-reduce counted twice (RS+AG decomposition).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  ICI_BW_EFF uses 45 GB/s (ring efficiency on one
+link; multi-link meshes only improve this, so the collective term is
+conservative).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW_EFF = 45e9            # effective bytes/s on the collective path
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every array shape in an HLO result type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-type byte totals from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-producing op lines look like:  %name = TYPE op-name(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^ ]+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.rstrip("0123456789.-")
+        # match e.g. all-gather, all-gather-start, all-reduce-scatter…
+        for coll in _COLLECTIVES:
+            if base == coll or base == coll + "-start":
+                out[coll] += _shape_bytes(m.group(1))
+                out["count"] += 1
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per device
+    bytes_accessed: float        # per device
+    coll_bytes: float            # per device, weighted
+    coll_detail: dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0     # 6·N·D (global)
+    useful_ratio: float = 0.0    # model / (hlo × devices)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyse(cost: dict, hlo_text: str, *, n_devices: int,
+            model_flops: float = 0.0) -> Roofline:
+    """Trip-count-aware terms (hlo_cost parser); falls back to XLA's
+    cost_analysis numbers only if parsing yields nothing.  XLA's own
+    numbers count while bodies once — wrong for scan-over-layers."""
+    from .hlo_cost import analyse_hlo
+    parsed = analyse_hlo(hlo_text)
+    flops = parsed["flops"] or float(cost.get("flops", 0.0))
+    byts = parsed["bytes"] or float(cost.get("bytes accessed", 0.0))
+    cb = parsed["coll_detail"]
+    cb["count"] = -1
+    weighted = parsed["collective_bytes"]
+    if weighted == 0:
+        cb = collective_bytes(hlo_text)
+        weighted = (cb["all-gather"] + 2 * cb["all-reduce"] +
+                    cb["reduce-scatter"] + cb["all-to-all"] +
+                    cb["collective-permute"])
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    coll_s = weighted / ICI_BW_EFF
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = (model_flops / (flops * n_devices)
+              if flops and model_flops else 0.0)
+    return Roofline(flops, byts, float(weighted), cb, compute_s, memory_s,
+                    coll_s, bottleneck, model_flops, useful)
+
+
+def summarise(r: Roofline) -> str:
+    return (f"compute={r.compute_s * 1e3:8.2f}ms  "
+            f"memory={r.memory_s * 1e3:8.2f}ms  "
+            f"collective={r.collective_s * 1e3:8.2f}ms  "
+            f"bottleneck={r.bottleneck:10s}  useful={r.useful_ratio:.2f}")

@@ -1,0 +1,249 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's HloCostAnalysis counts a ``while`` body ONCE, which under-counts
+scan-over-layers / microbatch-scan programs by the loop trip product.
+This parser rebuilds per-computation costs from the optimized HLO text
+and multiplies them through the call graph:
+
+  * dot FLOPs       = 2 · |result| · |lhs contracting dims|
+  * bytes           ≈ 2 · Σ |op results|   (write + one read)
+  * collective bytes by type (all-reduce weighted 2×: RS+AG phases)
+
+Trip counts come from the loop condition computations (ROOT compare
+against an s32 constant — the lowering jax.lax.scan produces).  Edges
+followed: while body/condition (×trip), fusion/call ``calls=``,
+conditional branches (×1, max over branches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|"
+                     r"(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+    calls: list = dataclasses.field(default_factory=list)  # (name, mult)
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        if cur is None:
+            s = line.strip()
+            m = _COMP_HDR.match(s)
+            if m and s.endswith("{") and "->" in s:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    comps["__entry__"] = comps.get(entry, [])
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Largest s32 constant in the loop condition ≈ trip count."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def analyse_hlo(text: str) -> dict:
+    comps = _split_computations(text)
+    entry_name = comps.pop("__entry_name__")
+    comps.pop("__entry__")
+
+    # computations reached via a `fusion` op execute inside one kernel:
+    # their interior results never touch HBM — suppress their bytes
+    # (flops and collectives still count).  Fusions whose ROOT is a
+    # dynamic-update-slice are in-place accumulator updates: their
+    # traffic is the update slice, not the full result the op type
+    # names (a scan's cache update would otherwise count the whole
+    # cache every iteration).
+    fusion_bodies: set[str] = set()
+    dus_update_bytes: dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m and m.group(3).rstrip("0123456789.") == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", line)
+                if cm:
+                    fusion_bodies.add(cm.group(1))
+    for name in fusion_bodies:
+        shapes: dict[str, str] = {}
+        upd_bytes = None
+        for line in comps.get(name, []):
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            shapes[m.group(1)] = m.group(2)
+            base = m.group(3).rstrip("0123456789.")
+            if base == "dynamic-update-slice":
+                om = re.search(r"dynamic-update-slice\(([^)]*)\)", line)
+                if om:
+                    ops_ = [o.strip().lstrip("%")
+                            for o in om.group(1).split(",")]
+                    if len(ops_) >= 2 and ops_[1] in shapes:
+                        b = _nbytes(shapes[ops_[1]])
+                        upd_bytes = (upd_bytes or 0) + b
+        if upd_bytes is not None:
+            dus_update_bytes[name] = upd_bytes
+
+    costs: dict[str, CompCost] = {}
+    for name, lines in comps.items():
+        cc = CompCost(coll={k: 0 for k in _COLLECTIVES})
+        in_fusion = name in fusion_bodies
+        shapes: dict[str, str] = {}
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            opname, type_str, op = m.group(1), m.group(2), m.group(3)
+            shapes[opname] = type_str
+            base = op.rstrip("0123456789.")
+            nb = _nbytes(type_str)
+            # bytes: skip fusion interiors, parameters/gte (no traffic of
+            # their own) — count real result-producing top-level ops.
+            if not in_fusion and base not in (
+                    "parameter", "get-tuple-element", "tuple", "bitcast",
+                    "constant"):
+                if base == "dynamic-update-slice":
+                    # in-place: traffic = the update slice, not the
+                    # whole accumulator the result type names.
+                    om = re.search(r"dynamic-update-slice\(([^)]*)\)",
+                                   line)
+                    upd_nb = nb
+                    if om:
+                        ops_ = [o.strip().lstrip("%")
+                                for o in om.group(1).split(",")]
+                        if len(ops_) >= 2 and ops_[1] in shapes:
+                            upd_nb = _nbytes(shapes[ops_[1]])
+                    cc.bytes += 2 * upd_nb
+                elif base == "fusion":
+                    cm = re.search(r"calls=%?([\w.\-]+)", line)
+                    tgt = cm.group(1) if cm else ""
+                    if tgt in dus_update_bytes:
+                        cc.bytes += 2 * dus_update_bytes[tgt]
+                    else:
+                        cc.bytes += 2 * nb
+                else:
+                    cc.bytes += 2 * nb
+            # collectives
+            for coll in _COLLECTIVES:
+                if base == coll or base == coll + "-start":
+                    cc.coll[coll] += nb
+                    break
+            # dots
+            if base == "dot":
+                operands = re.search(r"dot\(([^)]*)\)", line)
+                lcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                result_elems = 0
+                for dt, dims in _shape_dims(type_str):
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    result_elems += n
+                contract = 1
+                if operands and lcd:
+                    lhs = operands.group(1).split(",")[0].strip()
+                    lhs = lhs.lstrip("%")
+                    lhs_shape = shapes.get(lhs)
+                    if lhs_shape:
+                        sd = _shape_dims(lhs_shape)
+                        if sd:
+                            dims = sd[0][1]
+                            for ci in lcd.group(1).split(","):
+                                if ci and int(ci) < len(dims):
+                                    contract *= dims[int(ci)]
+                cc.flops += 2.0 * result_elems * contract
+            # call edges
+            wm = re.search(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)",
+                           line)
+            if wm:
+                trip = _trip_count(comps.get(wm.group(1), []))
+                cc.calls.append((wm.group(2), trip))
+                cc.calls.append((wm.group(1), trip))
+            else:
+                for cm in re.finditer(
+                        r"(?:calls|to_apply|branch_computations)="
+                        r"\{?%?([\w.\-]+(?:, ?%?[\w.\-]+)*)\}?", line):
+                    for target in re.split(r",\s*", cm.group(1)):
+                        cc.calls.append((target.lstrip("%"), 1))
+        costs[name] = cc
+
+    # propagate multipliers from entry (memoised; HLO call graphs are DAGs)
+    total = CompCost(coll={k: 0 for k in _COLLECTIVES})
+    seen_stack: set[str] = set()
+
+    def accumulate(name: str, mult: float) -> None:
+        cc = costs.get(name)
+        if cc is None or name in seen_stack or mult <= 0:
+            return
+        seen_stack.add(name)
+        total.flops += cc.flops * mult
+        total.bytes += cc.bytes * mult
+        for k in _COLLECTIVES:
+            total.coll[k] += cc.coll[k] * mult
+        for child, trip in cc.calls:
+            accumulate(child, mult * trip)
+        seen_stack.discard(name)
+
+    if entry_name:
+        accumulate(entry_name, 1.0)
+
+    weighted_coll = (total.coll["all-gather"] + 2 * total.coll["all-reduce"]
+                     + total.coll["reduce-scatter"]
+                     + total.coll["all-to-all"]
+                     + total.coll["collective-permute"])
+    return {
+        "flops": total.flops,
+        "bytes": total.bytes,
+        "collective_bytes": weighted_coll,
+        "coll_detail": dict(total.coll),
+    }

@@ -1,0 +1,59 @@
+"""Collective introspection: per-(type, shape) weighted byte totals with
+loop multipliers — the §Perf "profile" for finding which collective
+dominates a compiled cell."""
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+from . import hlo_cost as hc
+
+
+def collective_profile(text: str, top: int = 12) -> list[tuple]:
+    comps = hc._split_computations(text)
+    entry = comps.pop("__entry_name__")
+    comps.pop("__entry__")
+    per: dict[str, Counter] = {}
+    calls: dict[str, list] = {}
+    for name, lines in comps.items():
+        agg: Counter = Counter()
+        edges = []
+        for line in lines:
+            m = hc._DEF_RE.match(line)
+            if not m:
+                continue
+            ts, op = m.group(2), m.group(3)
+            base = op.rstrip("0123456789.")
+            for coll in hc._COLLECTIVES:
+                if base == coll or base == coll + "-start":
+                    w = 2 if coll == "all-reduce" else 1
+                    agg[f"{coll} {ts.split('{')[0]}"] += \
+                        w * hc._nbytes(ts)
+                    break
+            wm = re.search(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)",
+                           line)
+            if wm:
+                trip = hc._trip_count(comps.get(wm.group(1), []))
+                edges.append((wm.group(2), trip))
+                edges.append((wm.group(1), trip))
+            else:
+                for cm in re.finditer(
+                        r"(?:calls|to_apply|branch_computations)="
+                        r"\{?%?([\w.\-]+(?:, ?%?[\w.\-]+)*)\}?", line):
+                    for tgt in re.split(r",\s*", cm.group(1)):
+                        edges.append((tgt.lstrip("%"), 1))
+        per[name] = agg
+        calls[name] = edges
+
+    total: Counter = Counter()
+
+    def acc(name, mult, depth=0):
+        if name not in per or depth > 30:
+            return
+        for k, v in per[name].items():
+            total[k] += v * mult
+        for child, trip in calls[name]:
+            acc(child, mult * trip, depth + 1)
+
+    acc(entry, 1.0)
+    return total.most_common(top)

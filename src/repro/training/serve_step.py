@@ -1,0 +1,126 @@
+"""Serving: prefill + decode step factories, a greedy generate loop and
+a minimal continuous-batching scheduler (slot-based, host-driven).
+
+``serve_step`` — the function the decode_* dry-run cells lower — is one
+batched single-token decode against a full KV/state cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model_zoo import Model
+
+
+def make_serve_step(model: Model) -> Callable:
+    """serve_step(params, token (B,1) int32, cache) -> (token', cache)."""
+
+    def serve_step(params, token, cache):
+        logits, cache = model.decode_step(params, token, cache)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    return serve_step
+
+
+def greedy_generate(model: Model, params, batch: dict, *, max_new: int,
+                    max_len: int) -> np.ndarray:
+    """Prefill the prompt then decode ``max_new`` tokens greedily."""
+    logits, cache = model.prefill(params, batch, max_len)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    step = jax.jit(make_serve_step(model))
+    out = [np.asarray(tok)]
+    for _ in range(max_new - 1):
+        tok, cache = step(params, tok, cache)
+        out.append(np.asarray(tok))
+    return np.concatenate(out, axis=1)
+
+
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching: a fixed decode batch of ``slots``;
+    finished requests release their slot, queued requests are prefis
+    prefilled into it.  Host-side control, device-side caches —
+    the standard serving shape (vLLM-lite) on top of serve_step."""
+
+    def __init__(self, model: Model, params, *, slots: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self.cache = model.init_cache(slots, max_len)
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._step = jax.jit(make_serve_step(model))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[slot] = req
+                # prefill one request, splice its cache into the batch
+                b = {"tokens": req.prompt[None, :]}
+                logits, c1 = self.model.prefill(self.params, b,
+                                                self.max_len)
+                first = int(np.argmax(np.asarray(logits)[0, -1]))
+                req.generated.append(first)
+                self.tokens = self.tokens.at[slot, 0].set(first)
+                self.cache = _splice_cache(self.cache, c1, slot)
+
+    def run(self) -> list[Request]:
+        finished = []
+        while self.queue or any(self.active):
+            self._admit()
+            self.tokens, self.cache = self._step(self.params, self.tokens,
+                                                 self.cache)
+            toks = np.asarray(self.tokens)
+            for slot, req in enumerate(self.active):
+                if req is None:
+                    continue
+                req.generated.append(int(toks[slot, 0]))
+                if len(req.generated) >= req.max_new:
+                    req.done = True
+                    finished.append(req)
+                    self.active[slot] = None
+        return finished
+
+
+def _splice_cache(batch_cache, single_cache, slot: int):
+    """Write a single-request cache into slot ``slot`` of the batched
+    cache.  Batch dims are found structurally: any leaf dim equal to the
+    single cache's batch-1 axis is updated via dynamic_update_slice."""
+
+    def splice(b, s):
+        if not hasattr(b, "shape") or b.ndim == 0:
+            return s if b.ndim == 0 else b
+        # locate the batch axis: first axis where b vs s differ
+        axes = [i for i in range(b.ndim)
+                if i < s.ndim and b.shape[i] != s.shape[i]]
+        if not axes:
+            return b
+        ax = axes[0]
+        start = [0] * b.ndim
+        start[ax] = slot
+        return jax.lax.dynamic_update_slice(b, s.astype(b.dtype),
+                                            tuple(start))
+
+    return jax.tree.map(splice, batch_cache, single_cache)

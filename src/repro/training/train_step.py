@@ -1,0 +1,70 @@
+"""Training step factory: loss → grad → clip → AdamW, with optional
+microbatched gradient accumulation (scan) and donation-friendly
+signature.  The same function lowers on 1 CPU device (smoke tests) and
+on the 512-chip production mesh (dry-run) — sharding comes entirely
+from the in/out shardings + the pattern constraints inside the model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model_zoo import Model
+from ..optim import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    microbatch: int | None = None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params,
+    opt_state, metrics).
+
+    ``microbatch``: split the (global) batch into this many sequential
+    accumulation chunks (grad-accumulation scan) — trades step latency
+    for activation memory, the standard large-model knob.
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if not microbatch or microbatch <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatch == 0, (b, microbatch)
+            return x.reshape((microbatch, b // microbatch) + x.shape[1:])
+
+        chunks = jax.tree.map(split, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+
+        def body(acc, chunk):
+            loss_acc, grad_acc = acc
+            l, g = jax.value_and_grad(loss_fn)(params, chunk)
+            grad_acc = jax.tree.map(
+                lambda a, b_: a + b_.astype(jnp.float32), grad_acc, g)
+            return (loss_acc + l, grad_acc), None
+
+        (loss_sum, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero),
+                                            chunks)
+        inv = 1.0 / microbatch
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_training(model: Model, key, *, moments_dtype: str = "fp32"
+                  ) -> tuple[Any, dict]:
+    params = model.init(key)
+    return params, init_opt_state(params, moments_dtype)

@@ -1,0 +1,9 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the host's
+real device(s); only launch/dryrun.py fakes 512 devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

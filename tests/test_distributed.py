@@ -1,0 +1,206 @@
+"""Distributed substrate: checkpointing (incl. elastic restore),
+compression (properties), straggler monitor, sharding-rule assignment,
+roofline HLO parsing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.distributed import (CheckpointManager, StragglerMonitor,
+                               dequantise_int8, quantise_int8)
+from repro.distributed.param_sharding import spec_for
+from repro.models.sharding import make_rules
+from repro.roofline import analyse, collective_bytes
+
+
+# ------------------------------------------------------------ checkpoint
+def _tree(rng):
+    return {"a": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree(rng)
+    cm.save(5, tree, extra={"note": "x"}, blocking=True)
+    restored, man = cm.restore(tree)
+    assert man["step"] == 5 and man["extra"]["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_latest(tmp_path, rng):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree(rng)
+    for s in (1, 2, 3, 4):
+        cm.save(s, tree, blocking=True)
+    assert cm.steps() == [3, 4]
+    assert cm.latest_step() == 4
+
+
+def test_checkpoint_async_then_wait(tmp_path, rng):
+    cm = CheckpointManager(str(tmp_path))
+    tree = _tree(rng)
+    cm.save(1, tree, blocking=False)
+    cm.wait()
+    assert cm.latest_step() == 1
+
+
+def test_checkpoint_incompatible_tree_rejected(tmp_path, rng):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(1, _tree(rng), blocking=True)
+    with pytest.raises(ValueError, match="leaves"):
+        cm.restore({"only": jnp.zeros((2,))})
+
+
+def test_checkpoint_elastic_reshard(tmp_path, rng):
+    """Restore with explicit shardings (elastic restart path)."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding
+    cm = CheckpointManager(str(tmp_path))
+    tree = _tree(rng)
+    cm.save(1, tree, blocking=True)
+    sh = jax.tree.map(
+        lambda _: NamedSharding(mesh, PartitionSpec()), tree)
+    restored, _ = cm.restore(tree, shardings=sh)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------- compression
+@given(st.integers(1, 3000), st.floats(0.01, 100.0))
+@settings(max_examples=30, deadline=None)
+def test_int8_quantisation_error_bounded(n, scale):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray((rng.normal(size=(n,)) * scale).astype(np.float32))
+    q, s = quantise_int8(x)
+    xr = dequantise_int8(q, s, x.size, x.shape)
+    # error bounded by half a quantisation step per block
+    blocks = np.asarray(jnp.pad(x, (0, (-n) % 256)).reshape(-1, 256))
+    steps = np.abs(blocks).max(1) / 127.0
+    err = np.abs(np.asarray(xr - x))
+    err_blocks = np.pad(err, (0, (-n) % 256)).reshape(-1, 256)
+    assert np.all(err_blocks.max(1) <= steps * 0.51 + 1e-7)
+
+
+def test_error_feedback_reduces_bias(rng):
+    from repro.distributed import quantise_tree
+    g = {"w": jnp.asarray(rng.normal(size=(512,)).astype(np.float32))}
+    res = None
+    acc = np.zeros(512)
+    for _ in range(50):
+        _, deq, res = quantise_tree(g, res)
+        acc += np.asarray(deq["w"])
+    # accumulated dequantised grads converge to 50x true grad
+    np.testing.assert_allclose(acc / 50, np.asarray(g["w"]), atol=2e-3)
+
+
+def test_compressed_psum_single_device():
+    mesh = jax.make_mesh((1,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.distributed import compressed_psum
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(300,))
+                    .astype(np.float32))
+    y = compressed_psum(x, mesh, axis="pod")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=2e-2)
+
+
+# -------------------------------------------------------------- straggler
+def test_straggler_detection_and_eviction():
+    warns, evicts = [], []
+    m = StragglerMonitor(window=16, factor=2.0, patience=2,
+                         on_warn=warns.append, on_evict=evicts.append)
+    for i in range(8):
+        m.observe(i, 1.0)
+    m.observe(8, 3.0)        # warn
+    m.observe(9, 3.5)        # evict (2 consecutive)
+    assert len(warns) == 1 and len(evicts) == 1
+    assert evicts[0].ratio >= 2.0
+
+
+def test_straggler_recovers():
+    m = StragglerMonitor(window=16, factor=2.0, patience=3)
+    for i in range(8):
+        m.observe(i, 1.0)
+    m.observe(8, 5.0)
+    m.observe(9, 1.0)        # back to normal resets patience
+    assert m._consecutive == 0
+
+
+def test_straggler_timer_interface():
+    m = StragglerMonitor()
+    m.start_step(1)
+    ev = m.end_step(wall=0.01)
+    assert ev is None
+
+
+# ------------------------------------------------------ sharding rules
+def test_rules_divisibility_gate():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    r = make_rules(mesh)
+    # size-1 mesh axes never shard
+    assert tuple(r.divisible_spec((8, 16), "batch", "ffn")) == (None, None)
+
+
+def test_rules_kv_seq_fallback():
+    """When kv_heads can't take `model`, the cache seq dim should."""
+    import os
+    # build a fake 4-way model mesh out of a reshaped 1-device mesh is
+    # impossible on 1 device; test the pure logic with mesh=None rules
+    # via spec() and a crafted 2x2... skip if <4 devices.
+    devs = jax.devices()
+    if len(devs) < 1:
+        pytest.skip("no devices")
+    r = make_rules(None)
+    spec = r.spec("batch", "kv_heads", "kv_seq", None)
+    # without a mesh, spec keeps the declared preferences
+    assert spec[1] == "model" and spec[2] is None  # model consumed once
+
+
+def test_param_spec_assignment():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.tree_util import DictKey
+    s = spec_for((DictKey("layers"), DictKey("attn"), DictKey("wq")),
+                 (4, 64, 8, 16), mesh)
+    assert isinstance(s, PartitionSpec)
+
+
+# ------------------------------------------------------------- roofline
+HLO = """
+ENTRY %main {
+  %p0 = bf16[8,128] parameter(0)
+  %ag = bf16[8,2048] all-gather(%p0), dimensions={1}
+  %ar = f32[16,16] all-reduce(%x), to_apply=%sum
+  %rs = f32[4,16] reduce-scatter(%y), dimensions={0}
+  %a2a = bf16[8,64] all-to-all(%z), dimensions={0}
+  %cp = u8[100] collective-permute(%w), source_target_pairs={{0,1}}
+  %ags = bf16[2,4] all-gather-start(%q), dimensions={0}
+  %dot = f32[8,8] dot(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    cb = collective_bytes(HLO)
+    assert cb["all-gather"] == 8 * 2048 * 2 + 2 * 4 * 2
+    assert cb["all-reduce"] == 16 * 16 * 4
+    assert cb["reduce-scatter"] == 4 * 16 * 4
+    assert cb["all-to-all"] == 8 * 64 * 2
+    assert cb["collective-permute"] == 100
+    assert cb["count"] == 6
+
+
+def test_roofline_terms_and_bottleneck():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 * 2}
+    r = analyse(cost, HLO, n_devices=4, model_flops=197e12 * 2)
+    assert abs(r.compute_s - 1.0) < 1e-6
+    assert abs(r.memory_s - 2.0) < 1e-6
+    assert r.bottleneck == "memory"
+    assert 0 < r.useful_ratio <= 1.0

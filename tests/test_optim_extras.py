@@ -1,0 +1,97 @@
+"""8-bit Adam moments + HLO trip-count cost parser."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.adamw import _dq8, _q8
+from repro.roofline.hlo_cost import analyse_hlo
+
+
+@given(st.integers(1, 2000), st.floats(1e-6, 1e3))
+@settings(max_examples=25, deadline=None)
+def test_dynamic_int8_roundtrip_error(n, scale):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray((rng.normal(size=(n,)) * scale).astype(np.float32))
+    xr = _dq8(_q8(x), x.shape)
+    # quadratic-map error: <= ~2/127 relative near blockmax, much finer
+    # near zero; assert a loose global bound per block
+    err = np.abs(np.asarray(xr - x))
+    bmax = np.abs(np.asarray(jnp.pad(x, (0, (-n) % 256)).reshape(-1, 256)
+                             )).max(1)
+    eb = np.pad(err, (0, (-n) % 256)).reshape(-1, 256).max(1)
+    assert np.all(eb <= bmax * 0.02 + 1e-12)
+
+
+def test_dynamic_int8_preserves_small_values():
+    """The failure mode that killed linear int8: tiny v entries next to a
+    large blockmax must NOT quantise to zero."""
+    x = jnp.asarray(np.array([1.0] + [1e-4] * 255, np.float32))
+    xr = np.asarray(_dq8(_q8(x), x.shape))
+    assert xr[1] > 0  # survives
+    assert abs(xr[1] - 1e-4) / 1e-4 < 0.7
+
+
+def test_int8_adam_matches_fp32_closely():
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(512,)).astype(np.float32))}
+    grads = {"w": jnp.asarray(rng.normal(size=(512,)).astype(np.float32))}
+    cfg32 = AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=100,
+                        weight_decay=0.0)
+    cfg8 = AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=100,
+                       weight_decay=0.0, moments_dtype="int8")
+    p32, s32 = dict(params), init_opt_state(params)
+    p8, s8 = dict(params), init_opt_state(params, "int8")
+    for _ in range(5):
+        p32, s32, _ = adamw_update(cfg32, p32, grads, s32)
+        p8, s8, _ = adamw_update(cfg8, p8, grads, s8)
+    # per-element drift compounds (quantised moments); what must hold is
+    # that the accumulated UPDATE points the same way at similar scale.
+    u32 = np.asarray(p32["w"]) - np.asarray(params["w"])
+    u8 = np.asarray(p8["w"]) - np.asarray(params["w"])
+    cos = (u32 @ u8) / (np.linalg.norm(u32) * np.linalg.norm(u8))
+    assert cos > 0.98, cos
+    assert abs(np.linalg.norm(u8) / np.linalg.norm(u32) - 1) < 0.1
+
+
+def test_hlo_cost_counts_loop_trips():
+    L, B, D = 5, 8, 32
+
+    def f(x, ws):
+        def body(x, w):
+            return jnp.dot(x, w).astype(x.dtype), None
+        return jax.lax.scan(body, x, ws)[0]
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((B, D), jnp.float32),
+        jax.ShapeDtypeStruct((L, D, D), jnp.float32)).compile()
+    res = analyse_hlo(c.as_text())
+    assert res["flops"] == pytest.approx(2.0 * L * B * D * D, rel=0.01)
+
+
+def test_hlo_cost_nested_scans():
+    L, M, B, D = 3, 4, 4, 16
+
+    def f(x, ws):
+        def outer(x, wrow):
+            def inner(x, w):
+                return jnp.dot(x, w).astype(x.dtype), None
+            return jax.lax.scan(inner, x, wrow)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((B, D), jnp.float32),
+        jax.ShapeDtypeStruct((L, M, D, D), jnp.float32)).compile()
+    res = analyse_hlo(c.as_text())
+    assert res["flops"] == pytest.approx(2.0 * L * M * B * D * D, rel=0.01)
+
+
+def test_hlo_cost_bytes_positive():
+    c = jax.jit(lambda x: x * 2.0).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    res = analyse_hlo(c.as_text())
+    assert res["bytes"] >= 64 * 64 * 4

@@ -1,0 +1,91 @@
+"""Pattern semantics: the core Savu abstraction."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import DataSet, Pattern
+from repro.core.patterns import pattern_from_labels
+
+
+def test_pattern_validation():
+    with pytest.raises(ValueError):
+        Pattern("X", core_dims=(0, 1), slice_dims=(1,))   # overlap
+    with pytest.raises(ValueError):
+        Pattern("X", core_dims=(0,), slice_dims=(2,))     # gap
+    p = Pattern("OK", core_dims=(1, 2), slice_dims=(0,))
+    assert p.ndim == 3
+    assert p.dim_type(0) == "slice"
+    assert p.dim_type(1) == "core"
+
+
+def test_dim_types_first_slice_vs_other():
+    p = Pattern("P", core_dims=(2, 3), slice_dims=(0, 1))
+    assert p.dim_type(0) == "slice"     # first slice dim
+    assert p.dim_type(1) == "other"
+
+
+def test_frame_shape_and_count():
+    p = Pattern("SINOGRAM", core_dims=(0, 2), slice_dims=(1,))
+    assert p.frame_shape((8, 6, 4)) == (8, 4)
+    assert p.n_frames((8, 6, 4)) == 6
+
+
+@given(shape=st.tuples(st.integers(1, 5), st.integers(1, 5),
+                       st.integers(1, 5), st.integers(1, 4)))
+@settings(max_examples=25, deadline=None)
+def test_to_from_frames_roundtrip_4d(shape):
+    """Property: to_frames → from_frames is the identity for any pattern."""
+    a = np.arange(np.prod(shape)).reshape(shape)
+    for core, slc in [((1, 2), (0, 3)), ((0, 3), (2, 1)), ((2,), (0, 1, 3))]:
+        p = Pattern("P", core_dims=core, slice_dims=slc)
+        f = p.to_frames(a)
+        assert f.shape == (p.n_frames(shape),) + p.frame_shape(shape)
+        back = p.from_frames(f, shape)
+        np.testing.assert_array_equal(back, a)
+
+
+def test_frame_slices_cover_everything_once():
+    p = Pattern("P", core_dims=(1,), slice_dims=(0, 2))
+    shape = (5, 3, 4)
+    seen = np.zeros(shape, dtype=int)
+    for idx in p.frame_slices(shape, m=2):
+        seen[idx] += 1
+    np.testing.assert_array_equal(seen, np.ones(shape, int))
+
+
+def test_frame_slices_first_slice_dim_fastest():
+    p = Pattern("P", core_dims=(2,), slice_dims=(0, 1))
+    idxs = list(p.frame_slices((4, 2, 3), m=2))
+    # first group advances along dim0 (first slice dim)
+    assert idxs[0][0] == slice(0, 2)
+    assert idxs[1][0] == slice(2, 4)
+    # then dim1 increments
+    assert idxs[2][1] == slice(1, 2)
+
+
+def test_to_pspec():
+    p = Pattern("P", core_dims=(1, 2), slice_dims=(0,))
+    assert tuple(p.to_pspec("data")) == ("data", None, None)
+    p2 = p.with_shard_axes({1: "model"})
+    assert tuple(p2.to_pspec("data")) == ("data", "model", None)
+
+
+def test_pattern_from_labels_and_dataset():
+    ds = DataSet("tomo", (8, 6, 4), np.float32, ("theta", "y", "x"))
+    pat = ds.add_pattern("SINOGRAM", core=("theta", "x"), slice_=("y",))
+    assert pat.core_dims == (0, 2)
+    assert pat.slice_dims == (1,)
+    with pytest.raises(ValueError):
+        pattern_from_labels("B", ("a", "b"), core=("zz",), slice_=("a",))
+    with pytest.raises(KeyError):
+        ds.get_pattern("NOPE")
+
+
+def test_dataset_replacement_template():
+    ds = DataSet("t", (4, 4), np.float32, ("a", "b"))
+    ds.add_pattern("P", core=("a",), slice_=("b",))
+    like = ds.like("t2")
+    assert like.shape == ds.shape and "P" in like.patterns
+    like2 = ds.like("t3", shape=(2, 2, 2), axis_labels=("x", "y", "z"))
+    assert like2.patterns == {}
