@@ -1,0 +1,103 @@
+"""Service-layer benchmark: jobs/sec for 1 vs many concurrent pipelines,
+and the compiled-plugin cache effect — resubmitting an identical process
+list must skip every jax.jit retrace, so the cache-hit job's wall time
+sits well under the first (cold) job's.
+
+Standalone:   PYTHONPATH=src python benchmarks/bench_service.py
+Harness:      python -m benchmarks.run   (row prefix ``service_``)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+from repro.service import CompileCache, JobQueue, PipelineScheduler
+from repro.core import ShardedTransport
+from repro.tomo import standard_chain
+
+N_DET, N_ANGLES, N_ROWS = 48, 48, 2
+
+
+def _chain(seed: int):
+    return standard_chain(n_det=N_DET, n_angles=N_ANGLES, n_rows=N_ROWS,
+                          seed=seed)
+
+
+def _mk_sched(n_workers: int, cache: CompileCache, batch: bool = False
+              ) -> tuple[JobQueue, PipelineScheduler]:
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    q = JobQueue()
+    sched = PipelineScheduler(
+        q, n_workers=n_workers, compile_cache=cache,
+        batch_identical=batch, batch_max=8,
+        transport_factory=lambda job: ShardedTransport(
+            mesh, donate=not batch, compile_cache=cache))
+    return q, sched
+
+
+def _run_jobs(q, sched, seeds) -> list:
+    jobs = [q.submit(_chain(s)) for s in seeds]
+    sched.start()
+    assert sched.drain(timeout=600), "benchmark jobs timed out"
+    sched.shutdown()
+    bad = [j for j in jobs if j.state.value != "done"]
+    assert not bad, [j.snapshot() for j in bad]
+    return jobs
+
+def run(report):
+    # -- compile-cache: cold first job vs identical resubmission -------
+    cache = CompileCache()
+    q, sched = _mk_sched(1, cache)
+    (first,) = _run_jobs(q, sched, [0])
+    q2, sched2 = _mk_sched(1, cache)
+    (resub,) = _run_jobs(q2, sched2, [1])     # same chain, new dataset
+    st = cache.stats()
+    report("service_first_job", first.wall * 1e6,
+           f"cold: {st['misses']} plugin compiles")
+    report("service_cache_hit_job", resub.wall * 1e6,
+           f"hits={st['hits']} speedup={first.wall / resub.wall:.1f}x "
+           f"(MUST be < first-job wall)")
+    assert resub.wall < first.wall, (
+        f"cache-hit job ({resub.wall:.2f}s) not faster than cold job "
+        f"({first.wall:.2f}s)")
+
+    # -- throughput: 1 worker vs many, warmed cache --------------------
+    n_jobs = 6
+    base = None
+    for workers in (1, 2, 4):
+        qn, schedn = _mk_sched(workers, cache)
+        jobs = _run_jobs(qn, schedn, range(2, 2 + n_jobs))
+        wall = max(j.finished_at for j in jobs) - min(j.started_at
+                                                      for j in jobs)
+        jps = n_jobs / wall
+        base = base or jps
+        report(f"service_throughput_w{workers}", wall / n_jobs * 1e6,
+               f"{jps:.2f} jobs/s ({jps / base:.2f}x vs 1 worker)")
+
+    # -- gang batching: N jobs, one compiled call per plugin step ------
+    gcache = CompileCache()
+    qg, schedg = _mk_sched(1, gcache, batch=True)
+    jobs = _run_jobs(qg, schedg, range(20, 24))
+    wall = max(j.finished_at for j in jobs) - min(j.started_at
+                                                  for j in jobs)
+    report("service_gang_4jobs", wall / 4 * 1e6,
+           f"{4 / wall:.2f} jobs/s, {schedg.gangs_run} gang(s), "
+           f"{gcache.stats()['misses']} compiles total")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    run(report)
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

@@ -16,9 +16,9 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     from . import (bench_chunking, bench_lm, bench_profile, bench_recon,
-                   bench_scaling)
+                   bench_scaling, bench_service)
     for mod in (bench_chunking, bench_profile, bench_recon, bench_scaling,
-                bench_lm):
+                bench_service, bench_lm):
         try:
             mod.run(report)
         except Exception as e:  # keep the harness going

@@ -48,15 +48,129 @@ class PluginRunner:
         self.datasets: dict[str, DataSet] = {}
         #: every dataset ever produced (for the NeXus-style manifest)
         self.lineage: list[DataSet] = []
+        self._prepared = False
+        self._groups: list[list[BasePlugin]] = []
+        self._step_i = 0
+        self._in_step = False
 
     # ------------------------------------------------------------------
     def run(self) -> dict[str, DataSet]:
-        self.process_list.check()
-        loaders, processors, savers = self._split()
-        self._setup_phase(loaders, processors, savers)
-        self._main_phase(processors)
-        self._finalise(savers)
+        self.prepare()
+        while self.step():
+            pass
+        self.finalise()
         return self.datasets
+
+    # -- resumable stepping interface (service layer) -------------------
+    def prepare(self) -> "PluginRunner":
+        """Check the process list and run the setup phase; after this the
+        runner is a sequence of ``n_steps`` resumable plugin steps."""
+        if self._prepared:
+            return self
+        self.process_list.check()
+        self._loaders, self._processors, self._savers = self._split()
+        self._setup_phase(self._loaders, self._processors, self._savers)
+        self._groups = (self._fusion_groups(self._processors) if self.fuse
+                        else [[p] for p in self._processors])
+        self._step_i = 0
+        self._prepared = True
+        return self
+
+    @property
+    def n_steps(self) -> int:
+        return len(self._groups)
+
+    @property
+    def current_step(self) -> int:
+        return self._step_i
+
+    def step_labels(self) -> list[str]:
+        return ["+".join(p.name for p in g) for g in self._groups]
+
+    def begin_step(self) -> list[BasePlugin] | None:
+        """Rebind the next group's in_data to the live dataset registry
+        and run pre_process.  Returns the group, or None when exhausted.
+        The caller must execute the group (via the transport) and then
+        call :meth:`complete_step` — this split lets the service layer
+        batch identical steps from several runners into one call."""
+        if not self._prepared:
+            self.prepare()
+        if self._in_step:
+            raise RuntimeError("begin_step called twice without "
+                               "complete_step")
+        if self._step_i >= len(self._groups):
+            return None
+        group = self._groups[self._step_i]
+        devices = getattr(getattr(self.transport, "mesh", None), "size", 1)
+        for p in group:
+            for pd in p.in_data:
+                if pd.dataset.name in self.datasets:
+                    pd.dataset = self.datasets[pd.dataset.name]
+            with self.profiler.timer(p.name, "pre", devices):
+                p.pre_process()
+        self._in_step = True
+        return group
+
+    def complete_step(self) -> None:
+        """Post-process + replacement semantics for the group started by
+        :meth:`begin_step`, then advance the step cursor."""
+        if not self._in_step:
+            raise RuntimeError("complete_step without begin_step")
+        devices = getattr(getattr(self.transport, "mesh", None), "size", 1)
+        for p in self._groups[self._step_i]:
+            with self.profiler.timer(p.name, "post", devices):
+                p.post_process()
+            self._replace(p)
+        self._in_step = False
+        self._step_i += 1
+
+    def step(self) -> bool:
+        """Run one plugin (or fused group).  Returns False when the chain
+        is exhausted."""
+        group = self.begin_step()
+        if group is None:
+            return False
+        devices = getattr(getattr(self.transport, "mesh", None), "size", 1)
+        if len(group) == 1:
+            p = group[0]
+            with self.profiler.timer(p.name, "process", devices):
+                self.transport.run_plugin(p)
+        else:
+            label = "+".join(p.name for p in group)
+            with self.profiler.timer(label, "process", devices, fused=True):
+                self.transport.run_fused(group)
+        self.complete_step()
+        return True
+
+    def skip_to(self, step: int,
+                datasets: dict[str, Any] | None = None) -> None:
+        """Resume support: mark the first ``step`` groups as already done
+        (replaying their replacement semantics WITHOUT executing them) and
+        restore the surviving datasets' contents from ``datasets``
+        (name -> host array, e.g. loaded from a checkpoint)."""
+        self.prepare()
+        if self._step_i != 0:
+            raise RuntimeError("skip_to on a runner that already stepped")
+        if not 0 <= step <= len(self._groups):
+            raise ValueError(f"step {step} outside 0..{len(self._groups)}")
+        for group in self._groups[:step]:
+            for p in group:
+                self._replace(p)
+        self._step_i = step
+        for name, arr in (datasets or {}).items():
+            if name not in self.datasets:
+                continue
+            ds = self.datasets[name]
+            if hasattr(ds.backing, "write_all"):
+                ds.backing.write_all(arr)
+            else:
+                ds.backing = arr
+
+    def finalise(self) -> None:
+        if self._step_i < len(self._groups):
+            raise RuntimeError(
+                f"finalise at step {self._step_i}/{len(self._groups)}")
+        self._finalise(self._savers)
 
     # ------------------------------------------------------------------
     def _split(self):
@@ -125,43 +239,6 @@ class PluginRunner:
             self._planned.append((p, outs))
             for ds in outs:
                 sym[ds.name] = ds
-
-    def _main_phase(self, processors):
-        groups = self._fusion_groups(processors) if self.fuse else \
-            [[p] for p in processors]
-        for group in groups:
-            if len(group) == 1:
-                self._run_one(group[0])
-            else:
-                self._run_group(group)
-
-    def _run_one(self, p: BasePlugin):
-        # re-bind in_data to the *current* dataset registry (replacement
-        # semantics may have swapped same-named datasets).
-        for pd in p.in_data:
-            pd.dataset = self.datasets[pd.dataset.name]
-        devices = getattr(getattr(self.transport, "mesh", None), "size", 1)
-        with self.profiler.timer(p.name, "pre", devices):
-            p.pre_process()
-        with self.profiler.timer(p.name, "process", devices):
-            self.transport.run_plugin(p)
-        with self.profiler.timer(p.name, "post", devices):
-            p.post_process()
-        self._replace(p)
-
-    def _run_group(self, group):
-        for p in group:
-            for pd in p.in_data:
-                if pd.dataset.name in self.datasets:
-                    pd.dataset = self.datasets[pd.dataset.name]
-            p.pre_process()
-        devices = getattr(getattr(self.transport, "mesh", None), "size", 1)
-        label = "+".join(p.name for p in group)
-        with self.profiler.timer(label, "process", devices, fused=True):
-            self.transport.run_fused(group)
-        for p in group:
-            p.post_process()
-            self._replace(p)
 
     def _replace(self, p: BasePlugin):
         """out_dataset replaces in_dataset of the same name (Fig 6 (i))."""

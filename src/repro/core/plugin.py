@@ -17,6 +17,7 @@ GPU-communicator behaviour.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Any, Callable, Sequence
 
 import numpy as np
@@ -68,6 +69,15 @@ class BasePlugin:
     driver: MeshDriver = CPU_DRIVER
     #: user-tunable parameters with defaults; overridden per process-list
     parameters: dict[str, Any] = {}
+    #: params that select WHICH data is processed (file path, scan seed)
+    #: rather than HOW — excluded from the chain signature so jobs over
+    #: different datasets still count as "the same pipeline"
+    data_params: tuple[str, ...] = ()
+    #: instance attrs that must stay trace-time constants even though
+    #: they are arrays/floats (e.g. a float used in python control flow
+    #: inside process_frames) — excluded from jit_constants and folded
+    #: into the cache key instead
+    static_attrs: tuple[str, ...] = ()
 
     def __init__(self, **params):
         self.params = {**self.__class__.parameters}
@@ -125,8 +135,83 @@ class BasePlugin:
     def get_param(self, key: str):
         return self.params[key]
 
+    # -- compile-cache support (service layer) --------------------------
+    #: instance attrs that never feed process_frames
+    _NON_CONST_ATTRS = frozenset({
+        "params", "in_dataset_names", "out_dataset_names",
+        "in_data", "out_data"})
+
+    def jit_constants(self) -> dict[str, Any]:
+        """Setup-derived values that ``process_frames`` reads off ``self``
+        and that VARY with the input data (dark/flat fields, filter
+        banks, angles, scalar calibrations...).  The sharded transport
+        passes these as jit *arguments* rather than letting them bake in
+        as trace-time constants, so one compiled function serves every
+        plugin instance with the same :meth:`cache_signature` — the
+        paper's "same pipeline, many datasets" case.
+
+        Default: every instance attribute that is an array or a python
+        float.  ints/strs/bools stay static (they select shapes/branches)
+        and are folded into :meth:`cache_signature` instead."""
+        consts: dict[str, Any] = {}
+        for k, v in vars(self).items():
+            if k in self._NON_CONST_ATTRS or k in self.static_attrs:
+                continue
+            if isinstance(v, np.ndarray) or (
+                    hasattr(v, "dtype") and hasattr(v, "shape")
+                    and hasattr(v, "__array__") and not isinstance(v, DataSet)):
+                consts[k] = v
+            elif isinstance(v, float) and not isinstance(v, bool):
+                consts[k] = v
+        return consts
+
+    def cache_signature(self) -> tuple:
+        """Hashable static identity of this plugin for the compile cache:
+        class + jsonable params + static (int/str/bool/None) attrs.  Two
+        instances with equal signatures, equal in/out dataset specs and
+        structurally-equal :meth:`jit_constants` may share one compiled
+        function.  ``data_params`` are excluded: declaring a param there
+        is a contract that its effect on ``process_frames`` flows ONLY
+        through :meth:`jit_constants` (arrays/floats built in setup),
+        never as a static trace-time value."""
+        sig_params: dict[str, Any] = {}
+        unsignable: list[tuple] = []
+        for k, v in sorted(self.params.items()):
+            if k in self.data_params:
+                continue
+            if _is_jsonable(v):
+                sig_params[k] = v
+            else:
+                # a param we cannot fingerprint (callable, object...) —
+                # pin the entry to THIS instance's value rather than
+                # silently sharing a compiled program across different
+                # behaviours; declare it in data_params if it is data
+                unsignable.append((k, type(v).__qualname__, id(v)))
+        params_j = json.dumps(sig_params, sort_keys=True)
+        statics = tuple(
+            (k, repr(v))
+            for k, v in sorted(vars(self).items())
+            if k not in self._NON_CONST_ATTRS
+            and (isinstance(v, (bool, int, str, type(None)))
+                 or k in self.static_attrs
+                 # jsonable containers (e.g. a kernel list derived in
+                 # setup) are trace-time constants too — key on them so
+                 # differing values never share a program
+                 or (isinstance(v, (list, tuple, dict))
+                     and _is_jsonable(v))))
+        return (f"{type(self).__module__}.{type(self).__qualname__}",
+                params_j, tuple(unsignable), statics)
+
     def __repr__(self):
         return f"{type(self).__name__}({self.name})"
+
+
+def _is_jsonable(v) -> bool:
+    try:
+        json.dumps(v)
+        return True
+    except TypeError:
+        return False
 
 
 class BaseFilter(BasePlugin):
@@ -209,3 +294,21 @@ class LambdaFilter(BaseFilter):
 
     def process_frames(self, frames):
         return self._fn(frames[0])
+
+    _fn_tokens = iter(range(1, 1 << 62))
+
+    def cache_signature(self):
+        # the wrapped callable is invisible to the default signature;
+        # pin the cache entry to this exact function object via a token
+        # stored ON the function (id() values can be recycled after GC,
+        # which would alias a dead lambda's compiled program)
+        try:
+            token = self._fn.__savu_cache_token__
+        except AttributeError:
+            token = next(LambdaFilter._fn_tokens)
+            try:
+                self._fn.__savu_cache_token__ = token
+            except (AttributeError, TypeError):
+                token = ("id", id(self._fn))   # unpinnable callable
+        return super().cache_signature() + (
+            ("fn", getattr(self._fn, "__qualname__", "?"), token),)

@@ -63,8 +63,40 @@ class Transport:
         out = ds.materialise()
         return np.asarray(out)
 
+    def stats(self) -> dict[str, Any]:
+        """Service-layer hook: transport-specific counters (IO traffic,
+        compile-cache hits...).  Keys are transport-defined."""
+        return {}
+
     def close(self) -> None:
         pass
+
+
+class LocalCompileCache:
+    """Minimal per-transport compiled-function cache.  The service layer
+    substitutes a process-level, thread-safe
+    :class:`repro.service.CompileCache` via the ``compile_cache``
+    constructor argument so that many concurrent pipelines share one
+    cache (same duck type: ``get_or_build`` + ``stats``)."""
+
+    def __init__(self):
+        self._entries: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_build(self, key, builder):
+        try:
+            fn = self._entries[key]
+            self.hits += 1
+            return fn
+        except KeyError:
+            self.misses += 1
+            fn = self._entries[key] = builder()
+            return fn
+
+    def stats(self) -> dict[str, Any]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries)}
 
 
 # ======================================================================
@@ -110,10 +142,12 @@ class ShardedTransport(Transport):
 
     name = "sharded"
 
-    def __init__(self, mesh: Mesh, donate: bool = True):
+    def __init__(self, mesh: Mesh, donate: bool = True,
+                 compile_cache=None):
         self.mesh = mesh
         self.donate = donate
-        self._compiled_cache: dict = {}
+        self.compile_cache = (compile_cache if compile_cache is not None
+                              else LocalCompileCache())
 
     def allocate(self, ds: DataSet, now: Pattern, next_: Pattern | None
                  ) -> None:
@@ -143,38 +177,80 @@ class ShardedTransport(Transport):
         return ds.backing
 
     def _plugin_fn(self, plugin: BasePlugin):
+        """Traceable (consts, *arrays) -> outs.  ``consts`` is the
+        plugin's :meth:`jit_constants` dict passed as jit ARGUMENTS (not
+        trace-time closure constants), so a compiled function can be
+        replayed for a different plugin instance — same chain, new
+        dataset — without retracing."""
         in_pats = [pd.pattern for pd in plugin.in_data]
         out_pats = [pd.pattern for pd in plugin.out_data]
         out_shapes = [pd.dataset.shape for pd in plugin.out_data]
         out_dtypes = [pd.dataset.dtype for pd in plugin.out_data]
         m = plugin.in_data[0].n_frames if plugin.in_data else 1
+        const_keys = tuple(sorted(plugin.jit_constants()))
 
-        def fn(*arrays):
-            frames = [p.to_frames(a) for p, a in zip(in_pats, arrays)]
-            nf = frames[0].shape[0]
-            if m == 1:
-                res = jax.vmap(
-                    lambda *fs: _as_list(
-                        plugin.process_frames([f[None] for f in fs])),
-                )(*frames)
-                res = [r.reshape((nf,) + r.shape[2:]) for r in res]
-            else:
-                if nf % m:
-                    raise ValueError(
-                        f"sharded transport requires n_frames({m}) | "
-                        f"total frames({nf}) for plugin {plugin.name}")
-                grouped = [f.reshape((nf // m, m) + f.shape[1:])
-                           for f in frames]
-                res = jax.vmap(
-                    lambda *fs: _as_list(plugin.process_frames(list(fs))),
-                )(*grouped)
-                res = [r.reshape((nf,) + r.shape[2:]) for r in res]
-            outs = []
-            for r, pat, shp, dt in zip(res, out_pats, out_shapes, out_dtypes):
-                outs.append(pat.from_frames(r, shp).astype(dt))
-            return tuple(outs)
+        def fn(consts, *arrays):
+            saved = {k: getattr(plugin, k) for k in const_keys}
+            for k in const_keys:
+                setattr(plugin, k, consts[k])
+            try:
+                frames = [p.to_frames(a) for p, a in zip(in_pats, arrays)]
+                nf = frames[0].shape[0]
+                if m == 1:
+                    res = jax.vmap(
+                        lambda *fs: _as_list(
+                            plugin.process_frames([f[None] for f in fs])),
+                    )(*frames)
+                    res = [r.reshape((nf,) + r.shape[2:]) for r in res]
+                else:
+                    if nf % m:
+                        raise ValueError(
+                            f"sharded transport requires n_frames({m}) | "
+                            f"total frames({nf}) for plugin {plugin.name}")
+                    grouped = [f.reshape((nf // m, m) + f.shape[1:])
+                               for f in frames]
+                    res = jax.vmap(
+                        lambda *fs: _as_list(plugin.process_frames(list(fs))),
+                    )(*grouped)
+                    res = [r.reshape((nf,) + r.shape[2:]) for r in res]
+                outs = []
+                for r, pat, shp, dt in zip(res, out_pats, out_shapes,
+                                           out_dtypes):
+                    outs.append(pat.from_frames(r, shp).astype(dt))
+                return tuple(outs)
+            finally:
+                for k, v in saved.items():
+                    setattr(plugin, k, v)
 
         return fn
+
+    # -- compile-cache keys --------------------------------------------
+    def _mesh_key(self) -> tuple:
+        return (tuple(self.mesh.axis_names), tuple(self.mesh.devices.shape),
+                tuple(int(d.id) for d in self.mesh.devices.flat))
+
+    def _plugin_key(self, plugin: BasePlugin,
+                    consts: dict | None = None) -> tuple:
+        """Cache key: (plugin static identity, in/out dataset specs,
+        consts structure, driver, mesh, donation).  Everything that
+        selects a DIFFERENT compiled program must appear here."""
+        def pd_meta(pd):
+            return (pd.dataset.shape, str(np.dtype(pd.dataset.dtype)),
+                    pd.pattern_name, pd.n_frames)
+        if consts is None:
+            consts = plugin.jit_constants()
+        cmeta = tuple(
+            (k, tuple(np.shape(v)), str(np.result_type(v)))
+            for k, v in sorted(consts.items()))
+        return ("plugin", plugin.cache_signature(),
+                tuple(pd_meta(pd) for pd in plugin.in_data),
+                tuple(pd_meta(pd) for pd in plugin.out_data),
+                cmeta, plugin.driver.axes,
+                tuple(sorted(plugin.driver.submesh.items())),
+                self._mesh_key(), self.donate)
+
+    def _replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, PartitionSpec())
 
     def compile_plugin(self, plugin: BasePlugin, lower_only: bool = False):
         da = plugin.driver.data_axis
@@ -182,17 +258,22 @@ class ShardedTransport(Transport):
         out_sh = tuple(self._sharding(pd.pattern, da)
                        for pd in plugin.out_data)
         fn = self._plugin_fn(plugin)
-        jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
-                      donate_argnums=tuple(range(len(in_sh)))
-                      if self.donate else ())
         if lower_only:
+            consts = plugin.jit_constants()
+            jfn = jax.jit(lambda *arrays: fn(consts, *arrays),
+                          in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=tuple(range(len(in_sh)))
+                          if self.donate else ())
             specs = [jax.ShapeDtypeStruct(pd.dataset.shape,
                                           pd.dataset.dtype, sharding=s)
                      for pd, s in zip(plugin.in_data, in_sh)]
             return jfn.lower(*specs)
-        return jfn
+        return jax.jit(fn, in_shardings=(self._replicated(), *in_sh),
+                       out_shardings=out_sh,
+                       donate_argnums=tuple(range(1, 1 + len(in_sh)))
+                       if self.donate else ())
 
-    def run_plugin(self, plugin: BasePlugin) -> list[Any]:
+    def _device_in(self, plugin: BasePlugin) -> list[Any]:
         da = plugin.driver.data_axis
         arrays = []
         for pd in plugin.in_data:
@@ -201,9 +282,16 @@ class ShardedTransport(Transport):
                 a = jax.device_put(np.asarray(a),
                                    self._sharding(pd.pattern, da))
             arrays.append(a)
+        return arrays
+
+    def run_plugin(self, plugin: BasePlugin) -> list[Any]:
+        arrays = self._device_in(plugin)
+        consts = plugin.jit_constants()
         with self.mesh:
-            jfn = self.compile_plugin(plugin)
-            outs = list(jfn(*arrays))
+            jfn = self.compile_cache.get_or_build(
+                self._plugin_key(plugin, consts),
+                lambda: self.compile_plugin(plugin))
+            outs = list(jfn(consts, *arrays))
         for pd, o in zip(plugin.out_data, outs):
             pd.dataset.backing = o
         return outs
@@ -214,35 +302,92 @@ class ShardedTransport(Transport):
         the pattern-transition collectives with compute.  Requires the
         chain to be linear (each plugin consumes the previous output)."""
         first, last = plugins[0], plugins[-1]
-        da = first.driver.data_axis
-        in_sh = tuple(self._sharding(pd.pattern, da) for pd in first.in_data)
+        in_sh = tuple(self._sharding(pd.pattern, first.driver.data_axis)
+                      for pd in first.in_data)
         out_sh = tuple(self._sharding(pd.pattern, last.driver.data_axis)
                        for pd in last.out_data)
-        fns = [self._plugin_fn(p) for p in plugins]
-        mid_sh = [tuple(self._sharding(pd.pattern, p.driver.data_axis)
-                        for pd in p.out_data) for p in plugins]
 
-        def chain(*arrays):
-            cur = arrays
-            for f, shs in zip(fns, mid_sh):
-                cur = f(*cur)
-                cur = tuple(jax.lax.with_sharding_constraint(c, s)
-                            for c, s in zip(cur, shs))
-            return cur
+        def builder():
+            fns = [self._plugin_fn(p) for p in plugins]
+            mid_sh = [tuple(self._sharding(pd.pattern, p.driver.data_axis)
+                            for pd in p.out_data) for p in plugins]
 
-        arrays = []
-        for pd in first.in_data:
-            a = pd.dataset.materialise()
-            if not isinstance(a, jax.Array):
-                a = jax.device_put(np.asarray(a),
-                                   self._sharding(pd.pattern, da))
-            arrays.append(a)
+            def chain(all_consts, *arrays):
+                cur = arrays
+                for f, consts, shs in zip(fns, all_consts, mid_sh):
+                    cur = f(consts, *cur)
+                    cur = tuple(jax.lax.with_sharding_constraint(c, s)
+                                for c, s in zip(cur, shs))
+                return cur
+
+            return jax.jit(chain,
+                           in_shardings=(self._replicated(), *in_sh),
+                           out_shardings=out_sh)
+
+        arrays = self._device_in(first)
+        key = ("fused", tuple(self._plugin_key(p) for p in plugins))
         with self.mesh:
-            jfn = jax.jit(chain, in_shardings=in_sh, out_shardings=out_sh)
-            outs = list(jfn(*arrays))
+            jfn = self.compile_cache.get_or_build(key, builder)
+            outs = list(jfn(tuple(p.jit_constants() for p in plugins),
+                            *arrays))
         for pd, o in zip(last.out_data, outs):
             pd.dataset.backing = o
         return outs
+
+    # -- gang execution (service layer): N jobs, ONE compiled call -----
+    def run_plugin_batch(self, plugins: Sequence[BasePlugin]) -> None:
+        """Execute the SAME plugin step from several concurrent jobs as a
+        single compiled call: inputs are stacked along a new leading job
+        axis and the plugin function is vmapped over it — setup-derived
+        constants (dark/flat fields, filter banks...) ride along as
+        stacked arguments, so jobs with different calibration data still
+        share the one program.  All plugins must agree on
+        :meth:`_plugin_key` (identical chain step + shapes)."""
+        p0 = plugins[0]
+        k0 = self._plugin_key(p0)
+        for p in plugins[1:]:
+            if self._plugin_key(p) != k0:
+                raise ValueError(
+                    f"run_plugin_batch: plugin {p.name} does not match "
+                    f"the batch signature of {p0.name}")
+        n = len(plugins)
+        da = p0.driver.data_axis
+
+        def batched(sh: NamedSharding) -> NamedSharding:
+            return NamedSharding(self.mesh, PartitionSpec(None, *sh.spec))
+
+        in_sh = tuple(batched(self._sharding(pd.pattern, da))
+                      for pd in p0.in_data)
+        out_sh = tuple(batched(self._sharding(pd.pattern, da))
+                       for pd in p0.out_data)
+
+        def builder():
+            fn = self._plugin_fn(p0)
+            return jax.jit(
+                lambda consts, *arrays: jax.vmap(fn)(consts, *arrays),
+                in_shardings=(self._replicated(), *in_sh),
+                out_shardings=out_sh)
+
+        arrays = []
+        for i in range(len(p0.in_data)):
+            ins = [p.in_data[i].dataset.materialise() for p in plugins]
+            if all(isinstance(a, jax.Array) for a in ins):
+                stack = jnp.stack(ins)          # stays on device
+            else:
+                stack = np.stack([np.asarray(a) for a in ins])
+            arrays.append(jax.device_put(stack, in_sh[i]))
+        consts = [p.jit_constants() for p in plugins]
+        stacked_consts = jax.tree.map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *consts)
+        with self.mesh:
+            jfn = self.compile_cache.get_or_build(("batch", n, k0), builder)
+            outs = list(jfn(stacked_consts, *arrays))
+        for j, p in enumerate(plugins):
+            for pd, o in zip(p.out_data, outs):
+                pd.dataset.backing = o[j]
+
+    def stats(self) -> dict[str, Any]:
+        return {"compile_cache": self.compile_cache.stats()}
 
 
 # ======================================================================
@@ -492,6 +637,9 @@ class ChunkedFileTransport(Transport):
         for cf in self.files.values():
             s = s.merge(cf.stats)
         return s
+
+    def stats(self) -> dict[str, Any]:
+        return {"io": dataclasses.asdict(self.total_stats())}
 
     def close(self) -> None:
         for cf in self.files.values():

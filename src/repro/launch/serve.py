@@ -21,7 +21,8 @@ from .mesh import make_host_mesh
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b", choices=ARCH_IDS)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)

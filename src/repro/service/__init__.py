@@ -1,0 +1,14 @@
+# The service layer — from processing *framework* to facility *service*
+# (the step Nanosurveyor/Daisy make explicit): a multi-tenant scheduler
+# that runs many process lists concurrently over shared workers, with a
+# process-level compiled-plugin cache and checkpoint/resume.
+from .compile_cache import CompileCache
+from .checkpoint import CheckpointStore
+from .job import Job, JobState, chain_signature
+from .queue import JobQueue, QueueFull
+from .scheduler import PipelineScheduler
+
+__all__ = [
+    "Job", "JobState", "chain_signature", "JobQueue", "QueueFull",
+    "CompileCache", "CheckpointStore", "PipelineScheduler",
+]

@@ -1,0 +1,127 @@
+"""Pipeline checkpoint/resume — Savu's MPI checkpointing, service-grade.
+
+Savu checkpoints a run by keeping every intermediate HDF5 file plus a
+NeXus file that links them; a killed job restarts at the last finished
+plugin.  Here each job gets a directory under the store root holding
+
+* ``checkpoint.nxs.json`` — the manifest: chain signature, completed
+  plugin steps, and one entry per *surviving* dataset (name, shape,
+  dtype, provenance, patterns, file link) — the same schema as the
+  runner's ``savu_manifest.nxs.json``,
+* one ``<dataset>.npy`` per surviving dataset (the HDF5 stand-in).
+
+Writes are atomic (tmp + rename) so a kill mid-checkpoint leaves the
+previous consistent state.  ``restore`` validates the chain signature —
+a checkpoint from a different process list is ignored, not half-applied.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any
+
+import numpy as np
+
+from ..core.framework import PluginRunner
+from .job import chain_signature
+
+
+def _sig_str(sig: tuple) -> str:
+    return json.dumps(sig, sort_keys=True)
+
+
+class CheckpointStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _dir(self, job_id: str) -> str:
+        return os.path.join(self.root, job_id)
+
+    def _manifest_path(self, job_id: str) -> str:
+        return os.path.join(self._dir(job_id), "checkpoint.nxs.json")
+
+    # ------------------------------------------------------------------
+    def save(self, job_id: str, runner: PluginRunner) -> None:
+        """Persist the registry of surviving datasets + completion state
+        after a finished plugin step."""
+        d = self._dir(job_id)
+        os.makedirs(d, exist_ok=True)
+        entries = []
+        for name, ds in runner.datasets.items():
+            if not ds.is_populated:
+                continue
+            # a donated device buffer (ShardedTransport donate=True) is
+            # dead the moment its consumer ran; such a dataset cannot be
+            # read OR needed downstream — skip it rather than crash
+            if getattr(ds.backing, "is_deleted", None) and \
+                    ds.backing.is_deleted():
+                continue
+            arr = runner.transport.read(ds)
+            path = os.path.join(d, f"{name}.npy")
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as fh:
+                np.save(fh, np.asarray(arr))
+            os.replace(tmp, path)
+            entries.append({
+                "name": name, "shape": list(ds.shape),
+                "dtype": str(np.dtype(ds.dtype)),
+                "axis_labels": list(ds.axis_labels),
+                "produced_by": ds.produced_by,
+                "patterns": sorted(ds.patterns),
+                "file": os.path.basename(path)})
+        manifest = {
+            "job_id": job_id,
+            "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "chain": _sig_str(chain_signature(runner.process_list)),
+            "completed_steps": runner.current_step,
+            "n_steps": runner.n_steps,
+            "step_labels": runner.step_labels(),
+            "datasets": entries,
+        }
+        tmp = self._manifest_path(job_id) + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(manifest, fh, indent=2)
+        os.replace(tmp, self._manifest_path(job_id))
+
+    # ------------------------------------------------------------------
+    def load(self, job_id: str) -> dict[str, Any] | None:
+        try:
+            with open(self._manifest_path(job_id)) as fh:
+                return json.load(fh)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def restore(self, job_id: str, runner: PluginRunner) -> int:
+        """Fast-forward a PREPARED-or-fresh runner to the checkpointed
+        step, reloading surviving dataset contents.  Returns the number
+        of plugin steps skipped (0 = no usable checkpoint)."""
+        man = self.load(job_id)
+        if man is None:
+            return 0
+        runner.prepare()
+        if man["chain"] != _sig_str(chain_signature(runner.process_list)):
+            return 0                      # different pipeline: start over
+        # the step basis must match too: the same chain re-run under a
+        # different fuse setting has different groups, and skipping N of
+        # THOSE would skip plugins that never ran
+        if (man.get("n_steps") != runner.n_steps
+                or man.get("step_labels") != runner.step_labels()):
+            return 0
+        step = int(man["completed_steps"])
+        if not 0 < step <= runner.n_steps:
+            return 0
+        data = {}
+        for ent in man["datasets"]:
+            path = os.path.join(self._dir(job_id), ent["file"])
+            try:
+                data[ent["name"]] = np.load(path)
+            except (FileNotFoundError, ValueError):
+                return 0                  # torn checkpoint: start over
+        runner.skip_to(step, data)
+        return step
+
+    def clear(self, job_id: str) -> None:
+        shutil.rmtree(self._dir(job_id), ignore_errors=True)

@@ -1,0 +1,81 @@
+"""Process-level compiled-plugin cache.
+
+The paper's headline workload is "the same pipeline over many datasets":
+at a facility, hundreds of scans a day run one tuned process list.  On
+the jax substrate the expensive part of a repeat submission is the
+``jax.jit`` retrace+compile of every plugin, so the service keeps ONE
+cache for the whole process, shared by every job's
+:class:`~repro.core.transport.ShardedTransport`.
+
+Keys come from ``ShardedTransport._plugin_key``: (plugin static identity,
+in/out dataset shapes/dtypes/patterns, constants structure, driver, mesh,
+donation).  Values are compiled callables whose setup-derived constants
+(dark/flat fields, filter banks...) are jit *arguments*, so a hit is
+valid across jobs even when calibration data differs.
+
+Thread-safety: one build per key even under concurrent misses — losers
+of the build race block on the winner's per-key event rather than
+compiling twice.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable
+
+
+class CompileCache:
+    def __init__(self, max_entries: int | None = None):
+        self.max_entries = max_entries
+        self._entries: dict[Any, Any] = {}
+        self._building: dict[Any, threading.Event] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.build_s = 0.0               # total wall spent compiling
+
+    def get_or_build(self, key, builder: Callable[[], Any]):
+        while True:
+            with self._lock:
+                if key in self._entries:
+                    self.hits += 1
+                    return self._entries[key]
+                ev = self._building.get(key)
+                if ev is None:
+                    self._building[key] = threading.Event()
+                    self.misses += 1
+                    break
+            ev.wait()                    # someone else is compiling this key
+        try:
+            t0 = time.perf_counter()
+            fn = builder()
+            with self._lock:
+                self.build_s += time.perf_counter() - t0
+                self._entries[key] = fn
+                if (self.max_entries is not None
+                        and len(self._entries) > self.max_entries):
+                    # FIFO eviction — plugin programs are all roughly the
+                    # same size; recency tracking is not worth the locking
+                    oldest = next(iter(self._entries))
+                    del self._entries[oldest]
+                    self.evictions += 1
+            return fn
+        finally:
+            with self._lock:
+                self._building.pop(key).set()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def stats(self) -> dict[str, Any]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "entries": len(self._entries),
+                    "evictions": self.evictions,
+                    "build_s": round(self.build_s, 4)}

@@ -1,0 +1,110 @@
+"""Pipeline jobs — one submitted process list, tracked from admission to
+completion.
+
+A job's lifecycle mirrors the paper's run states plus the service-layer
+extras: ``queued → checking → running(plugin i/N) → done | failed |
+cancelled``.  The *chain signature* (structural identity of the process
+list) is what the scheduler batches on and what the compile cache and
+checkpoint store validate against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+import time
+from typing import Any
+
+from ..core.framework import PluginRunner
+from ..core.plugin import _is_jsonable
+from ..core.process_list import ProcessList
+
+
+class JobState(str, enum.Enum):
+    QUEUED = "queued"
+    CHECKING = "checking"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+    def terminal(self) -> bool:
+        return self in (JobState.DONE, JobState.FAILED, JobState.CANCELLED)
+
+
+def chain_signature(process_list: ProcessList) -> tuple:
+    """Structural identity of a process list: per-entry (class, jsonable
+    params, dataset wiring).  Equal signatures ⇒ identical plugin chains
+    that may share compiled programs and be gang-executed; non-jsonable
+    params (inline arrays, geometry objects) are data, not structure, and
+    deliberately excluded."""
+    sig = []
+    for e in process_list.entries:
+        skip = set(getattr(e.cls, "data_params", ()))
+        jsonable, opaque = {}, []
+        for k, v in sorted(e.params.items()):
+            if k in skip:
+                continue
+            if _is_jsonable(v):
+                jsonable[k] = v
+            else:
+                # opaque params (callables, objects) can't be
+                # fingerprinted; keep at least the qualname so swapping
+                # e.g. LambdaFilter(fn=double) for fn=triple reads as a
+                # different pipeline (checkpoint restore must not mix)
+                opaque.append((k, getattr(v, "__qualname__",
+                                          type(v).__qualname__)))
+        sig.append((
+            f"{e.cls.__module__}.{e.cls.__qualname__}",
+            json.dumps(jsonable, sort_keys=True), tuple(opaque),
+            tuple(e.in_datasets), tuple(e.out_datasets)))
+    return tuple(sig)
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: str
+    process_list: ProcessList
+    priority: int = 0
+    seq: int = 0                         # submission order (FIFO tiebreak)
+    submitted_at: float = dataclasses.field(default_factory=time.time)
+    metadata: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    state: JobState = JobState.QUEUED
+    error: str | None = None
+    plugin_index: int = 0                # completed plugin steps
+    n_plugins: int = 0
+    resumed_from: int = 0                # >0: restored from a checkpoint
+    started_at: float | None = None
+    finished_at: float | None = None
+    #: the live runner (datasets/transport/profiler) once checking starts
+    runner: PluginRunner | None = None
+    chain_sig: tuple = ()
+
+    def __post_init__(self):
+        if not self.chain_sig:
+            self.chain_sig = chain_signature(self.process_list)
+
+    # ------------------------------------------------------------------
+    @property
+    def status(self) -> str:
+        if self.state is JobState.RUNNING:
+            return f"running(plugin {self.plugin_index}/{self.n_plugins})"
+        if self.state is JobState.FAILED:
+            return f"failed: {self.error}"
+        return self.state.value
+
+    @property
+    def wall(self) -> float | None:
+        if self.started_at is None:
+            return None
+        return (self.finished_at or time.time()) - self.started_at
+
+    def snapshot(self) -> dict[str, Any]:
+        return {"job_id": self.job_id, "state": self.state.value,
+                "status": self.status, "priority": self.priority,
+                "plugin_index": self.plugin_index,
+                "n_plugins": self.n_plugins,
+                "resumed_from": self.resumed_from,
+                "submitted_at": self.submitted_at, "wall": self.wall,
+                "error": self.error}

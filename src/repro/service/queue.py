@@ -1,0 +1,185 @@
+"""JobQueue — priority admission queue for pipeline jobs.
+
+Higher ``priority`` pops first; equal priorities are FIFO.  Admission
+control bounds the number of non-terminal jobs in the system
+(``max_pending``): past the bound, ``submit`` either raises
+:class:`QueueFull` (caller sheds load) or, with ``block=True``, applies
+backpressure by waiting for capacity.  ``get_batch`` pops the head job
+plus queued jobs with the SAME chain signature so the scheduler can gang
+them into one compiled call per plugin step.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Any, Callable
+
+from ..core.process_list import ProcessList
+from .job import Job, JobState
+
+
+class QueueFull(RuntimeError):
+    """Admission control rejected the submission (queue at max_pending)."""
+
+
+class JobQueue:
+    def __init__(self, max_pending: int | None = None,
+                 max_history: int | None = None):
+        """``max_history`` bounds retained TERMINAL jobs: beyond it the
+        oldest finished jobs are evicted (their runner — datasets,
+        device buffers, transport — released with them).  None keeps
+        everything, which is right for batch CLIs/tests that read
+        results after drain but leaks in a long-lived service."""
+        self.max_pending = max_pending
+        self.max_history = max_history
+        self._heap: list[tuple[int, int, Job]] = []
+        self._jobs: dict[str, Job] = {}
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._capacity = threading.Condition(self._lock)
+        self._seq = itertools.count()
+
+    # -- admission ------------------------------------------------------
+    def _pending_locked(self) -> int:
+        return sum(1 for j in self._jobs.values() if not j.state.terminal())
+
+    def _prune_locked(self) -> None:
+        if self.max_history is None:
+            return
+        terminal = sorted((j for j in self._jobs.values()
+                           if j.state.terminal()), key=lambda j: j.seq)
+        for j in terminal[:max(0, len(terminal) - self.max_history)]:
+            j.runner = None
+            del self._jobs[j.job_id]
+
+    def submit(self, process_list: ProcessList, *, priority: int = 0,
+               job_id: str | None = None, block: bool = False,
+               timeout: float | None = None,
+               metadata: dict[str, Any] | None = None) -> Job:
+        def check_id():
+            # re-checked after every capacity wait: two blocked
+            # submitters with the same explicit id must not both insert
+            if (job_id in self._jobs
+                    and not self._jobs[job_id].state.terminal()):
+                raise ValueError(f"job id {job_id!r} already active")
+
+        with self._lock:
+            self._prune_locked()
+            seq = next(self._seq)
+            job_id = job_id or f"job-{seq:04d}"
+            check_id()
+            if self.max_pending is not None:
+                deadline = None if timeout is None else time.time() + timeout
+                while self._pending_locked() >= self.max_pending:
+                    if not block:
+                        raise QueueFull(
+                            f"{self._pending_locked()} jobs pending "
+                            f"(max_pending={self.max_pending})")
+                    remaining = (None if deadline is None
+                                 else deadline - time.time())
+                    if remaining is not None and remaining <= 0:
+                        raise QueueFull(
+                            f"timed out after {timeout}s waiting for "
+                            f"queue capacity")
+                    self._capacity.wait(remaining)
+                    check_id()
+            job = Job(job_id, process_list, priority=priority, seq=seq,
+                      metadata=dict(metadata or {}))
+            self._jobs[job_id] = job
+            heapq.heappush(self._heap, (-priority, seq, job))
+            self._not_empty.notify()
+            return job
+
+    # -- dispatch -------------------------------------------------------
+    def _pop_locked(self) -> Job | None:
+        while self._heap:
+            _, _, job = heapq.heappop(self._heap)
+            if job.state is JobState.QUEUED:      # skip cancelled entries
+                job.state = JobState.CHECKING     # dispatched: uncancellable
+                return job
+        return None
+
+    def get(self, timeout: float | None = None) -> Job | None:
+        """Pop the highest-priority queued job (None on timeout)."""
+        deadline = None if timeout is None else time.time() + timeout
+        with self._lock:
+            while True:
+                job = self._pop_locked()
+                if job is not None:
+                    return job
+                remaining = (None if deadline is None
+                             else deadline - time.time())
+                if remaining is not None and remaining <= 0:
+                    return None
+                self._not_empty.wait(remaining)
+
+    def get_batch(self, max_jobs: int, timeout: float | None = None,
+                  match: Callable[[Job, Job], bool] | None = None
+                  ) -> list[Job]:
+        """Pop the head job plus up to ``max_jobs - 1`` queued jobs with
+        an identical chain signature (gang scheduling)."""
+        head = self.get(timeout)
+        if head is None:
+            return []
+        match = match or (lambda a, b: a.chain_sig == b.chain_sig)
+        batch = [head]
+        with self._lock:
+            keep: list[tuple[int, int, Job]] = []
+            for entry in self._heap:
+                job = entry[2]
+                if (len(batch) < max_jobs and job.state is JobState.QUEUED
+                        and match(head, job)):
+                    job.state = JobState.CHECKING
+                    batch.append(job)
+                else:
+                    keep.append(entry)
+            if len(batch) > 1:
+                heapq.heapify(keep)
+                self._heap = keep
+        return batch
+
+    # -- bookkeeping ----------------------------------------------------
+    def job(self, job_id: str) -> Job:
+        with self._lock:
+            return self._jobs[job_id]
+
+    def cancel(self, job_id: str) -> bool:
+        """Cancel a job that has not been picked up yet."""
+        with self._lock:
+            job = self._jobs.get(job_id)
+            if job is None or job.state is not JobState.QUEUED:
+                return False
+            job.state = JobState.CANCELLED
+            job.finished_at = time.time()
+            self._capacity.notify_all()
+            return True
+
+    def notify_terminal(self) -> None:
+        """Scheduler hook: a job reached a terminal state — wake blocked
+        submitters (admission capacity freed)."""
+        with self._lock:
+            self._capacity.notify_all()
+
+    def pending(self) -> int:
+        with self._lock:
+            return self._pending_locked()
+
+    def snapshot(self) -> list[dict[str, Any]]:
+        with self._lock:
+            return [j.snapshot() for j in
+                    sorted(self._jobs.values(), key=lambda j: j.seq)]
+
+    def wait_all(self, timeout: float | None = None,
+                 poll: float = 0.02) -> bool:
+        """Block until every submitted job is terminal.  True on success,
+        False on timeout."""
+        deadline = None if timeout is None else time.time() + timeout
+        while True:
+            with self._lock:
+                if all(j.state.terminal() for j in self._jobs.values()):
+                    return True
+            if deadline is not None and time.time() >= deadline:
+                return False
+            time.sleep(poll)

@@ -1,0 +1,249 @@
+"""PipelineScheduler — many process lists, shared workers, one cache.
+
+Savu runs one pipeline per MPI job; a facility runs *hundreds* of them a
+day.  The scheduler closes that gap:
+
+* ``n_workers`` threads pull jobs off the :class:`JobQueue` and drive
+  each job's :class:`PluginRunner` through its resumable plugin steps —
+  with ≥2 workers one job's host-side I/O (ChunkedFileTransport chunk
+  reads, checkpoint writes) overlaps another job's jit compute, which
+  releases the GIL while XLA executes.
+* every job's transport shares one process-level
+  :class:`~repro.service.compile_cache.CompileCache`, so resubmitting an
+  identical process list skips every ``jax.jit`` retrace (the paper's
+  "same pipeline, many datasets" case).
+* ``batch_identical=True`` gang-schedules queued jobs whose chain
+  signatures match: each plugin step executes as ONE compiled call over
+  all gang members' datasets (``ShardedTransport.run_plugin_batch``),
+  with per-job calibration constants riding along as stacked arguments.
+* an optional :class:`CheckpointStore` persists per-plugin completion +
+  surviving datasets after every step; a killed job resubmitted with the
+  same id restarts at the last finished plugin (Savu's MPI
+  checkpointing).
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from typing import Any, Callable
+
+from ..core.framework import PluginRunner
+from ..core.transport import InMemoryTransport, Transport
+from .checkpoint import CheckpointStore
+from .job import Job, JobState
+from .queue import JobQueue
+
+
+class PipelineScheduler:
+    def __init__(self, queue: JobQueue, *,
+                 transport_factory: Callable[[Job], Transport] | None = None,
+                 n_workers: int = 2,
+                 checkpoints: CheckpointStore | None = None,
+                 batch_identical: bool = False,
+                 batch_max: int = 4,
+                 fuse: bool = False,
+                 compile_cache=None):
+        self.queue = queue
+        self.transport_factory = (transport_factory
+                                  or (lambda job: InMemoryTransport()))
+        self.n_workers = max(1, n_workers)
+        self.checkpoints = checkpoints
+        self.batch_identical = batch_identical
+        self.batch_max = max(2, batch_max)
+        self.fuse = fuse
+        self.compile_cache = compile_cache   # held for stats reporting
+        self._threads: list[threading.Thread] = []
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self.jobs_done = 0
+        self.jobs_failed = 0
+        self.gangs_run = 0
+        self._started_at: float | None = None
+
+    # -- lifecycle ------------------------------------------------------
+    def start(self) -> "PipelineScheduler":
+        if self._threads:
+            return self
+        self._started_at = time.time()
+        for i in range(self.n_workers):
+            # workers poll the event they were STARTED with, so a
+            # shutdown always reaches this generation even after _stop
+            # is re-armed for the next start()
+            t = threading.Thread(target=self._worker, args=(self._stop,),
+                                 name=f"pipeline-w{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Wait for every submitted job to reach a terminal state."""
+        return self.queue.wait_all(timeout)
+
+    def shutdown(self, wait: bool = True) -> None:
+        self._stop.set()
+        if wait:
+            for t in self._threads:
+                t.join(timeout=30)
+        self._threads = []
+        self._stop = threading.Event()
+
+    def stats(self) -> dict[str, Any]:
+        out: dict[str, Any] = {
+            "jobs_done": self.jobs_done, "jobs_failed": self.jobs_failed,
+            "gangs_run": self.gangs_run, "pending": self.queue.pending(),
+        }
+        if self._started_at is not None:
+            out["wall"] = time.time() - self._started_at
+        if self.compile_cache is not None:
+            out["compile_cache"] = self.compile_cache.stats()
+        return out
+
+    # -- worker loop ----------------------------------------------------
+    def _worker(self, stop: threading.Event) -> None:
+        while not stop.is_set():
+            if self.batch_identical:
+                jobs = self.queue.get_batch(self.batch_max, timeout=0.1)
+            else:
+                job = self.queue.get(timeout=0.1)
+                jobs = [job] if job is not None else []
+            if not jobs:
+                continue
+            # jobs holding a checkpoint resume solo — a gang would force
+            # its members into lockstep from step 0
+            if len(jobs) > 1 and self.checkpoints is not None:
+                solo = [j for j in jobs
+                        if self.checkpoints.load(j.job_id) is not None]
+                jobs = [j for j in jobs if j not in solo]
+                for j in solo:
+                    self._run_job(j)
+            if len(jobs) == 1:
+                self._run_job(jobs[0])
+            elif jobs:
+                self._run_gang(jobs)
+
+    # -- solo execution -------------------------------------------------
+    def _fail(self, job: Job, exc: Exception) -> None:
+        job.error = f"{type(exc).__name__}: {exc}"
+        job.metadata["traceback"] = traceback.format_exc()
+        job.state = JobState.FAILED
+
+    def _drive(self, job: Job, runner: PluginRunner) -> None:
+        """Step a PREPARED runner to completion (status + checkpoints)."""
+        job.plugin_index = runner.current_step
+        job.state = JobState.RUNNING
+        while runner.step():
+            job.plugin_index = runner.current_step
+            if self.checkpoints is not None:
+                self.checkpoints.save(job.job_id, runner)
+        runner.finalise()
+        job.state = JobState.DONE
+        if self.checkpoints is not None:
+            self.checkpoints.clear(job.job_id)
+
+    def _run_job(self, job: Job) -> None:
+        job.started_at = time.time()
+        job.state = JobState.CHECKING
+        try:
+            runner = PluginRunner(job.process_list,
+                                  self.transport_factory(job),
+                                  fuse=self.fuse)
+            job.runner = runner
+            runner.prepare()
+            if self.checkpoints is not None:
+                job.resumed_from = self.checkpoints.restore(job.job_id,
+                                                            runner)
+            job.n_plugins = runner.n_steps
+            self._drive(job, runner)
+        except Exception as e:
+            self._fail(job, e)
+        finally:
+            self._finish([job])
+
+    # -- gang execution -------------------------------------------------
+    def _run_gang(self, jobs: list[Job]) -> None:
+        """Identical chains from several jobs step in lockstep; each
+        single-plugin step becomes one batched compiled call.  Faults
+        are isolated where possible: a job whose prepare fails is marked
+        failed alone, and a batch-signature mismatch (chain signatures
+        equal but runtime shapes differ, e.g. inline-scan loaders) falls
+        back to per-job execution rather than failing the gang."""
+        transport = self.transport_factory(jobs[0])
+        runners: list[PluginRunner] = []
+        live: list[Job] = []
+        for job in jobs:
+            job.started_at = time.time()
+            job.state = JobState.CHECKING
+            try:
+                r = PluginRunner(job.process_list, transport, fuse=self.fuse)
+                job.runner = r
+                r.prepare()
+                job.n_plugins = r.n_steps
+                runners.append(r)
+                live.append(job)
+            except Exception as e:
+                self._fail(job, e)
+                self._finish([job])
+        jobs = live
+        if not jobs:
+            return
+        if len(jobs) == 1:
+            job = jobs[0]
+            try:
+                self._drive(job, job.runner)
+            except Exception as e:
+                self._fail(job, e)
+            finally:
+                self._finish([job])
+            return
+        try:
+            for job in jobs:
+                job.state = JobState.RUNNING
+            can_batch = hasattr(transport, "run_plugin_batch")
+            for _ in range(runners[0].n_steps):
+                groups = [r.begin_step() for r in runners]
+                if can_batch and len(groups[0]) == 1:
+                    try:
+                        transport.run_plugin_batch([g[0] for g in groups])
+                    except ValueError:       # signature mismatch: solo
+                        for g in groups:
+                            transport.run_plugin(g[0])
+                else:
+                    for g in groups:
+                        if len(g) > 1:
+                            transport.run_fused(g)
+                        else:
+                            transport.run_plugin(g[0])
+                for job, r in zip(jobs, runners):
+                    r.complete_step()
+                    job.plugin_index = r.current_step
+                    if self.checkpoints is not None:
+                        self.checkpoints.save(job.job_id, r)
+            for job, r in zip(jobs, runners):
+                r.finalise()
+                job.state = JobState.DONE
+                if self.checkpoints is not None:
+                    self.checkpoints.clear(job.job_id)
+            with self._lock:
+                self.gangs_run += 1
+        except Exception as e:
+            err = f"{type(e).__name__}: {e}"
+            tb = traceback.format_exc()
+            for job in jobs:
+                if not job.state.terminal():
+                    job.error = err
+                    job.metadata["traceback"] = tb
+                    job.state = JobState.FAILED
+        finally:
+            self._finish(jobs)
+
+    def _finish(self, jobs: list[Job]) -> None:
+        now = time.time()
+        with self._lock:
+            for job in jobs:
+                job.finished_at = job.finished_at or now
+                if job.state is JobState.DONE:
+                    self.jobs_done += 1
+                elif job.state is JobState.FAILED:
+                    self.jobs_failed += 1
+        self.queue.notify_terminal()

@@ -17,15 +17,17 @@ __all__ = [
 
 def standard_chain(n_det: int = 64, n_angles: int = 64, n_rows: int = 4,
                    *, paganin: bool = False, ring: bool = True,
-                   noise: float = 0.0, use_pallas: bool = True):
+                   noise: float = 0.0, use_pallas: bool = True,
+                   seed: int = 0):
     """The paper's typical full-field process list (Figs 5–7):
     loader → correction → [paganin] → [ring removal] → sino filter →
-    FBP → saver, all on one dataset name ('tomo')."""
+    FBP → saver, all on one dataset name ('tomo').  ``seed`` varies the
+    simulated scan so a batch of jobs processes distinct datasets."""
     from ..core.process_list import ProcessList
     pl = ProcessList()
     pl.add(SyntheticTomoLoader,
            params={"n_det": n_det, "n_angles": n_angles, "n_rows": n_rows,
-                   "noise": noise},
+                   "noise": noise, "seed": seed},
            out_datasets=("tomo",))
     pl.add(DarkFlatCorrection, params={"use_pallas": use_pallas},
            in_datasets=("tomo",), out_datasets=("tomo",))

@@ -34,6 +34,7 @@ class SyntheticTomoLoader(BaseLoader):
     name = "synthetic_tomo_loader"
     parameters = {"n_det": 64, "n_angles": 64, "n_rows": 4, "noise": 0.0,
                   "seed": 0, "scan": None}
+    data_params = ("seed", "scan")      # dataset identity, not pipeline
 
     def load(self) -> list[DataSet]:
         p = self.params

@@ -2,6 +2,7 @@
 beats the pattern-oblivious baseline on the paper's own access regime."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -3,6 +3,7 @@ compression (properties), straggler monitor, sharding-rule assignment,
 roofline HLO parsing."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

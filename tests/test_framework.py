@@ -9,6 +9,7 @@ from repro.core import (BaseLoader, BasePlugin, BaseSaver, ChunkedFile,
                         ChunkedFileTransport, DataSet, InMemoryTransport,
                         LambdaFilter, PluginRunner, ProcessList,
                         ShardedTransport)
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

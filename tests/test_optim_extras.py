@@ -1,6 +1,7 @@
 """8-bit Adam moments + HLO trip-count cost parser."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

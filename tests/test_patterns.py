@@ -1,6 +1,7 @@
 """Pattern semantics: the core Savu abstraction."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,409 @@
+"""Service layer: queue ordering/priorities + admission control,
+compile-cache hits on resubmitted process lists, gang batching, and
+kill-then-resume recovering at the correct plugin."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import (BaseFilter, BaseLoader, BaseSaver, DataSet,
+                        InMemoryTransport, LambdaFilter, PluginRunner,
+                        ProcessList, ShardedTransport)
+from repro.service import (CheckpointStore, CompileCache, JobQueue,
+                           JobState, PipelineScheduler, QueueFull,
+                           chain_signature)
+from repro.tomo import standard_chain
+
+
+# ---------------------------------------------------------------- helpers
+class ArrayLoader(BaseLoader):
+    name = "array_loader"
+    parameters = {"array": None, "seed": None}
+    data_params = ("array", "seed")
+
+    def load(self):
+        a = self.params["array"]
+        d = DataSet(self.out_dataset_names[0], a.shape, a.dtype,
+                    ("theta", "y", "x"), backing=a)
+        d.add_pattern("PROJECTION", core=("y", "x"), slice_=("theta",))
+        return [d]
+
+
+class NullSaver(BaseSaver):
+    name = "null_saver"
+
+    def save(self, ds):
+        ds.metadata["saved"] = True
+
+
+class TraceFilter(BaseFilter):
+    """Records every pre_process (one per executed plugin step)."""
+    name = "trace_filter"
+    parameters = {"add": 0.0, "tag": ""}
+    executed: list = []         # class-level log, reset per test
+
+    def pre_process(self):
+        TraceFilter.executed.append(self.params["tag"])
+
+    def process_frames(self, frames):
+        return frames[0] + self.params["add"]
+
+
+def _trace_chain(a, n_filters=4):
+    pl = ProcessList()
+    pl.add(ArrayLoader, params={"array": a}, out_datasets=("d",))
+    for i in range(n_filters):
+        pl.add(TraceFilter, params={"add": float(i + 1), "tag": f"f{i}"},
+               in_datasets=("d",), out_datasets=("d",))
+    pl.add(NullSaver, in_datasets=("d",))
+    return pl
+
+
+def _mesh1():
+    return Mesh(np.asarray(jax.devices()[:1]), ("data",))
+
+
+def _double(b):
+    return b * 2.0
+
+
+def _inc(b):
+    return b + 1.0
+
+
+def _lambda_chain(a):
+    pl = ProcessList()
+    pl.add(ArrayLoader, params={"array": a}, out_datasets=("d",))
+    pl.add(LambdaFilter, params={"fn": _double, "pattern": "PROJECTION"},
+           in_datasets=("d",), out_datasets=("d",))
+    pl.add(LambdaFilter, params={"fn": _inc, "pattern": "PROJECTION"},
+           in_datasets=("d",), out_datasets=("d",))
+    pl.add(NullSaver, in_datasets=("d",))
+    return pl
+
+
+@pytest.fixture
+def data(rng):
+    return rng.normal(size=(4, 6, 5)).astype(np.float32)
+
+
+# ---------------------------------------------------------------- queue
+def test_queue_priority_then_fifo(data):
+    q = JobQueue()
+    lo1 = q.submit(_trace_chain(data), priority=0)
+    hi = q.submit(_trace_chain(data), priority=5)
+    lo2 = q.submit(_trace_chain(data), priority=0)
+    assert q.get(0).job_id == hi.job_id
+    assert q.get(0).job_id == lo1.job_id     # FIFO within a priority
+    assert q.get(0).job_id == lo2.job_id
+    assert q.get(timeout=0.01) is None
+
+
+def test_admission_control_backpressure(data):
+    q = JobQueue(max_pending=2)
+    j1 = q.submit(_trace_chain(data))
+    q.submit(_trace_chain(data))
+    with pytest.raises(QueueFull):
+        q.submit(_trace_chain(data))
+    with pytest.raises(QueueFull):
+        q.submit(_trace_chain(data), block=True, timeout=0.05)
+    # capacity frees when a job reaches a terminal state
+    def finish():
+        time.sleep(0.05)
+        j1.state = JobState.DONE
+        q.notify_terminal()
+    t = threading.Thread(target=finish)
+    t.start()
+    j3 = q.submit(_trace_chain(data), block=True, timeout=5.0)
+    t.join()
+    assert j3.state is JobState.QUEUED
+
+
+def test_cancel_before_dispatch(data):
+    q = JobQueue()
+    a = q.submit(_trace_chain(data))
+    b = q.submit(_trace_chain(data))
+    assert q.cancel(a.job_id)
+    assert q.get(0).job_id == b.job_id
+    assert q.get(timeout=0.01) is None
+    assert a.state is JobState.CANCELLED
+    assert not q.cancel(b.job_id)            # already dispatched
+
+
+def test_chain_signature_ignores_data_params():
+    s0 = chain_signature(standard_chain(n_det=16, n_angles=16, seed=0))
+    s1 = chain_signature(standard_chain(n_det=16, n_angles=16, seed=7))
+    assert s0 == s1                          # same pipeline, new dataset
+    s2 = chain_signature(standard_chain(n_det=16, n_angles=16, ring=False))
+    assert s0 != s2                          # different pipeline
+
+
+def test_get_batch_groups_identical_chains(data, rng):
+    other = rng.normal(size=(4, 6, 5)).astype(np.float32)
+    q = JobQueue()
+    a = q.submit(_trace_chain(data))
+    b = q.submit(_trace_chain(other))        # same chain, other data
+    c = q.submit(_trace_chain(data, n_filters=2))   # different chain
+    batch = q.get_batch(max_jobs=4, timeout=0)
+    assert {j.job_id for j in batch} == {a.job_id, b.job_id}
+    assert q.get(0).job_id == c.job_id
+
+
+# ---------------------------------------------------------- stepping/resume
+def test_stepping_equals_run(data):
+    r1 = PluginRunner(_trace_chain(data), InMemoryTransport())
+    out1 = r1.run()
+    r2 = PluginRunner(_trace_chain(data), InMemoryTransport())
+    r2.prepare()
+    assert r2.n_steps == 4
+    steps = 0
+    while r2.step():
+        steps += 1
+    r2.finalise()
+    assert steps == 4
+    np.testing.assert_allclose(np.asarray(out1["d"].materialise()),
+                               np.asarray(r2.datasets["d"].materialise()))
+
+
+def test_kill_then_resume_recovers_at_correct_plugin(tmp_path, data):
+    store = CheckpointStore(str(tmp_path))
+    ref = PluginRunner(_trace_chain(data), InMemoryTransport()).run()
+
+    # run two of four plugins, checkpoint after each step, then "die"
+    TraceFilter.executed = []
+    r = PluginRunner(_trace_chain(data), InMemoryTransport())
+    r.prepare()
+    for _ in range(2):
+        r.step()
+        store.save("j1", r)
+    assert TraceFilter.executed == ["f0", "f1"]
+
+    # fresh runner resumes from the store at plugin 2
+    TraceFilter.executed = []
+    r2 = PluginRunner(_trace_chain(data), InMemoryTransport())
+    resumed = store.restore("j1", r2)
+    assert resumed == 2
+    while r2.step():
+        pass
+    r2.finalise()
+    assert TraceFilter.executed == ["f2", "f3"]     # f0/f1 NOT re-run
+    np.testing.assert_allclose(np.asarray(r2.datasets["d"].materialise()),
+                               np.asarray(ref["d"].materialise()))
+
+
+def test_restore_rejects_different_chain(tmp_path, data):
+    store = CheckpointStore(str(tmp_path))
+    r = PluginRunner(_trace_chain(data), InMemoryTransport())
+    r.prepare()
+    r.step()
+    store.save("j1", r)
+    other = PluginRunner(_trace_chain(data, n_filters=2),
+                         InMemoryTransport())
+    assert store.restore("j1", other) == 0          # signature mismatch
+
+
+def test_scheduler_resumes_resubmitted_job(tmp_path, data):
+    store = CheckpointStore(str(tmp_path))
+    ref = PluginRunner(_trace_chain(data), InMemoryTransport()).run()
+
+    # simulate a killed job: partial run left a checkpoint behind
+    r = PluginRunner(_trace_chain(data), InMemoryTransport())
+    r.prepare()
+    r.step()
+    store.save("jobX", r)
+
+    TraceFilter.executed = []
+    q = JobQueue()
+    sched = PipelineScheduler(q, n_workers=1, checkpoints=store).start()
+    job = q.submit(_trace_chain(data), job_id="jobX")
+    assert sched.drain(timeout=60)
+    sched.shutdown()
+    assert job.state is JobState.DONE, job.snapshot()
+    assert job.resumed_from == 1
+    assert TraceFilter.executed == ["f1", "f2", "f3"]
+    got = job.runner.transport.read(job.runner.datasets["d"])
+    np.testing.assert_allclose(got, np.asarray(ref["d"].materialise()))
+
+
+# ---------------------------------------------------------- scheduler
+def test_scheduler_concurrent_jobs_match_serial(rng):
+    arrays = [rng.normal(size=(4, 5, 5)).astype(np.float32)
+              for _ in range(3)]
+    q = JobQueue()
+    sched = PipelineScheduler(q, n_workers=2).start()
+    jobs = [q.submit(_trace_chain(a)) for a in arrays]
+    assert sched.drain(timeout=60)
+    sched.shutdown()
+    for a, j in zip(arrays, jobs):
+        assert j.state is JobState.DONE, j.snapshot()
+        ref = PluginRunner(_trace_chain(a), InMemoryTransport()).run()
+        got = j.runner.transport.read(j.runner.datasets["d"])
+        np.testing.assert_allclose(got, np.asarray(ref["d"].materialise()))
+
+
+def test_scheduler_marks_failed_job(data):
+    pl = ProcessList()
+    pl.add(ArrayLoader, params={"array": data}, out_datasets=("d",))
+    pl.add(LambdaFilter,
+           params={"fn": lambda b: (_ for _ in ()).throw(RuntimeError("boom")),
+                   "pattern": "PROJECTION"},
+           in_datasets=("d",), out_datasets=("d",))
+    pl.add(NullSaver, in_datasets=("d",))
+    q = JobQueue()
+    sched = PipelineScheduler(q, n_workers=1).start()
+    job = q.submit(pl)
+    assert sched.drain(timeout=60)
+    sched.shutdown()
+    assert job.state is JobState.FAILED
+    assert "boom" in job.error
+    assert "running" not in job.status
+
+
+# ------------------------------------------------------- compile cache
+def test_compile_cache_hit_on_resubmitted_process_list(data, rng):
+    cache = CompileCache()
+    mesh = _mesh1()
+
+    def run_once(a):
+        tr = ShardedTransport(mesh, compile_cache=cache)
+        runner = PluginRunner(_lambda_chain(a), tr)
+        out = runner.run()
+        return tr.read(out["d"])
+
+    got1 = run_once(data)
+    after_first = cache.stats()
+    assert after_first["misses"] == 2 and after_first["hits"] == 0
+
+    other = rng.normal(size=data.shape).astype(np.float32)
+    got2 = run_once(other)                   # identical list, new dataset
+    after_second = cache.stats()
+    assert after_second["misses"] == 2       # zero new compiles
+    assert after_second["hits"] == 2
+    np.testing.assert_allclose(got1, data * 2 + 1, rtol=1e-5)
+    np.testing.assert_allclose(got2, other * 2 + 1, rtol=1e-5)
+
+
+def test_compile_cache_single_build_under_race():
+    cache = CompileCache()
+    builds = []
+
+    def builder():
+        time.sleep(0.05)
+        builds.append(1)
+        return "artifact"
+
+    results = []
+    threads = [threading.Thread(
+        target=lambda: results.append(cache.get_or_build("k", builder)))
+        for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert results == ["artifact"] * 4
+    assert len(builds) == 1                  # losers waited, not rebuilt
+
+
+def test_jit_constants_flow_as_arguments(rng):
+    """Two plugin instances with different setup constants share one
+    compiled function and still get THEIR OWN constants applied."""
+    class BiasFilter(BaseFilter):
+        name = "bias_filter"
+        pattern_name = "PROJECTION"
+        parameters = {"which": 0}
+        data_params = ("which",)
+
+        def setup(self, in_datasets):
+            (din,) = in_datasets
+            self._bias = jnp.full(din.shape[1:], float(self.params["which"]))
+            dout = din.like(self.out_dataset_names[0])
+            self.chunk_frames(self.pattern_name, 1)
+            return [dout]
+
+        def process_frames(self, frames):
+            return frames[0] + self._bias[None]
+
+    cache = CompileCache()
+    mesh = _mesh1()
+    a = rng.normal(size=(3, 4, 4)).astype(np.float32)
+
+    def chain(which):
+        pl = ProcessList()
+        pl.add(ArrayLoader, params={"array": a}, out_datasets=("d",))
+        pl.add(BiasFilter, params={"which": which},
+               in_datasets=("d",), out_datasets=("d",))
+        pl.add(NullSaver, in_datasets=("d",))
+        return pl
+
+    tr = ShardedTransport(mesh, compile_cache=cache)
+    out5 = tr.read(PluginRunner(chain(5), tr).run()["d"])
+    tr2 = ShardedTransport(mesh, compile_cache=cache)
+    out9 = tr2.read(PluginRunner(chain(9), tr2).run()["d"])
+    assert cache.stats()["misses"] == 1 and cache.stats()["hits"] == 1
+    np.testing.assert_allclose(out5, a + 5, rtol=1e-6)
+    np.testing.assert_allclose(out9, a + 9, rtol=1e-6)   # not stale 5!
+
+
+def test_max_history_evicts_terminal_jobs(data):
+    q = JobQueue(max_history=2)
+    sched = PipelineScheduler(q, n_workers=1).start()
+    jobs = [q.submit(_trace_chain(data)) for _ in range(4)]
+    assert sched.drain(timeout=60)
+    # a new submission triggers pruning of all but the 2 newest terminal
+    q.submit(_trace_chain(data))
+    assert sched.drain(timeout=60)
+    sched.shutdown()
+    assert all(j.state is JobState.DONE for j in jobs)
+    ids = {s["job_id"] for s in q.snapshot()}
+    assert jobs[0].job_id not in ids and jobs[1].job_id not in ids
+    assert jobs[0].runner is None            # memory released
+
+
+# ------------------------------------------------------- gang batching
+def test_gang_shape_mismatch_falls_back_to_solo(rng):
+    """Same chain signature (array is a data_param) but different shapes:
+    the batched call is impossible; the gang must fall back, not fail."""
+    a = rng.normal(size=(4, 5, 5)).astype(np.float32)
+    b = rng.normal(size=(4, 6, 6)).astype(np.float32)
+    cache = CompileCache()
+    mesh = _mesh1()
+    q = JobQueue()
+    sched = PipelineScheduler(
+        q, n_workers=1, batch_identical=True, batch_max=4,
+        transport_factory=lambda job: ShardedTransport(
+            mesh, donate=False, compile_cache=cache))
+    jobs = [q.submit(_lambda_chain(x)) for x in (a, b)]
+    sched.start()
+    assert sched.drain(timeout=120)
+    sched.shutdown()
+    for x, j in zip((a, b), jobs):
+        assert j.state is JobState.DONE, j.snapshot()
+        got = j.runner.transport.read(j.runner.datasets["d"])
+        np.testing.assert_allclose(got, x * 2 + 1, rtol=1e-5)
+
+
+def test_gang_batch_matches_serial(rng):
+    arrays = [rng.normal(size=(4, 5, 5)).astype(np.float32)
+              for _ in range(3)]
+    cache = CompileCache()
+    mesh = _mesh1()
+    q = JobQueue()
+    sched = PipelineScheduler(
+        q, n_workers=1, batch_identical=True, batch_max=4,
+        compile_cache=cache,
+        transport_factory=lambda job: ShardedTransport(
+            mesh, donate=False, compile_cache=cache))
+    jobs = [q.submit(_lambda_chain(a)) for a in arrays]
+    sched.start()
+    assert sched.drain(timeout=120)
+    sched.shutdown()
+    assert sched.gangs_run == 1
+    for a, j in zip(arrays, jobs):
+        assert j.state is JobState.DONE, j.snapshot()
+        got = j.runner.transport.read(j.runner.datasets["d"])
+        np.testing.assert_allclose(got, a * 2 + 1, rtol=1e-5)
