@@ -1,0 +1,190 @@
+"""Checkpoint-subsystem benchmark: bytes written and wall overhead per
+checkpoint — the incremental chunk-addressed v2 store against the dense
+v1 ``.npy`` path — plus a kill/resume equivalence check on both the
+dense and the chunked-file transports.
+
+The chain keeps a loader volume live until its LAST plugin (a branching
+quality-check consumes raw + processed), so the dense path must re-dump
+it at every checkpoint while v2 writes each dataset version exactly once
+(ChunkedFile backings are flushed + hard-linked: steady-state bytes per
+checkpoint are the dirty-chunk bytes, ~0 for write-once datasets).
+
+Standalone:  PYTHONPATH=src python benchmarks/bench_checkpoint.py
+Smoke (CI):  PYTHONPATH=src python benchmarks/bench_checkpoint.py --smoke
+Harness:     python -m benchmarks.run   (row prefix ``checkpoint_``)
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core import (BaseFilter, BaseLoader, BasePlugin, BaseSaver,
+                        ChunkedFileTransport, DataSet, InMemoryTransport,
+                        PluginRunner, ProcessList)
+from repro.service import CheckpointStore
+
+SHAPE = (32, 48, 48)
+N_FILTERS = 4
+
+
+class VolumeLoader(BaseLoader):
+    name = "volume_loader"
+    parameters = {"shape": None, "seed": 0}
+    data_params = ("seed",)
+
+    def load(self):
+        shape = tuple(self.params["shape"])
+        rng = np.random.default_rng(self.params["seed"])
+        a = rng.normal(size=shape).astype(np.float32)
+        d = DataSet(self.out_dataset_names[0], a.shape, a.dtype,
+                    ("z", "y", "x"), backing=a)
+        d.add_pattern("SLAB", core=("y", "x"), slice_=("z",))
+        return [d]
+
+
+class Smooth(BaseFilter):
+    name = "smooth"
+    parameters = {"add": 0.0}
+
+    def process_frames(self, frames):
+        return frames[0] * 0.99 + self.params["add"]
+
+
+class QualityCheck(BasePlugin):
+    """Branching consumer: needs the RAW volume back at the end of the
+    chain — the case that keeps a dataset required-live across every
+    intermediate checkpoint."""
+    name = "quality_check"
+    n_in_datasets = 2
+
+    def setup(self, in_datasets):
+        dout = in_datasets[0].like(self.out_dataset_names[0])
+        self.chunk_frames(self.default_pattern(in_datasets[0]))
+        return [dout]
+
+    def process_frames(self, frames):
+        return frames[0] - 0.5 * frames[1]
+
+
+class NullSaver(BaseSaver):
+    name = "null_saver"
+
+    def save(self, ds):
+        ds.metadata["saved"] = True
+
+
+def _chain(shape, n_filters=N_FILTERS, seed=0) -> ProcessList:
+    pl = ProcessList()
+    pl.add(VolumeLoader, params={"shape": list(shape), "seed": seed},
+           out_datasets=("raw",))
+    pl.add(Smooth, params={"add": 1.0},
+           in_datasets=("raw",), out_datasets=("work",))
+    for i in range(n_filters - 1):
+        pl.add(Smooth, params={"add": float(i)},
+               in_datasets=("work",), out_datasets=("work",))
+    pl.add(QualityCheck, in_datasets=("work", "raw"),
+           out_datasets=("out",))
+    pl.add(NullSaver, in_datasets=("out",))
+    return pl
+
+
+def _ckpt_run(shape, n_filters, transport_factory, store) -> dict:
+    """Run the chain, checkpointing after every step; per-step stats."""
+    runner = PluginRunner(_chain(shape, n_filters), transport_factory())
+    runner.prepare()
+    per_step = []
+    while runner.step():
+        per_step.append(store.save("bench", runner))
+    runner.finalise()
+    store.clear("bench")
+    return {
+        "bytes": [s["bytes_written"] for s in per_step],
+        "wall": sum(s["wall"] for s in per_step),
+        "steady": (np.mean([s["bytes_written"] for s in per_step[1:]])
+                   if len(per_step) > 1 else per_step[0]["bytes_written"]),
+    }
+
+
+def _resume_run(shape, n_filters, transport_factory, store,
+                kill_after: int) -> np.ndarray:
+    """Interrupt after ``kill_after`` steps, resume fresh, return out."""
+    r = PluginRunner(_chain(shape, n_filters), transport_factory())
+    r.prepare()
+    for _ in range(kill_after):
+        r.step()
+        store.save("bench-resume", r)
+    # "kill": drop the runner, resume a fresh one from the store
+    r2 = PluginRunner(_chain(shape, n_filters), transport_factory())
+    resumed = store.restore("bench-resume", r2)
+    assert resumed == kill_after, (resumed, kill_after)
+    while r2.step():
+        pass
+    r2.finalise()
+    store.clear("bench-resume")
+    return np.asarray(r2.transport.read(r2.datasets["out"]))
+
+
+def run(report, shape=SHAPE, n_filters=N_FILTERS) -> None:
+    dense_volume = int(np.prod(shape)) * 4
+    tmp = tempfile.mkdtemp(prefix="bench_ckpt_")
+    tr_dirs = iter(range(1000))
+
+    def chunked_factory():
+        return ChunkedFileTransport(
+            directory=f"{tmp}/tr_{next(tr_dirs)}")
+
+    transports = [
+        ("dense", InMemoryTransport),
+        ("chunked", chunked_factory),
+    ]
+    for tname, factory in transports:
+        v1 = _ckpt_run(shape, n_filters, factory,
+                       CheckpointStore(f"{tmp}/v1_{tname}", format="npy"))
+        v2 = _ckpt_run(shape, n_filters, factory,
+                       CheckpointStore(f"{tmp}/v2_{tname}"))
+        ratio = v1["steady"] / max(1.0, v2["steady"])
+        report(f"checkpoint_{tname}_v1_dense",
+               v1["wall"] / len(v1["bytes"]) * 1e6,
+               f"{v1['steady'] / 1e3:.0f} kB/ckpt steady "
+               f"(volume={dense_volume / 1e3:.0f} kB)")
+        report(f"checkpoint_{tname}_v2_incremental",
+               v2["wall"] / len(v2["bytes"]) * 1e6,
+               f"{v2['steady'] / 1e3:.0f} kB/ckpt steady "
+               f"({ratio:.0f}x less than v1)")
+        assert v2["steady"] < v1["steady"], \
+            f"{tname}: incremental checkpoints wrote {v2['steady']} B " \
+            f">= dense {v1['steady']} B per steady-state checkpoint"
+
+        # kill/resume equivalence: interrupted == uninterrupted, bitwise
+        rref = PluginRunner(_chain(shape, n_filters), factory())
+        rref.run()
+        want = np.asarray(rref.transport.read(rref.datasets["out"]))
+        got = _resume_run(shape, n_filters, factory,
+                          CheckpointStore(f"{tmp}/resume_{tname}"),
+                          kill_after=2)
+        np.testing.assert_array_equal(got, want)
+        report(f"checkpoint_{tname}_resume_ok", 0.0,
+               "interrupted == uninterrupted (bit-identical)")
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI")
+    ap.add_argument("--n-filters", type=int, default=N_FILTERS)
+    args = ap.parse_args()
+    shape = (8, 16, 16) if args.smoke else SHAPE
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    run(report, shape=shape, n_filters=args.n_filters)
+
+
+if __name__ == "__main__":
+    main()

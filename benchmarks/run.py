@@ -15,10 +15,10 @@ def main() -> None:
         print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
     print("name,us_per_call,derived")
-    from . import (bench_chunking, bench_lm, bench_profile, bench_recon,
-                   bench_scaling, bench_service)
+    from . import (bench_checkpoint, bench_chunking, bench_lm,
+                   bench_profile, bench_recon, bench_scaling, bench_service)
     for mod in (bench_chunking, bench_profile, bench_recon, bench_scaling,
-                bench_service, bench_lm):
+                bench_service, bench_checkpoint, bench_lm):
         try:
             mod.run(report)
         except Exception as e:  # keep the harness going

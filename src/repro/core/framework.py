@@ -25,6 +25,8 @@ import os
 import time
 from typing import Any
 
+import numpy as np
+
 from .dataset import DataSet
 from .plugin import BaseLoader, BasePlugin, BaseSaver, PluginData
 from .process_list import ProcessList
@@ -72,6 +74,7 @@ class PluginRunner:
         self._setup_phase(self._loaders, self._processors, self._savers)
         self._groups = (self._fusion_groups(self._processors) if self.fuse
                         else [[p] for p in self._processors])
+        self._compute_liveness()
         self._step_i = 0
         self._prepared = True
         return self
@@ -86,6 +89,44 @@ class PluginRunner:
 
     def step_labels(self) -> list[str]:
         return ["+".join(p.name for p in g) for g in self._groups]
+
+    # -- dataset liveness ----------------------------------------------
+    def _compute_liveness(self) -> None:
+        """Per-dataset-object liveness over the step sequence: which step
+        produces each dataset version and which step consumes it LAST.
+        Savers count as consumers at the sentinel step ``n_steps`` (their
+        datasets must survive the whole chain).  Donation and the
+        checkpointer both read this instead of guessing."""
+        producer: dict[int, int] = {}
+        last_use: dict[int, int] = {}
+        #: (consume_step, producer_step, dataset name) per use — producer
+        #: is -1 for loader-created datasets
+        uses: list[tuple[int, int, str]] = []
+        for g, group in enumerate(self._groups):
+            for p in group:
+                for pd in p.in_data:
+                    ds = pd.dataset
+                    last_use[id(ds)] = g
+                    uses.append((g, producer.get(id(ds), -1), ds.name))
+                for pd in p.out_data:
+                    producer[id(pd.dataset)] = g
+        n = len(self._groups)
+        for sv in self._savers:
+            for name in sv.in_dataset_names:
+                ds = self._final.get(name)
+                if ds is not None:
+                    last_use[id(ds)] = n
+                    uses.append((n, producer.get(id(ds), -1), name))
+        self._last_use = last_use
+        self._uses = uses
+
+    def required_live_names(self, step: int) -> set[str]:
+        """Dataset names a resume from ``step`` completed steps must get
+        back from a checkpoint: consumed at some step >= ``step`` (savers
+        count as consuming at ``n_steps``) but produced BEFORE ``step`` —
+        i.e. by a plugin that will not run again, or by a loader."""
+        return {name for g, prod, name in self._uses
+                if g >= step and prod < step}
 
     def begin_step(self) -> list[BasePlugin] | None:
         """Rebind the next group's in_data to the live dataset registry
@@ -106,6 +147,10 @@ class PluginRunner:
             for pd in p.in_data:
                 if pd.dataset.name in self.datasets:
                     pd.dataset = self.datasets[pd.dataset.name]
+                # donation hint: this step may consume the buffer only if
+                # no later step (or saver) reads this dataset version
+                lu = self._last_use.get(id(pd.dataset))
+                pd.last_use = lu is not None and lu <= self._step_i
             with self.profiler.timer(p.name, "pre", devices):
                 p.pre_process()
         self._in_step = True
@@ -239,6 +284,8 @@ class PluginRunner:
             self._planned.append((p, outs))
             for ds in outs:
                 sym[ds.name] = ds
+        #: final version of every dataset name (what savers will see)
+        self._final = dict(sym)
 
     def _replace(self, p: BasePlugin):
         """out_dataset replaces in_dataset of the same name (Fig 6 (i))."""
@@ -299,11 +346,25 @@ class PluginRunner:
 
 
 # convenience ----------------------------------------------------------
-def run_process_list(process_list: ProcessList, data: dict[str, Any],
+def run_process_list(process_list: ProcessList,
+                     data: dict[str, Any] | None = None,
                      transport: Transport | None = None, **kw
                      ) -> dict[str, DataSet]:
     """One-shot helper used by examples/tests: ``data`` pre-populates
-    loader-created datasets whose loaders are 'inline' loaders."""
+    loader-created datasets (name -> host array) before the chain steps,
+    so a process list whose loader only *describes* a dataset can be fed
+    inline arrays."""
     runner = PluginRunner(process_list, transport, **kw)
-    out = runner.run()
-    return out
+    runner.prepare()
+    for name, arr in (data or {}).items():
+        ds = runner.datasets.get(name)
+        if ds is None or ds.produced_by:
+            continue                      # only loader-created datasets
+        if hasattr(ds.backing, "write_all"):
+            ds.backing.write_all(np.asarray(arr))
+        else:
+            ds.backing = arr
+    while runner.step():
+        pass
+    runner.finalise()
+    return runner.datasets

@@ -50,6 +50,12 @@ class PluginData:
     n_frames: int = 1
     #: frame-padding in core dims: {axis_label: pad} (framework applies)
     padding: dict[str, int] = dataclasses.field(default_factory=dict)
+    #: True when this plugin step is the dataset's FINAL consumer — the
+    #: runner sets it from its liveness analysis in ``begin_step``; a
+    #: donating transport may only donate an input buffer whose view has
+    #: ``last_use=True`` (a branching chain reads it again otherwise).
+    #: Defaults to True so direct transport use keeps eager donation.
+    last_use: bool = True
 
     @property
     def pattern(self):

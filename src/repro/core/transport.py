@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
+import shutil
 import tempfile
 import time
 from collections import OrderedDict
@@ -224,6 +225,14 @@ class ShardedTransport(Transport):
 
         return fn
 
+    def _donate_mask(self, plugin: BasePlugin) -> tuple[bool, ...]:
+        """Per-input donation decision: donate only at the dataset's
+        FINAL use (``PluginData.last_use``, set by the runner's liveness
+        analysis; defaults True for direct transport use).  Donating
+        earlier deletes a buffer a later plugin in a branching chain —
+        or the checkpointer — still needs."""
+        return tuple(self.donate and pd.last_use for pd in plugin.in_data)
+
     # -- compile-cache keys --------------------------------------------
     def _mesh_key(self) -> tuple:
         return (tuple(self.mesh.axis_names), tuple(self.mesh.devices.shape),
@@ -247,7 +256,7 @@ class ShardedTransport(Transport):
                 tuple(pd_meta(pd) for pd in plugin.out_data),
                 cmeta, plugin.driver.axes,
                 tuple(sorted(plugin.driver.submesh.items())),
-                self._mesh_key(), self.donate)
+                self._mesh_key(), self._donate_mask(plugin))
 
     def _replicated(self) -> NamedSharding:
         return NamedSharding(self.mesh, PartitionSpec())
@@ -258,20 +267,21 @@ class ShardedTransport(Transport):
         out_sh = tuple(self._sharding(pd.pattern, da)
                        for pd in plugin.out_data)
         fn = self._plugin_fn(plugin)
+        mask = self._donate_mask(plugin)
         if lower_only:
             consts = plugin.jit_constants()
             jfn = jax.jit(lambda *arrays: fn(consts, *arrays),
                           in_shardings=in_sh, out_shardings=out_sh,
-                          donate_argnums=tuple(range(len(in_sh)))
-                          if self.donate else ())
+                          donate_argnums=tuple(
+                              i for i, m in enumerate(mask) if m))
             specs = [jax.ShapeDtypeStruct(pd.dataset.shape,
                                           pd.dataset.dtype, sharding=s)
                      for pd, s in zip(plugin.in_data, in_sh)]
             return jfn.lower(*specs)
         return jax.jit(fn, in_shardings=(self._replicated(), *in_sh),
                        out_shardings=out_sh,
-                       donate_argnums=tuple(range(1, 1 + len(in_sh)))
-                       if self.donate else ())
+                       donate_argnums=tuple(
+                           i + 1 for i, m in enumerate(mask) if m))
 
     def _device_in(self, plugin: BasePlugin) -> list[Any]:
         da = plugin.driver.data_axis
@@ -427,12 +437,21 @@ class ChunkedFile:
         self.grid = tuple(-(-s // c) for s, c in zip(self.shape, self.chunks))
         self.chunk_items = int(np.prod(self.chunks))
         self.chunk_nbytes = self.chunk_items * self.dtype.itemsize
-        n_items = int(np.prod(self.grid)) * self.chunk_items
+        self._n_items = int(np.prod(self.grid)) * self.chunk_items
+        self._readonly = mode == "r"
         self._mm = np.memmap(path, dtype=self.dtype, mode=mode,
-                             shape=(n_items,))
+                             shape=(self._n_items,))
         self.stats = IOStats()
         self._cache: OrderedDict[int, np.ndarray] = OrderedDict()
         self._cache_slots = max(1, cache_bytes // max(1, self.chunk_nbytes))
+        #: flat chunk ids whose contents changed since last mark_clean()
+        #: — the incremental-checkpoint increment
+        self.dirty: set[int] = set()
+
+    def mark_clean(self) -> None:
+        """Reset dirty-chunk tracking (after a checkpoint captured the
+        current contents)."""
+        self.dirty = set()
 
     # -- chunk addressing ------------------------------------------------
     def _flat(self, cidx: tuple[int, ...]) -> int:
@@ -465,6 +484,8 @@ class ChunkedFile:
             self._flush_chunk(ef, ec)
 
     def _flush_chunk(self, f: int, chunk: np.ndarray) -> None:
+        if self._readonly:
+            return                        # reads never dirty a chunk
         t0 = time.perf_counter()
         self._mm[f * self.chunk_items:(f + 1) * self.chunk_items] = \
             chunk.reshape(-1)
@@ -496,8 +517,8 @@ class ChunkedFile:
                  for d, sl in enumerate(region)]
         out = np.empty([b - a for a, b in zip(starts, stops)],
                        dtype=self.dtype)
-        for cidx in np.ndindex(*[len(r) for r in self._touched(region)]):
-            ranges = self._touched(region)
+        ranges = self._touched(region)
+        for cidx in np.ndindex(*[len(r) for r in ranges]):
             c = tuple(ranges[d][cidx[d]] for d in range(len(cidx)))
             chunk = self._get_chunk(c)
             # intersection of chunk extent and region, in both coords
@@ -512,24 +533,36 @@ class ChunkedFile:
         return out
 
     def write(self, region: tuple[slice, ...], values: np.ndarray) -> None:
+        if self._readonly:
+            raise OSError(f"{self.path} is open read-only")
         region = tuple(region)
         starts = [sl.start or 0 for sl in region]
         stops = [self.shape[d] if sl.stop is None else sl.stop
                  for d, sl in enumerate(region)]
         values = np.asarray(values, dtype=self.dtype).reshape(
             [b - a for a, b in zip(starts, stops)])
-        for cidx in np.ndindex(*[len(r) for r in self._touched(region)]):
-            ranges = self._touched(region)
+        ranges = self._touched(region)
+        for cidx in np.ndindex(*[len(r) for r in ranges]):
             c = tuple(ranges[d][cidx[d]] for d in range(len(cidx)))
-            chunk = self._get_chunk(c)
             src, dst = [], []
+            full = True
             for d in range(len(c)):
                 c0 = c[d] * self.chunks[d]
                 lo = max(starts[d], c0)
                 hi = min(stops[d], c0 + self.chunks[d], self.shape[d])
+                if lo > c0 or hi < min(c0 + self.chunks[d], self.shape[d]):
+                    full = False
                 dst.append(slice(lo - c0, hi - c0))
                 src.append(slice(lo - starts[d], hi - starts[d]))
+            f = self._flat(c)
+            if full and f not in self._cache:
+                # whole-chunk write: no read-modify-write round trip
+                chunk = np.zeros(self.chunks, dtype=self.dtype)
+                self._put_cache(f, chunk)
+            else:
+                chunk = self._get_chunk(c)
             chunk[tuple(dst)] = values[tuple(src)]
+            self.dirty.add(f)
         # cached chunks are flushed on eviction/flush (write-back cache)
 
     def read_all(self) -> np.ndarray:
@@ -538,6 +571,23 @@ class ChunkedFile:
     def write_all(self, values: np.ndarray) -> None:
         self.write(tuple(slice(0, s) for s in self.shape), values)
         self.flush()
+
+    def load_from(self, path: str) -> None:
+        """Replace this file's contents with another chunk file of the
+        SAME shape/layout via an OS-level file copy — restores a
+        checkpointed volume without round-tripping it through RAM
+        (O(frames), not O(dataset), memory)."""
+        if self._readonly:
+            raise OSError(f"{self.path} is open read-only")
+        if os.path.getsize(path) < self._n_items * self.dtype.itemsize:
+            raise ValueError(f"{path} too small for layout {self.chunks} "
+                             f"over {self.shape}")
+        self._cache.clear()
+        self._mm = None                   # release before overwriting
+        shutil.copyfile(path, self.path)
+        self._mm = np.memmap(self.path, dtype=self.dtype, mode="r+",
+                             shape=(self._n_items,))
+        self.dirty = set(range(int(np.prod(self.grid))))
 
 
 class ChunkedFileTransport(Transport):

@@ -58,10 +58,12 @@ def main() -> None:
     cache = CompileCache()
     if args.transport == "sharded":
         mesh = Mesh(np.asarray(jax.devices()), ("data",))
-        # gang batching stacks job inputs, and checkpointing reads every
-        # surviving dataset after each step — donation would invalidate
-        # buffers both still need
-        donate = not (args.batch or args.checkpoint_dir)
+        # gang batching stacks job inputs — donation would invalidate
+        # buffers the stack still references.  Checkpointing no longer
+        # forces donation off: the runner's liveness analysis donates a
+        # buffer only at its FINAL use, so every dataset a checkpoint
+        # (or a branching chain) still needs stays alive.
+        donate = not args.batch
 
         def factory(job):
             return ShardedTransport(mesh, donate=donate,

@@ -3,12 +3,13 @@
 # that runs many process lists concurrently over shared workers, with a
 # process-level compiled-plugin cache and checkpoint/resume.
 from .compile_cache import CompileCache
-from .checkpoint import CheckpointStore
+from .checkpoint import CheckpointError, CheckpointStore
 from .job import Job, JobState, chain_signature
 from .queue import JobQueue, QueueFull
 from .scheduler import PipelineScheduler
 
 __all__ = [
     "Job", "JobState", "chain_signature", "JobQueue", "QueueFull",
-    "CompileCache", "CheckpointStore", "PipelineScheduler",
+    "CompileCache", "CheckpointError", "CheckpointStore",
+    "PipelineScheduler",
 ]

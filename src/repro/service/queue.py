@@ -119,25 +119,28 @@ class JobQueue:
                   match: Callable[[Job, Job], bool] | None = None
                   ) -> list[Job]:
         """Pop the head job plus up to ``max_jobs - 1`` queued jobs with
-        an identical chain signature (gang scheduling)."""
+        an identical chain signature (gang scheduling).  Candidates are
+        scanned in dispatch order — sorted ``(-priority, seq)``, not raw
+        heap-array order — so gang members join by priority then FIFO
+        and a truncated gang takes the jobs whose turn it actually is."""
         head = self.get(timeout)
         if head is None:
             return []
         match = match or (lambda a, b: a.chain_sig == b.chain_sig)
         batch = [head]
         with self._lock:
-            keep: list[tuple[int, int, Job]] = []
-            for entry in self._heap:
+            for entry in sorted(self._heap, key=lambda e: (e[0], e[1])):
+                if len(batch) >= max_jobs:
+                    break
                 job = entry[2]
-                if (len(batch) < max_jobs and job.state is JobState.QUEUED
-                        and match(head, job)):
+                if job.state is JobState.QUEUED and match(head, job):
                     job.state = JobState.CHECKING
                     batch.append(job)
-                else:
-                    keep.append(entry)
             if len(batch) > 1:
-                heapq.heapify(keep)
-                self._heap = keep
+                taken = {id(j) for j in batch}
+                self._heap = [e for e in self._heap
+                              if id(e[2]) not in taken]
+                heapq.heapify(self._heap)
         return batch
 
     # -- bookkeeping ----------------------------------------------------

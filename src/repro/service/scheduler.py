@@ -109,17 +109,9 @@ class PipelineScheduler:
                 jobs = [job] if job is not None else []
             if not jobs:
                 continue
-            # jobs holding a checkpoint resume solo — a gang would force
-            # its members into lockstep from step 0
-            if len(jobs) > 1 and self.checkpoints is not None:
-                solo = [j for j in jobs
-                        if self.checkpoints.load(j.job_id) is not None]
-                jobs = [j for j in jobs if j not in solo]
-                for j in solo:
-                    self._run_job(j)
             if len(jobs) == 1:
                 self._run_job(jobs[0])
-            elif jobs:
+            else:
                 self._run_gang(jobs)
 
     # -- solo execution -------------------------------------------------
@@ -167,10 +159,14 @@ class PipelineScheduler:
         are isolated where possible: a job whose prepare fails is marked
         failed alone, and a batch-signature mismatch (chain signatures
         equal but runtime shapes differ, e.g. inline-scan loaders) falls
-        back to per-job execution rather than failing the gang."""
+        back to per-job execution rather than failing the gang.  A job
+        holding a checkpoint is restored here too (``resumed_from`` set
+        like the solo path) and then driven solo — a gang would force it
+        back into lockstep from step 0."""
         transport = self.transport_factory(jobs[0])
         runners: list[PluginRunner] = []
         live: list[Job] = []
+        resumed: list[Job] = []
         for job in jobs:
             job.started_at = time.time()
             job.state = JobState.CHECKING
@@ -178,11 +174,24 @@ class PipelineScheduler:
                 r = PluginRunner(job.process_list, transport, fuse=self.fuse)
                 job.runner = r
                 r.prepare()
+                if self.checkpoints is not None:
+                    job.resumed_from = self.checkpoints.restore(job.job_id,
+                                                                r)
                 job.n_plugins = r.n_steps
-                runners.append(r)
-                live.append(job)
+                if job.resumed_from:
+                    resumed.append(job)
+                else:
+                    runners.append(r)
+                    live.append(job)
             except Exception as e:
                 self._fail(job, e)
+                self._finish([job])
+        for job in resumed:
+            try:
+                self._drive(job, job.runner)
+            except Exception as e:
+                self._fail(job, e)
+            finally:
                 self._finish([job])
         jobs = live
         if not jobs:

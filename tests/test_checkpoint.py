@@ -1,0 +1,353 @@
+"""Checkpoint v2 + liveness-aware donation.
+
+The regression class under test: a branching chain (raw data consumed by
+an early correction AND a late quality-check) used to (a) crash the
+sharded transport, which donated every input buffer at its FIRST use,
+and (b) silently drop the donated dataset from checkpoints
+(`service/checkpoint.py:57-61` in the seed), so a resume was missing
+data a later plugin still needed.  Liveness now donates only at the
+final use, the checkpointer knows exactly which datasets a resume
+requires, and an interrupted job resumes to bit-identical outputs."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import (BaseFilter, BaseLoader, BasePlugin, BaseSaver,
+                        ChunkedFile, ChunkedFileTransport, DataSet,
+                        InMemoryTransport, PluginRunner, ProcessList,
+                        ShardedTransport)
+from repro.service import CheckpointError, CheckpointStore
+
+
+# ---------------------------------------------------------------- helpers
+class VolLoader(BaseLoader):
+    name = "vol_loader"
+    parameters = {"array": None}
+    data_params = ("array",)
+
+    def load(self):
+        a = self.params["array"]
+        d = DataSet(self.out_dataset_names[0], a.shape, a.dtype,
+                    ("theta", "y", "x"), backing=a)
+        d.add_pattern("PROJECTION", core=("y", "x"), slice_=("theta",))
+        return [d]
+
+
+class AddF(BaseFilter):
+    name = "add_f"
+    parameters = {"add": 0.0}
+
+    def process_frames(self, frames):
+        return frames[0] + self.params["add"]
+
+
+class Combine(BasePlugin):
+    """2-in quality check: the late consumer that keeps its inputs live."""
+    name = "combine"
+    n_in_datasets = 2
+
+    def setup(self, in_datasets):
+        dout = in_datasets[0].like(self.out_dataset_names[0])
+        self.chunk_frames(self.default_pattern(in_datasets[0]))
+        return [dout]
+
+    def process_frames(self, frames):
+        return frames[0] - 0.5 * frames[1]
+
+
+class NullSaver(BaseSaver):
+    name = "null_saver"
+
+    def save(self, ds):
+        ds.metadata["saved"] = True
+
+
+def branching_chain(a) -> ProcessList:
+    """raw -> a -> b, then combine(b, a): 'a' is read again AFTER its
+    replacement-chain successor was produced."""
+    pl = ProcessList()
+    pl.add(VolLoader, params={"array": a}, out_datasets=("raw",))
+    pl.add(AddF, params={"add": 1.0},
+           in_datasets=("raw",), out_datasets=("a",))
+    pl.add(AddF, params={"add": 2.0},
+           in_datasets=("a",), out_datasets=("b",))
+    pl.add(Combine, in_datasets=("b", "a"), out_datasets=("out",))
+    pl.add(NullSaver, in_datasets=("out",))
+    return pl
+
+
+def _mesh1():
+    return Mesh(np.asarray(jax.devices()[:1]), ("data",))
+
+
+@pytest.fixture
+def data(rng):
+    return rng.normal(size=(4, 6, 5)).astype(np.float32)
+
+
+def _want(a):
+    return (a + 3.0) - 0.5 * (a + 1.0)
+
+
+# ---------------------------------------------------------------- liveness
+def test_required_live_names(data):
+    r = PluginRunner(branching_chain(data), InMemoryTransport())
+    r.prepare()
+    assert r.n_steps == 3
+    # resume from step 1: step 1 (a->b) and step 2 (combine) read 'a'
+    assert r.required_live_names(1) == {"a"}
+    # resume from step 2: combine reads both 'a' and 'b'
+    assert r.required_live_names(2) == {"a", "b"}
+    # resume from step 3 (all done): only the saver's dataset remains
+    assert r.required_live_names(3) == {"out"}
+
+
+def test_last_use_flags_set_per_step(data):
+    seen = {}
+
+    class SpyCombine(Combine):
+        def pre_process(self):
+            seen[self.name] = [pd.last_use for pd in self.in_data]
+
+    class SpyAdd(AddF):
+        def pre_process(self):
+            seen[self.params["add"]] = [pd.last_use
+                                        for pd in self.in_data]
+
+    pl = ProcessList()
+    pl.add(VolLoader, params={"array": data}, out_datasets=("raw",))
+    pl.add(SpyAdd, params={"add": 1.0},
+           in_datasets=("raw",), out_datasets=("a",))
+    pl.add(SpyAdd, params={"add": 2.0},
+           in_datasets=("a",), out_datasets=("b",))
+    pl.add(SpyCombine, in_datasets=("b", "a"), out_datasets=("out",))
+    pl.add(NullSaver, in_datasets=("out",))
+    PluginRunner(pl, InMemoryTransport()).run()
+    assert seen[1.0] == [True]       # raw: never read again -> donatable
+    assert seen[2.0] == [False]      # 'a' is read again by the combiner
+    assert seen["combine"] == [True, True]   # final use of both
+
+
+def test_sharded_branching_chain_survives_donation(data):
+    """Seed regression: donate=True deleted 'a' at its first use; the
+    combiner then read a dead buffer."""
+    tr = ShardedTransport(_mesh1(), donate=True)
+    r = PluginRunner(branching_chain(data), tr)
+    r.run()
+    got = tr.read(r.datasets["out"])
+    np.testing.assert_allclose(got, _want(data), rtol=1e-6)
+
+
+# ------------------------------------------------------- kill/resume
+def _interrupted_run(chain_fn, a, transport_factory, store, job_id,
+                     kill_after=2):
+    ref = PluginRunner(chain_fn(a), transport_factory())
+    ref.run()
+    want = np.asarray(ref.transport.read(ref.datasets["out"]))
+
+    r1 = PluginRunner(chain_fn(a), transport_factory())
+    r1.prepare()
+    for _ in range(kill_after):
+        r1.step()
+        store.save(job_id, r1)
+    # "kill" r1; a fresh runner resumes from the store
+    r2 = PluginRunner(chain_fn(a), transport_factory())
+    assert store.restore(job_id, r2) == kill_after
+    while r2.step():
+        pass
+    r2.finalise()
+    got = np.asarray(r2.transport.read(r2.datasets["out"]))
+    return got, want
+
+
+def test_kill_resume_bit_identical_sharded_donate(tmp_path, data):
+    """The checkpoint.py:57-61 regression: with donation ON, the
+    interrupted-then-resumed run must still see every dataset a later
+    plugin needs, and reproduce the uninterrupted result exactly."""
+    store = CheckpointStore(str(tmp_path))
+    mesh = _mesh1()
+    got, want = _interrupted_run(
+        branching_chain, data,
+        lambda: ShardedTransport(mesh, donate=True), store, "jS")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kill_resume_bit_identical_chunked(tmp_path, data):
+    store = CheckpointStore(str(tmp_path / "store"))
+    dirs = iter(range(100))
+
+    def factory():
+        return ChunkedFileTransport(
+            directory=str(tmp_path / f"tr{next(dirs)}"))
+
+    got, want = _interrupted_run(branching_chain, data, factory,
+                                 store, "jC")
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------- incremental behaviour
+def test_incremental_checkpoint_skips_unchanged_dense_datasets(
+        tmp_path, data):
+    store = CheckpointStore(str(tmp_path))
+    r = PluginRunner(branching_chain(data), InMemoryTransport())
+    r.prepare()
+    r.step()
+    s1 = store.save("j1", r)
+    r.step()
+    s2 = store.save("j1", r)
+    # first checkpoint wrote raw + a; second writes ONLY the new 'b'
+    assert s1["files_written"] == 2 and s1["files_reused"] == 0
+    assert s2["files_written"] == 1 and s2["files_reused"] == 2
+    assert s2["bytes_written"] < s1["bytes_written"]
+    man = store.load("j1")
+    assert man["version"] == 2
+    by_name = {e["name"]: e for e in man["datasets"]}
+    assert by_name["raw"]["chunks_written"] == []      # increment: none
+    assert by_name["b"]["chunks_written"] == "all"
+    assert set(man["required"]) == {"a", "b"}
+
+
+def test_chunked_backing_is_linked_not_copied(tmp_path, data):
+    store = CheckpointStore(str(tmp_path / "store"))
+    tr = ChunkedFileTransport(directory=str(tmp_path / "tr"))
+    r = PluginRunner(branching_chain(data), tr)
+    r.prepare()
+    r.step()
+    s1 = store.save("j1", r)
+    assert s1["files_linked"] >= 1                     # 'a' hard-linked
+    cf = r.datasets["a"].backing
+    assert isinstance(cf, ChunkedFile)
+    ckpt = os.path.join(str(tmp_path / "store"), "j1", "a.ckpt")
+    assert os.path.samefile(cf.path, ckpt)
+    assert cf.dirty == set()                           # marked clean
+    # steady state: nothing changed -> zero-byte increment for 'a'
+    r.step()
+    s2 = store.save("j1", r)
+    man = store.load("j1")
+    by_name = {e["name"]: e for e in man["datasets"]}
+    assert by_name["a"]["chunks_written"] == []
+    assert s2["files_reused"] >= 1
+
+
+def test_v1_npy_checkpoints_remain_restorable(tmp_path, data):
+    v1 = CheckpointStore(str(tmp_path), format="npy")
+    r = PluginRunner(branching_chain(data), InMemoryTransport())
+    r.prepare()
+    r.step()
+    r.step()
+    st = v1.save("j1", r)
+    assert st["files_written"] == 3                    # dense: rewrites all
+    man = v1.load("j1")
+    assert all(e["format"] == "npy" for e in man["datasets"])
+    # a default (chunked) store reads the v1 manifest + files
+    r2 = PluginRunner(branching_chain(data), InMemoryTransport())
+    assert CheckpointStore(str(tmp_path)).restore("j1", r2) == 2
+    while r2.step():
+        pass
+    r2.finalise()
+    got = np.asarray(r2.transport.read(r2.datasets["out"]))
+    ref = PluginRunner(branching_chain(data), InMemoryTransport()).run()
+    np.testing.assert_array_equal(got, np.asarray(ref["out"].materialise()))
+
+
+# ----------------------------------------------- ChunkedFile IO paths
+def test_chunked_file_full_chunk_write_skips_read(tmp_path):
+    """A write that covers a whole chunk must not read-modify-write; the
+    edge chunks (clipped by the array bounds) count as fully covered."""
+    cf = ChunkedFile(str(tmp_path / "t.dat"), (6, 6), np.float32, (4, 4),
+                     cache_bytes=64)                  # 1 chunk cached
+    cf.write_all(np.ones((6, 6), np.float32))
+    assert cf.stats.chunk_reads == 0 and cf.stats.bytes_read == 0
+    # a partial write still needs the round trip
+    cf.write((slice(1, 3), slice(0, 6)), np.zeros((2, 6), np.float32))
+    assert cf.stats.chunk_reads > 0
+
+
+def test_chunked_file_dirty_tracking(tmp_path):
+    cf = ChunkedFile(str(tmp_path / "t.dat"), (8, 8), np.float32, (4, 4))
+    cf.write_all(np.ones((8, 8), np.float32))
+    assert cf.dirty == {0, 1, 2, 3}                  # every chunk touched
+    cf.mark_clean()
+    assert cf.dirty == set()
+    cf.write((slice(0, 2), slice(0, 2)), np.zeros((2, 2), np.float32))
+    assert cf.dirty == {0}                           # only the increment
+    # flushing persists but does NOT reset the increment
+    cf.flush()
+    assert cf.dirty == {0}
+
+
+def test_chunked_file_readonly_mode(tmp_path):
+    path = str(tmp_path / "t.dat")
+    cf = ChunkedFile(path, (4, 4), np.float32, (2, 2))
+    ref = np.arange(16, dtype=np.float32).reshape(4, 4)
+    cf.write_all(ref)
+    ro = ChunkedFile(path, (4, 4), np.float32, (2, 2), mode="r")
+    np.testing.assert_array_equal(ro.read_all(), ref)
+    with pytest.raises(OSError):
+        ro.write((slice(0, 2), slice(0, 2)), np.zeros((2, 2)))
+
+
+def test_chunked_file_load_from(tmp_path):
+    ref = np.arange(64, dtype=np.float32).reshape(8, 8)
+    src = ChunkedFile(str(tmp_path / "src.dat"), (8, 8), np.float32,
+                      (4, 4))
+    src.write_all(ref)
+    dst = ChunkedFile(str(tmp_path / "dst.dat"), (8, 8), np.float32,
+                      (4, 4))
+    dst.load_from(src.path)
+    np.testing.assert_array_equal(dst.read_all(), ref)
+
+
+# ------------------------------------------------------- loud failures
+def test_restore_raises_when_required_dataset_missing(tmp_path, data):
+    store = CheckpointStore(str(tmp_path))
+    r = PluginRunner(branching_chain(data), InMemoryTransport())
+    r.prepare()
+    r.step()
+    r.step()
+    store.save("j1", r)
+    # corrupt the manifest: drop 'a', which the combiner still needs
+    mpath = os.path.join(str(tmp_path), "j1", "checkpoint.nxs.json")
+    man = json.load(open(mpath))
+    man["datasets"] = [e for e in man["datasets"] if e["name"] != "a"]
+    json.dump(man, open(mpath, "w"))
+    r2 = PluginRunner(branching_chain(data), InMemoryTransport())
+    with pytest.raises(CheckpointError, match="required dataset"):
+        store.restore("j1", r2)
+
+
+def test_restore_raises_when_required_file_unreadable(tmp_path, data):
+    store = CheckpointStore(str(tmp_path))
+    r = PluginRunner(branching_chain(data), InMemoryTransport())
+    r.prepare()
+    r.step()
+    r.step()
+    store.save("j1", r)
+    os.remove(os.path.join(str(tmp_path), "j1", "a.ckpt"))
+    r2 = PluginRunner(branching_chain(data), InMemoryTransport())
+    with pytest.raises(CheckpointError, match="unreadable"):
+        store.restore("j1", r2)
+
+
+def test_save_refuses_dead_required_dataset(tmp_path, data):
+    """If a transport donated a buffer the resume still needs, the
+    checkpoint must refuse — an unresumable checkpoint is worse than
+    none."""
+    class Dead:
+        shape, dtype = (2,), np.float32
+
+        def is_deleted(self):
+            return True
+
+    store = CheckpointStore(str(tmp_path))
+    r = PluginRunner(branching_chain(data), InMemoryTransport())
+    r.prepare()
+    r.step()
+    r.datasets["a"].backing = Dead()
+    with pytest.raises(CheckpointError, match="donated"):
+        store.save("j1", r)

@@ -108,3 +108,59 @@ def test_json_roundtrip(tmp_path):
     # function params are not serialisable and are dropped — the check
     # re-validates structure
     assert pl2.entries[1].in_datasets == ("tomo",)
+
+
+# ------------------------------------------------------ run_process_list
+class DescribeLoader(BaseLoader):
+    """Loader that only DESCRIBES its dataset (no backing) — the inline
+    case run_process_list's ``data`` argument exists for."""
+    name = "describe_loader"
+    parameters = {"shape": None}
+
+    def load(self):
+        d = DataSet(self.out_dataset_names[0], self.params["shape"],
+                    np.float32, ("theta", "y", "x"))
+        d.add_pattern("PROJECTION", core=("y", "x"), slice_=("theta",))
+        return [d]
+
+
+class MetaSaver(BaseSaver):
+    name = "meta_saver"
+
+    def save(self, ds):
+        ds.metadata["saved"] = True
+
+
+def test_run_process_list_prepopulates_loader_datasets():
+    from repro.core import run_process_list
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(3, 4, 4)).astype(np.float32)
+    pl = ProcessList()
+    pl.add(DescribeLoader, params={"shape": list(a.shape)},
+           out_datasets=("tomo",))
+    pl.add(LambdaFilter, params={"fn": lambda b: b * 2.0,
+                                 "pattern": "PROJECTION"},
+           in_datasets=("tomo",), out_datasets=("tomo",))
+    pl.add(MetaSaver, in_datasets=("tomo",))
+    out = run_process_list(pl, {"tomo": a, "not_a_dataset": a})
+    np.testing.assert_allclose(np.asarray(out["tomo"].materialise()),
+                               a * 2.0, rtol=1e-6)
+
+
+def test_run_process_list_ignores_plugin_produced_names():
+    """``data`` only pre-populates LOADER-created datasets; a name that a
+    plugin produces must come from the chain, not the dict."""
+    from repro.core import run_process_list
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(3, 4, 4)).astype(np.float32)
+    pl = ProcessList()
+    pl.add(DescribeLoader, params={"shape": list(a.shape)},
+           out_datasets=("tomo",))
+    pl.add(LambdaFilter, params={"fn": lambda b: b + 1.0,
+                                 "pattern": "PROJECTION"},
+           in_datasets=("tomo",), out_datasets=("filtered",))
+    pl.add(MetaSaver, in_datasets=("filtered",))
+    out = run_process_list(pl, {"tomo": a,
+                                "filtered": np.zeros_like(a)})
+    np.testing.assert_allclose(np.asarray(out["filtered"].materialise()),
+                               a + 1.0, rtol=1e-6)

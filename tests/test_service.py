@@ -143,6 +143,30 @@ def test_chain_signature_ignores_data_params():
     assert s0 != s2                          # different pipeline
 
 
+def test_get_batch_members_join_in_dispatch_order(data):
+    """Gang members must be picked in (-priority, seq) order, not raw
+    heap-array order: a truncated gang takes the jobs whose turn it is."""
+    q = JobQueue()
+    head = q.submit(_trace_chain(data), priority=9)
+    members = [q.submit(_trace_chain(data), priority=0) for _ in range(4)]
+    batch = q.get_batch(max_jobs=3, timeout=0)
+    assert [j.job_id for j in batch] == \
+        [head.job_id, members[0].job_id, members[1].job_id]
+    # the passed-over jobs stay queued, FIFO intact
+    assert q.get(0).job_id == members[2].job_id
+    assert q.get(0).job_id == members[3].job_id
+
+
+def test_get_batch_prefers_higher_priority_members(data):
+    q = JobQueue()
+    head = q.submit(_trace_chain(data), priority=9)
+    lo = q.submit(_trace_chain(data), priority=0)
+    hi = q.submit(_trace_chain(data), priority=5)
+    batch = q.get_batch(max_jobs=2, timeout=0)
+    assert [j.job_id for j in batch] == [head.job_id, hi.job_id]
+    assert q.get(0).job_id == lo.job_id
+
+
 def test_get_batch_groups_identical_chains(data, rng):
     other = rng.normal(size=(4, 6, 5)).astype(np.float32)
     q = JobQueue()
@@ -227,6 +251,37 @@ def test_scheduler_resumes_resubmitted_job(tmp_path, data):
     assert job.resumed_from == 1
     assert TraceFilter.executed == ["f1", "f2", "f3"]
     got = job.runner.transport.read(job.runner.datasets["d"])
+    np.testing.assert_allclose(got, np.asarray(ref["d"].materialise()))
+
+
+def test_gang_path_resumes_checkpointed_job(tmp_path, data, rng):
+    """The gang path must set resumed_from too: a checkpointed job that
+    lands in a gang is restored and driven solo (a gang would force it
+    back into lockstep from step 0), while its gang-mates run normally."""
+    store = CheckpointStore(str(tmp_path))
+    ref = PluginRunner(_trace_chain(data), InMemoryTransport()).run()
+    # simulate a killed job: partial run left a checkpoint behind
+    r = PluginRunner(_trace_chain(data), InMemoryTransport())
+    r.prepare()
+    r.step()
+    store.save("jobX", r)
+
+    other = rng.normal(size=data.shape).astype(np.float32)
+    TraceFilter.executed = []
+    q = JobQueue()
+    sched = PipelineScheduler(q, n_workers=1, checkpoints=store,
+                              batch_identical=True, batch_max=4)
+    jx = q.submit(_trace_chain(data), job_id="jobX")
+    jy = q.submit(_trace_chain(other), job_id="jobY")
+    sched.start()
+    assert sched.drain(timeout=60)
+    sched.shutdown()
+    assert jx.state is JobState.DONE, jx.snapshot()
+    assert jy.state is JobState.DONE, jy.snapshot()
+    assert jx.resumed_from == 1
+    assert jy.resumed_from == 0
+    assert TraceFilter.executed.count("f0") == 1     # only jobY ran f0
+    got = jx.runner.transport.read(jx.runner.datasets["d"])
     np.testing.assert_allclose(got, np.asarray(ref["d"].materialise()))
 
 
