@@ -13,7 +13,8 @@ import numpy as np
 import jax
 from jax.sharding import Mesh
 
-from repro.service import CompileCache, JobQueue, PipelineScheduler
+from repro.service import (CompileCache, JobQueue, PipelineClient,
+                           PipelineScheduler, PipelineService)
 from repro.core import ShardedTransport
 from repro.tomo import standard_chain
 
@@ -85,6 +86,31 @@ def run(report):
     report("service_gang_4jobs", wall / 4 * 1e6,
            f"{4 / wall:.2f} jobs/s, {schedg.gangs_run} gang(s), "
            f"{gcache.stats()['misses']} compiles total")
+
+    # -- HTTP round-trip: same warmed cache, but submit/poll/result ----
+    # over the wire — measures the front end's overhead vs in-process
+    # (spec serialisation + JSON + npy body per job)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    svc = PipelineService(
+        n_workers=2, compile_cache=cache,
+        transport_factory=lambda job: ShardedTransport(
+            mesh, donate=True, compile_cache=cache))
+    host, port = svc.serve(port=0)
+    client = PipelineClient(f"http://{host}:{port}")
+    try:
+        import time
+        t0 = time.perf_counter()
+        ids = [client.submit(_chain(s)) for s in range(30, 30 + n_jobs)]
+        for jid in ids:
+            snap = client.wait(jid, timeout=600, poll=0.02)
+            assert snap["state"] == "done", snap
+            client.result(jid)
+        wall = time.perf_counter() - t0
+    finally:
+        svc.stop()
+    report("service_http_roundtrip", wall / n_jobs * 1e6,
+           f"{n_jobs / wall:.2f} jobs/s over HTTP (submit+poll+result, "
+           f"warmed cache; compare service_throughput_w2)")
 
 
 def main() -> None:

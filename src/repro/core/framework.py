@@ -90,6 +90,19 @@ class PluginRunner:
     def step_labels(self) -> list[str]:
         return ["+".join(p.name for p in g) for g in self._groups]
 
+    def result_names(self) -> list[str]:
+        """Names of the datasets consumed by savers — the chain's
+        outputs, in saver order.  These are what a service result
+        endpoint should offer for download.  Requires :meth:`prepare`."""
+        if not self._prepared:
+            raise RuntimeError("result_names before prepare()")
+        names: list[str] = []
+        for sv in self._savers:
+            for n in sv.in_dataset_names:
+                if n not in names:
+                    names.append(n)
+        return names
+
     # -- dataset liveness ----------------------------------------------
     def _compute_liveness(self) -> None:
         """Per-dataset-object liveness over the step sequence: which step

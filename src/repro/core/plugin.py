@@ -141,6 +141,31 @@ class BasePlugin:
     def get_param(self, key: str):
         return self.params[key]
 
+    @classmethod
+    def param_spec(cls) -> dict[str, Any]:
+        """Introspect this plugin class for the service layer's wire
+        format (``repro.service.wire``): declared parameters with their
+        defaults, which of them are ``data_params``, and the dataset
+        arity.  Everything returned is JSON-serialisable so a remote
+        client can discover the registry via ``GET /plugins``.
+
+        Returns:
+            dict with ``name`` (wire name), ``doc`` (first docstring
+            line), ``n_in_datasets``/``n_out_datasets``, and ``params``
+            mapping each parameter to ``{"default", "data_param"}``
+            (non-JSON defaults are shown as their ``repr``).
+        """
+        params = {}
+        for k, v in cls.parameters.items():
+            params[k] = {"default": v if _is_jsonable(v) else repr(v),
+                         "data_param": k in cls.data_params}
+        doc = (cls.__doc__ or "").strip().splitlines()
+        return {"name": cls.name,
+                "doc": doc[0] if doc else "",
+                "n_in_datasets": cls.n_in_datasets,
+                "n_out_datasets": cls.n_out_datasets,
+                "params": params}
+
     # -- compile-cache support (service layer) --------------------------
     #: instance attrs that never feed process_frames
     _NON_CONST_ATTRS = frozenset({

@@ -5,13 +5,30 @@ one compiled-plugin cache, report per-job status and aggregate
 throughput, and verify every reconstruction against a serial
 ``PluginRunner`` reference.
 
-    PYTHONPATH=src python -m repro.launch.pipeline_serve --jobs 4
-    PYTHONPATH=src python -m repro.launch.pipeline_serve --jobs 8 \
-        --workers 4 --batch --transport sharded
+Three modes:
+
+* **demo** (default) — submit ``--jobs`` synthetic scans in-process,
+  drain, verify::
+
+      PYTHONPATH=src python -m repro.launch.pipeline_serve --jobs 4
+      PYTHONPATH=src python -m repro.launch.pipeline_serve --jobs 8 \\
+          --workers 4 --batch --transport sharded
+
+* **server** — bind the JSON-over-HTTP front end and serve until
+  interrupted (see ``docs/service.md``)::
+
+      PYTHONPATH=src python -m repro.launch.pipeline_serve --serve 8973
+
+* **client** — talk to a running server::
+
+      PYTHONPATH=src python -m repro.launch.pipeline_serve client \\
+          --url http://127.0.0.1:8973 submit --demo-chain --wait
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 
 import numpy as np
@@ -22,8 +39,30 @@ from jax.sharding import Mesh
 from ..core import (ChunkedFileTransport, InMemoryTransport, PluginRunner,
                     ShardedTransport)
 from ..service import (CheckpointStore, CompileCache, JobQueue,
-                       PipelineScheduler)
+                       PipelineClient, PipelineScheduler, PipelineService,
+                       ServiceError, to_spec)
 from ..tomo import standard_chain
+
+_EPILOG = """\
+transport notes:
+  --transport chunked   every dataset lives in a chunk-addressed file
+                        (RAM is O(frames), never O(dataset)); with
+                        --checkpoint-dir the checkpointer HARD-LINKS
+                        those chunk files and writes only dirty-chunk
+                        increments, so per-step checkpoints are cheap
+                        (see docs/checkpoint-format.md)
+  --transport sharded   jit-compiled plugins on the device mesh, with
+                        the process-level compile cache
+
+scheduling notes:
+  --batch gangs queued jobs with identical chain signatures: each
+  plugin step runs as ONE compiled call over all gang members, driven
+  by the single worker that popped the gang — so for identical-chain
+  workloads --workers does NOT multiply gang throughput; extra workers
+  only help when distinct chains (or resumed jobs, which always step
+  solo) are mixed in.  --batch also disables buffer donation on the
+  sharded transport (stacked gang inputs outlive the call).
+"""
 
 
 def _chain(args, seed: int):
@@ -32,30 +71,59 @@ def _chain(args, seed: int):
                           use_pallas=args.pallas)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--jobs", type=int, default=4)
-    ap.add_argument("--workers", type=int, default=2)
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.pipeline_serve",
+        description=__doc__.split("\n\n")[0],
+        epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--jobs", type=int, default=4,
+                    help="demo mode: number of synthetic scans to submit")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="scheduler worker threads (see scheduling notes "
+                         "below for the --batch interaction)")
     ap.add_argument("--transport", default="sharded",
-                    choices=("sharded", "inmemory", "chunked"))
+                    choices=("sharded", "inmemory", "chunked"),
+                    help="execution transport (see transport notes below)")
     ap.add_argument("--batch", action=argparse.BooleanOptionalAction,
                     default=False,
-                    help="gang identical chains into one compiled call")
+                    help="gang identical chains into one compiled call "
+                         "per plugin step (ganged steps run under a "
+                         "single worker; see scheduling notes)")
     ap.add_argument("--fuse", action=argparse.BooleanOptionalAction,
-                    default=False)
+                    default=False,
+                    help="fuse consecutive linear plugins into one jit")
     ap.add_argument("--verify", action=argparse.BooleanOptionalAction,
                     default=True,
-                    help="compare each job against a serial PluginRunner")
+                    help="demo mode: compare each job against a serial "
+                         "PluginRunner")
     ap.add_argument("--pallas", action=argparse.BooleanOptionalAction,
                     default=True)
     ap.add_argument("--n-det", type=int, default=48)
     ap.add_argument("--n-angles", type=int, default=48)
     ap.add_argument("--n-rows", type=int, default=2)
-    ap.add_argument("--max-pending", type=int, default=64)
-    ap.add_argument("--checkpoint-dir", default=None)
-    args = ap.parse_args()
+    ap.add_argument("--max-pending", type=int, default=64,
+                    help="admission bound: submissions past this many "
+                         "non-terminal jobs get QueueFull / HTTP 429")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist per-plugin checkpoints here; a killed "
+                         "job resubmitted with the same id resumes at "
+                         "the last finished plugin")
+    ap.add_argument("--serve", type=int, metavar="PORT", default=None,
+                    help="serve the HTTP front end on PORT instead of "
+                         "running the demo (POST /jobs, GET /jobs/{id}, "
+                         "GET /jobs/{id}/result, GET /stats, ...)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address for --serve")
+    ap.add_argument("--max-history", type=int, default=256,
+                    help="--serve: retained terminal jobs (older results "
+                         "are evicted)")
+    ap.add_argument("--batch-max", type=int, default=4,
+                    help="--batch: gang size bound")
+    return ap
 
-    cache = CompileCache()
+
+def _transport_factory(args, cache: CompileCache):
     if args.transport == "sharded":
         mesh = Mesh(np.asarray(jax.devices()), ("data",))
         # gang batching stacks job inputs — donation would invalidate
@@ -64,24 +132,51 @@ def main() -> None:
         # buffer only at its FINAL use, so every dataset a checkpoint
         # (or a branching chain) still needs stays alive.
         donate = not args.batch
+        return lambda job: ShardedTransport(mesh, donate=donate,
+                                            compile_cache=cache)
+    if args.transport == "chunked":
+        return lambda job: ChunkedFileTransport()
+    return lambda job: InMemoryTransport()
 
-        def factory(job):
-            return ShardedTransport(mesh, donate=donate,
-                                    compile_cache=cache)
-    elif args.transport == "chunked":
-        def factory(job):
-            return ChunkedFileTransport()
-    else:
-        def factory(job):
-            return InMemoryTransport()
 
+# ----------------------------------------------------------------------
+def _serve_main(args) -> None:
+    cache = CompileCache()
+    checkpoints = (CheckpointStore(args.checkpoint_dir)
+                   if args.checkpoint_dir else None)
+    service = PipelineService(
+        transport_factory=_transport_factory(args, cache),
+        n_workers=args.workers, max_pending=args.max_pending,
+        max_history=args.max_history, checkpoints=checkpoints,
+        batch_identical=args.batch, batch_max=args.batch_max,
+        fuse=args.fuse, compile_cache=cache)
+    host, port = service.serve(host=args.host, port=args.serve,
+                               block=False)
+    print(f"pipeline service listening on http://{host}:{port}  "
+          f"({args.workers} workers, transport={args.transport}"
+          f"{', gang-batched' if args.batch else ''}"
+          f"{', checkpointed' if checkpoints else ''})", flush=True)
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        print("shutting down")
+    finally:
+        service.stop()
+
+
+# ----------------------------------------------------------------------
+def _demo_main(args) -> None:
+    cache = CompileCache()
+    factory = _transport_factory(args, cache)
     queue = JobQueue(max_pending=args.max_pending)
     checkpoints = (CheckpointStore(args.checkpoint_dir)
                    if args.checkpoint_dir else None)
     sched = PipelineScheduler(
         queue, transport_factory=factory, n_workers=args.workers,
         checkpoints=checkpoints, batch_identical=args.batch,
-        batch_max=args.jobs, fuse=args.fuse, compile_cache=cache)
+        batch_max=max(args.batch_max, args.jobs), fuse=args.fuse,
+        compile_cache=cache)
 
     jobs = [queue.submit(_chain(args, seed=i), priority=0,
                          job_id=f"tomo-{i:03d}", metadata={"seed": i})
@@ -122,6 +217,99 @@ def main() -> None:
     print(f"compile cache: {cache.stats()}")
     if st.get("gangs_run"):
         print(f"gangs executed: {st['gangs_run']}")
+
+
+# ----------------------------------------------------------------------
+def _client_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.pipeline_serve client",
+        description="Talk to a running pipeline service over HTTP.")
+    ap.add_argument("--url", default="http://127.0.0.1:8973",
+                    help="service base URL")
+    sub = ap.add_subparsers(dest="action", required=True)
+
+    s = sub.add_parser("submit", help="POST a process list")
+    s.add_argument("--spec", metavar="FILE", default=None,
+                   help="spec v1 JSON file (see docs/plugin-spec.md)")
+    s.add_argument("--demo-chain", action="store_true",
+                   help="submit the standard synthetic chain instead of "
+                        "a spec file")
+    s.add_argument("--n-det", type=int, default=48)
+    s.add_argument("--n-angles", type=int, default=48)
+    s.add_argument("--n-rows", type=int, default=2)
+    s.add_argument("--seed", type=int, default=0)
+    s.add_argument("--priority", type=int, default=0)
+    s.add_argument("--job-id", default=None)
+    s.add_argument("--wait", action="store_true",
+                   help="poll until the job is terminal")
+
+    st = sub.add_parser("status", help="GET one job's snapshot")
+    st.add_argument("job_id")
+    w = sub.add_parser("wait", help="poll a job to completion")
+    w.add_argument("job_id")
+    w.add_argument("--timeout", type=float, default=600.0)
+    r = sub.add_parser("result", help="download an output dataset (.npy)")
+    r.add_argument("job_id")
+    r.add_argument("--dataset", default=None)
+    r.add_argument("--out", metavar="FILE", default=None,
+                   help="write the npy here (default: <job_id>.npy)")
+    cx = sub.add_parser("cancel", help="DELETE a queued job")
+    cx.add_argument("job_id")
+    sub.add_parser("jobs", help="GET every job's snapshot")
+    sub.add_parser("stats", help="GET scheduler + compile-cache stats")
+    sub.add_parser("plugins", help="GET the wire-format plugin registry")
+    return ap
+
+
+def _client_main(argv: list[str]) -> None:
+    args = _client_parser().parse_args(argv)
+    client = PipelineClient(args.url)
+    try:
+        if args.action == "submit":
+            if args.spec:
+                with open(args.spec) as fh:
+                    spec = json.load(fh)
+            elif args.demo_chain:
+                spec = to_spec(standard_chain(
+                    n_det=args.n_det, n_angles=args.n_angles,
+                    n_rows=args.n_rows, seed=args.seed))
+            else:
+                raise SystemExit("submit needs --spec FILE or --demo-chain")
+            job_id = client.submit(spec, priority=args.priority,
+                                   job_id=args.job_id)
+            print(job_id)
+            if args.wait:
+                print(json.dumps(client.wait(job_id), indent=2))
+        elif args.action == "status":
+            print(json.dumps(client.status(args.job_id), indent=2))
+        elif args.action == "wait":
+            print(json.dumps(client.wait(args.job_id,
+                                         timeout=args.timeout), indent=2))
+        elif args.action == "result":
+            arr = client.result(args.job_id, dataset=args.dataset)
+            out = args.out or f"{args.job_id}.npy"
+            np.save(out, arr)
+            print(f"{out}: shape={arr.shape} dtype={arr.dtype}")
+        elif args.action == "cancel":
+            print(json.dumps(client.cancel(args.job_id), indent=2))
+        elif args.action == "jobs":
+            print(json.dumps(client.jobs(), indent=2))
+        elif args.action == "stats":
+            print(json.dumps(client.stats(), indent=2))
+        elif args.action == "plugins":
+            print(json.dumps(client.plugins(), indent=2))
+    except ServiceError as e:
+        raise SystemExit(f"error: {e}")
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv[:1] == ["client"]:
+        return _client_main(argv[1:])
+    args = _build_parser().parse_args(argv)
+    if args.serve is not None:
+        return _serve_main(args)
+    return _demo_main(args)
 
 
 if __name__ == "__main__":

@@ -1,15 +1,22 @@
 # The service layer — from processing *framework* to facility *service*
 # (the step Nanosurveyor/Daisy make explicit): a multi-tenant scheduler
 # that runs many process lists concurrently over shared workers, with a
-# process-level compiled-plugin cache and checkpoint/resume.
+# process-level compiled-plugin cache, checkpoint/resume, and a
+# JSON-over-HTTP front end (server/client/wire) for remote submission.
 from .compile_cache import CompileCache
 from .checkpoint import CheckpointError, CheckpointStore
+from .client import PipelineClient, ServiceError
 from .job import Job, JobState, chain_signature
 from .queue import JobQueue, QueueFull
 from .scheduler import PipelineScheduler
+from .server import PipelineService
+from .wire import (WireError, from_spec, register_plugin,
+                   registered_plugins, registry_spec, to_spec)
 
 __all__ = [
     "Job", "JobState", "chain_signature", "JobQueue", "QueueFull",
     "CompileCache", "CheckpointError", "CheckpointStore",
-    "PipelineScheduler",
+    "PipelineScheduler", "PipelineService", "PipelineClient",
+    "ServiceError", "WireError", "from_spec", "to_spec",
+    "register_plugin", "registered_plugins", "registry_spec",
 ]

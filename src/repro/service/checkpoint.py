@@ -66,8 +66,21 @@ def _sig_str(sig: tuple) -> str:
 
 
 class CheckpointStore:
+    """Per-job checkpoint directories under one root (module docstring
+    has the format; spec in ``docs/checkpoint-format.md``)."""
+
     def __init__(self, root: str, format: str = "chunked",
                  cache_bytes: int = DEFAULT_CACHE_BYTES):
+        """Args:
+            root: directory holding one subdirectory per job id
+                (created if missing).
+            format: ``"chunked"`` (manifest v2, incremental) or
+                ``"npy"`` (v1 dense rewrite, for comparison).
+            cache_bytes: chunk-cache budget for checkpoint file I/O.
+
+        Raises:
+            ValueError: unknown ``format``.
+        """
         if format not in ("chunked", "npy"):
             raise ValueError(f"unknown checkpoint format {format!r}")
         self.root = root
@@ -244,6 +257,8 @@ class CheckpointStore:
 
     # ------------------------------------------------------------------
     def load(self, job_id: str) -> dict[str, Any] | None:
+        """Read a job's manifest as a dict (None if absent/corrupt —
+        callers treat both as "no checkpoint")."""
         try:
             with open(self._manifest_path(job_id)) as fh:
                 return json.load(fh)
@@ -322,4 +337,6 @@ class CheckpointStore:
             ds.backing = arr
 
     def clear(self, job_id: str) -> None:
+        """Delete a job's checkpoint directory (called on successful
+        completion; idempotent)."""
         shutil.rmtree(self._dir(job_id), ignore_errors=True)

@@ -1,0 +1,180 @@
+"""PipelineClient — stdlib HTTP client for the pipeline service.
+
+The submit side of cross-process serving: build a process list locally
+(or load a spec JSON), ``submit`` it, ``wait`` on the polling loop,
+``result`` the reconstruction back as numpy.  Wraps every endpoint of
+:mod:`repro.service.server`; errors carry the server's validation
+message (:class:`ServiceError.status` / ``.message``).
+
+    >>> client = PipelineClient("http://127.0.0.1:8973")
+    >>> job_id = client.submit(standard_chain(n_det=48), priority=2)
+    >>> client.wait(job_id, timeout=120)["status"]
+    'done'
+    >>> recon = client.result(job_id)        # np.ndarray
+"""
+from __future__ import annotations
+
+import io
+import json
+import time
+import urllib.error
+import urllib.request
+from typing import Any
+from urllib.parse import quote
+
+import numpy as np
+
+from ..core.process_list import ProcessList
+from .wire import to_spec
+
+_TERMINAL = ("done", "failed", "cancelled")
+
+
+class ServiceError(RuntimeError):
+    """An HTTP endpoint answered with an error status.
+
+    Attributes:
+        status: the HTTP status code (400 validation, 404 unknown,
+            409 conflict, 429 admission rejection, ...).
+        message: the server's ``error`` body field.
+    """
+
+    def __init__(self, status: int, message: str):
+        super().__init__(f"HTTP {status}: {message}")
+        self.status = status
+        self.message = message
+
+
+class PipelineClient:
+    def __init__(self, base_url: str, timeout: float = 30.0):
+        """Args:
+            base_url: e.g. ``http://127.0.0.1:8973`` (no trailing slash
+                needed).
+            timeout: per-request socket timeout in seconds.
+        """
+        self.base_url = base_url.rstrip("/")
+        self.timeout = timeout
+
+    # -- transport ------------------------------------------------------
+    def _request(self, method: str, path: str,
+                 body: dict | None = None, raw: bool = False) -> Any:
+        data = None if body is None else json.dumps(body).encode()
+        req = urllib.request.Request(
+            self.base_url + path, data=data, method=method,
+            headers={"Content-Type": "application/json"} if data else {})
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+                payload = resp.read()
+        except urllib.error.HTTPError as e:
+            detail = e.read()
+            try:
+                message = json.loads(detail)["error"]
+            except (json.JSONDecodeError, KeyError, TypeError):
+                message = detail.decode(errors="replace") or e.reason
+            raise ServiceError(e.code, message) from None
+        return payload if raw else json.loads(payload)
+
+    # -- endpoints ------------------------------------------------------
+    def submit(self, process_list: ProcessList | dict | list, *,
+               priority: int = 0, job_id: str | None = None,
+               metadata: dict | None = None) -> str:
+        """Submit a process list (``POST /jobs``).
+
+        Args:
+            process_list: a :class:`ProcessList` (serialised via
+                :func:`~repro.service.wire.to_spec`) or an
+                already-serialised spec document.
+            priority: higher pops first (FIFO within a priority).
+            job_id: explicit id — reuse the id of a killed job to
+                resume it from its checkpoint.
+            metadata: free-form JSON-able annotations.
+
+        Returns: the job id.
+        Raises:
+            ServiceError: 400 invalid spec, 409 duplicate active id,
+                429 admission control rejected (shed load and retry).
+        """
+        if isinstance(process_list, ProcessList):
+            process_list = to_spec(process_list)
+        envelope: dict[str, Any] = {"process_list": process_list,
+                                    "priority": priority}
+        if job_id is not None:
+            envelope["job_id"] = job_id
+        if metadata:
+            envelope["metadata"] = metadata
+        return self._request("POST", "/jobs", envelope)["job_id"]
+
+    def status(self, job_id: str) -> dict[str, Any]:
+        """One job's ``Job.snapshot()`` (``GET /jobs/{id}``): state,
+        ``running(plugin i/N)`` progress, ``resumed_from``, timings.
+        Raises ServiceError(404) for an unknown/pruned job."""
+        return self._request("GET", f"/jobs/{quote(job_id, safe='')}")
+
+    def jobs(self) -> list[dict[str, Any]]:
+        """Every job's snapshot, submission-ordered (``GET /jobs``)."""
+        return self._request("GET", "/jobs")["jobs"]
+
+    def stats(self) -> dict[str, Any]:
+        """Scheduler + compile-cache counters (``GET /stats``)."""
+        return self._request("GET", "/stats")
+
+    def plugins(self) -> dict[str, Any]:
+        """The wire-format plugin registry (``GET /plugins``)."""
+        return self._request("GET", "/plugins")
+
+    def health(self) -> dict[str, Any]:
+        """Liveness probe (``GET /healthz``)."""
+        return self._request("GET", "/healthz")
+
+    def cancel(self, job_id: str) -> dict[str, Any]:
+        """Cancel a queued job (``DELETE /jobs/{id}``).
+
+        Returns: ``{"cancelled": True, ...}`` on success.
+        Raises:
+            ServiceError: 404 unknown job; 409 the job was already
+                dispatched or terminal (body names its state).
+        """
+        return self._request("DELETE", f"/jobs/{quote(job_id, safe='')}")
+
+    def result(self, job_id: str, dataset: str | None = None
+               ) -> np.ndarray:
+        """Fetch an output dataset (``GET /jobs/{id}/result``) as a
+        numpy array (npy bytes on the wire, chunk-streamed server-side).
+
+        Args:
+            dataset: dataset name; default = the chain's saver output.
+
+        Raises:
+            ServiceError: 404 unknown job/dataset or evicted result,
+                409 the job is not done yet.
+        """
+        q = f"?dataset={quote(dataset, safe='')}" if dataset else ""
+        payload = self._request(
+            "GET", f"/jobs/{quote(job_id, safe='')}/result{q}", raw=True)
+        return np.load(io.BytesIO(payload))
+
+    def wait(self, job_id: str, timeout: float | None = None,
+             poll: float = 0.1) -> dict[str, Any]:
+        """Block until ``job_id`` reaches a terminal state (the
+        client-side poll loop over :meth:`status`).
+
+        Args:
+            timeout: seconds before giving up (None = forever).
+            poll: seconds between polls.
+
+        Returns: the terminal snapshot (state done/failed/cancelled —
+        inspect ``snapshot["state"]``; a failed job's message is in
+        ``snapshot["error"]``).
+        Raises:
+            TimeoutError: still non-terminal at the deadline.
+        """
+        deadline = None if timeout is None else time.time() + timeout
+        while True:
+            snap = self.status(job_id)
+            if snap["state"] in _TERMINAL:
+                return snap
+            if deadline is not None and time.time() >= deadline:
+                raise TimeoutError(
+                    f"job {job_id!r} still {snap['status']!r} after "
+                    f"{timeout}s")
+            time.sleep(poll)

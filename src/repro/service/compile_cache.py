@@ -25,7 +25,16 @@ from typing import Any, Callable
 
 
 class CompileCache:
+    """Process-level compiled-plugin cache (paper §I: "the same
+    pipeline, many datasets" — resubmission must not retrace)."""
+
     def __init__(self, max_entries: int | None = None):
+        """Args:
+            max_entries: FIFO-evict beyond this many compiled programs
+                (None = unbounded).
+
+        Note: an EMPTY cache is falsy (``__len__``) — test ``is None``,
+        never truthiness, when defaulting."""
         self.max_entries = max_entries
         self._entries: dict[Any, Any] = {}
         self._building: dict[Any, threading.Event] = {}
@@ -36,6 +45,20 @@ class CompileCache:
         self.build_s = 0.0               # total wall spent compiling
 
     def get_or_build(self, key, builder: Callable[[], Any]):
+        """Return the cached value for ``key``, building it (once) on a
+        miss.
+
+        Args:
+            key: hashable identity (see
+                ``ShardedTransport._plugin_key`` / ARCHITECTURE.md).
+            builder: zero-arg callable producing the compiled program;
+                invoked at most once per key even under concurrent
+                misses — losers of the build race block on the winner.
+
+        Returns: the cached/built value.  A ``builder`` that raises
+        propagates to its caller; waiting losers retry (and one of them
+        becomes the next builder).
+        """
         while True:
             with self._lock:
                 if key in self._entries:
@@ -70,10 +93,13 @@ class CompileCache:
             return len(self._entries)
 
     def clear(self) -> None:
+        """Drop every cached program (counters are kept)."""
         with self._lock:
             self._entries.clear()
 
     def stats(self) -> dict[str, Any]:
+        """Counters for ``GET /stats``: ``hits``, ``misses``,
+        ``entries``, ``evictions``, and total compile ``build_s``."""
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
                     "entries": len(self._entries),

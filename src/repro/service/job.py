@@ -63,6 +63,16 @@ def chain_signature(process_list: ProcessList) -> tuple:
 
 @dataclasses.dataclass
 class Job:
+    """One submitted process list, tracked from admission to completion.
+
+    Created by :meth:`JobQueue.submit`; mutated by the scheduler as the
+    job advances (``state``, ``plugin_index``, timestamps, ``runner``).
+    ``snapshot()`` is the read API — everything a remote monitor needs,
+    JSON-able.  The live ``runner`` (datasets, transport, profiler) is
+    kept after completion so results stay retrievable until the queue's
+    ``max_history`` evicts the job.
+    """
+
     job_id: str
     process_list: ProcessList
     priority: int = 0
@@ -101,10 +111,21 @@ class Job:
         return (self.finished_at or time.time()) - self.started_at
 
     def snapshot(self) -> dict[str, Any]:
+        """JSON-able point-in-time view of the job — what the service
+        layer reports (``GET /jobs/{id}``): identity, state +
+        human-readable ``status`` (``running(plugin i/N)``), priority,
+        ``resumed_from`` (>0 when restored from a checkpoint),
+        submission/start/finish timestamps, elapsed ``wall``, the
+        failure ``error`` if any, and the JSON-able subset of
+        ``metadata``."""
         return {"job_id": self.job_id, "state": self.state.value,
                 "status": self.status, "priority": self.priority,
                 "plugin_index": self.plugin_index,
                 "n_plugins": self.n_plugins,
                 "resumed_from": self.resumed_from,
-                "submitted_at": self.submitted_at, "wall": self.wall,
-                "error": self.error}
+                "submitted_at": self.submitted_at,
+                "started_at": self.started_at,
+                "finished_at": self.finished_at, "wall": self.wall,
+                "error": self.error,
+                "metadata": {k: v for k, v in self.metadata.items()
+                             if _is_jsonable(v)}}

@@ -25,13 +25,24 @@ class QueueFull(RuntimeError):
 
 
 class JobQueue:
+    """Priority admission queue — the service side of the paper's
+    "simultaneous processing of multiple datasets" (§I): many users'
+    process lists queued against one facility pipeline.  Thread-safe;
+    shared between HTTP handler threads and scheduler workers."""
+
     def __init__(self, max_pending: int | None = None,
                  max_history: int | None = None):
-        """``max_history`` bounds retained TERMINAL jobs: beyond it the
-        oldest finished jobs are evicted (their runner — datasets,
-        device buffers, transport — released with them).  None keeps
-        everything, which is right for batch CLIs/tests that read
-        results after drain but leaks in a long-lived service."""
+        """Args:
+            max_pending: bound on non-terminal jobs; ``submit`` past it
+                raises :class:`QueueFull` (or blocks with ``block=True``).
+                None = unbounded.
+            max_history: bound on retained TERMINAL jobs: beyond it the
+                oldest finished jobs are evicted (their runner —
+                datasets, device buffers, transport — released with
+                them).  None keeps everything, which is right for batch
+                CLIs/tests that read results after drain but leaks in a
+                long-lived service.
+        """
         self.max_pending = max_pending
         self.max_history = max_history
         self._heap: list[tuple[int, int, Job]] = []
@@ -58,6 +69,25 @@ class JobQueue:
                job_id: str | None = None, block: bool = False,
                timeout: float | None = None,
                metadata: dict[str, Any] | None = None) -> Job:
+        """Admit one process list as a :class:`Job`.
+
+        Args:
+            process_list: the chain to run (checked at dispatch, not
+                here — use ``ProcessList.check()`` first to fail fast).
+            priority: higher pops first; FIFO within a priority.
+            job_id: explicit id (resubmit a killed job's id to resume
+                from its checkpoint); default ``job-{seq:04d}``.
+            block: past ``max_pending``, wait for capacity instead of
+                raising.
+            timeout: cap on the ``block=True`` wait, in seconds.
+            metadata: free-form annotations carried on the job.
+
+        Returns: the QUEUED job.
+        Raises:
+            QueueFull: admission rejected (or the blocking wait timed
+                out).
+            ValueError: ``job_id`` names a still-active job.
+        """
         def check_id():
             # re-checked after every capacity wait: two blocked
             # submitters with the same explicit id must not both insert
@@ -145,11 +175,21 @@ class JobQueue:
 
     # -- bookkeeping ----------------------------------------------------
     def job(self, job_id: str) -> Job:
+        """Look up a job by id.  Raises KeyError if unknown (or already
+        evicted by ``max_history``)."""
         with self._lock:
             return self._jobs[job_id]
 
     def cancel(self, job_id: str) -> bool:
-        """Cancel a job that has not been picked up yet."""
+        """Cancel a job that has not been dispatched yet.
+
+        Returns:
+            True — the job was QUEUED and is now CANCELLED (terminal;
+            it will never execute, and blocked submitters are woken).
+            False — unknown id, already dispatched (a worker owns it),
+            or already terminal.  The refusal never mutates the job, so
+            a cancel racing a dispatch resolves to exactly one winner.
+        """
         with self._lock:
             job = self._jobs.get(job_id)
             if job is None or job.state is not JobState.QUEUED:
@@ -166,10 +206,13 @@ class JobQueue:
             self._capacity.notify_all()
 
     def pending(self) -> int:
+        """Number of non-terminal jobs (what admission control counts)."""
         with self._lock:
             return self._pending_locked()
 
     def snapshot(self) -> list[dict[str, Any]]:
+        """Every retained job's ``Job.snapshot()``, submission-ordered
+        (``GET /jobs``)."""
         with self._lock:
             return [j.snapshot() for j in
                     sorted(self._jobs.values(), key=lambda j: j.seq)]

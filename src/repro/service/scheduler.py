@@ -36,6 +36,10 @@ from .queue import JobQueue
 
 
 class PipelineScheduler:
+    """Drives jobs popped from a :class:`JobQueue` over shared worker
+    threads — reproduces the paper's §I premise (one framework, many
+    simultaneous datasets) as a long-lived multi-tenant service."""
+
     def __init__(self, queue: JobQueue, *,
                  transport_factory: Callable[[Job], Transport] | None = None,
                  n_workers: int = 2,
@@ -44,6 +48,21 @@ class PipelineScheduler:
                  batch_max: int = 4,
                  fuse: bool = False,
                  compile_cache=None):
+        """Args:
+            queue: the admission queue workers pull from.
+            transport_factory: Job -> Transport for each dispatch
+                (default: a fresh ``InMemoryTransport`` per job).
+            n_workers: worker threads (≥2 overlaps one job's host I/O
+                with another's jit compute; see module docstring).
+            checkpoints: save after every plugin step + restore
+                resubmitted job ids (None disables).
+            batch_identical: gang queued jobs with matching chain
+                signatures into one compiled call per step.
+            batch_max: gang size bound.
+            fuse: compile consecutive linear plugins as one jit.
+            compile_cache: held only for ``stats()`` reporting — wire
+                the SAME object into the transports the factory builds.
+        """
         self.queue = queue
         self.transport_factory = (transport_factory
                                   or (lambda job: InMemoryTransport()))
@@ -63,6 +82,7 @@ class PipelineScheduler:
 
     # -- lifecycle ------------------------------------------------------
     def start(self) -> "PipelineScheduler":
+        """Start the worker threads (idempotent).  Returns self."""
         if self._threads:
             return self
         self._started_at = time.time()
@@ -77,10 +97,14 @@ class PipelineScheduler:
         return self
 
     def drain(self, timeout: float | None = None) -> bool:
-        """Wait for every submitted job to reach a terminal state."""
+        """Wait for every submitted job to reach a terminal state.
+        Returns False on timeout (seconds; None = wait forever)."""
         return self.queue.wait_all(timeout)
 
     def shutdown(self, wait: bool = True) -> None:
+        """Stop the workers.  In-flight jobs finish their current run;
+        queued jobs stay queued for the next ``start()``.  With
+        ``wait=True`` blocks until the worker threads exit."""
         self._stop.set()
         if wait:
             for t in self._threads:
@@ -89,6 +113,10 @@ class PipelineScheduler:
         self._stop = threading.Event()
 
     def stats(self) -> dict[str, Any]:
+        """Aggregate counters (``GET /stats``): ``jobs_done``,
+        ``jobs_failed``, ``gangs_run``, ``pending``, scheduler ``wall``
+        since start, and the shared cache's ``compile_cache`` hit/miss
+        counts when one was wired in."""
         out: dict[str, Any] = {
             "jobs_done": self.jobs_done, "jobs_failed": self.jobs_failed,
             "gangs_run": self.gangs_run, "pending": self.queue.pending(),

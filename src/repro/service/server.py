@@ -1,0 +1,356 @@
+"""HTTP front end over the JobQueue — cross-process serving.
+
+The scheduler (ROADMAP PR 1) and checkpoint/resume layer (PR 2) were
+only reachable in-process; this module is the step that turns them into
+facility infrastructure in the Nanosurveyor/Daisy sense: a remote
+submit/monitor interface over the scheduler, so the paper's "3000
+scientific users per year" can submit process lists to a pipeline they
+do not run themselves.  Stdlib only (``http.server``) — no new deps.
+
+Endpoints (JSON unless noted; see ``docs/service.md``):
+
+==========================  ==========================================
+``POST /jobs``              submit a spec envelope -> ``{"job_id"}``;
+                            400 on validation errors, 409 on duplicate
+                            active id, **429** on admission rejection
+``GET /jobs``               every job's ``Job.snapshot()``
+``GET /jobs/{id}``          one snapshot (``running(plugin i/N)``
+                            progress, ``resumed_from``, ...)
+``GET /jobs/{id}/result``   output dataset as ``.npy`` bytes
+                            (``?dataset=`` selects; chunk-streamed)
+``DELETE /jobs/{id}``       cancel a queued job (409 once dispatched)
+``GET /stats``              scheduler + compile-cache counters
+``GET /plugins``            the wire-format plugin registry
+``GET /healthz``            liveness probe
+==========================  ==========================================
+
+Results are streamed straight out of the transport's chunk-addressed
+files (``ChunkedFile`` — the checkpoint layer's on-disk layout) one
+chunk-row slab at a time, so serving a large reconstruction never holds
+the dense volume in server RAM; only in-memory/sharded backings are
+materialised before the write.
+"""
+from __future__ import annotations
+
+import io
+import json
+import re
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Callable
+from urllib.parse import parse_qs, unquote, urlparse
+
+import numpy as np
+
+from ..core.process_list import ProcessListError
+from ..core.transport import ChunkedFile, Transport
+from .checkpoint import CheckpointStore
+from .compile_cache import CompileCache
+from .job import Job, JobState
+from .queue import JobQueue, QueueFull
+from .scheduler import PipelineScheduler
+from .wire import WireError, from_spec, registry_spec
+
+_JOB_RE = re.compile(r"^/jobs/([^/]+)$")
+_RESULT_RE = re.compile(r"^/jobs/([^/]+)/result$")
+
+
+class PipelineService:
+    """A JobQueue + PipelineScheduler pair wrapped for HTTP serving.
+
+    Owns the queue, the scheduler, the shared :class:`CompileCache`, and
+    (optionally) a :class:`CheckpointStore`, and knows how to admit a
+    wire-format spec envelope and stream results back out.  Use
+    :meth:`serve` to bind the HTTP front end, or drive
+    :meth:`submit_envelope`/:meth:`cancel` in-process.
+    """
+
+    def __init__(self, *,
+                 transport_factory: Callable[[Job], Transport] | None = None,
+                 n_workers: int = 2,
+                 max_pending: int | None = 64,
+                 max_history: int | None = 256,
+                 checkpoints: CheckpointStore | None = None,
+                 batch_identical: bool = False,
+                 batch_max: int = 4,
+                 fuse: bool = False,
+                 compile_cache: CompileCache | None = None):
+        """Args mirror :class:`PipelineScheduler`; ``max_pending``
+        bounds admission (HTTP 429 past it) and ``max_history`` bounds
+        retained terminal jobs (a pruned job's result is gone — 404)."""
+        # explicit None-check: an EMPTY CompileCache is falsy (__len__)
+        self.compile_cache = (compile_cache if compile_cache is not None
+                              else CompileCache())
+        self.queue = JobQueue(max_pending=max_pending,
+                              max_history=max_history)
+        self.scheduler = PipelineScheduler(
+            self.queue, transport_factory=transport_factory,
+            n_workers=n_workers, checkpoints=checkpoints,
+            batch_identical=batch_identical, batch_max=batch_max,
+            fuse=fuse, compile_cache=self.compile_cache)
+        self._httpd: ThreadingHTTPServer | None = None
+        self._http_thread: threading.Thread | None = None
+
+    # -- service operations (HTTP-independent) -------------------------
+    def submit_envelope(self, envelope: dict[str, Any]) -> Job:
+        """Admit one submission envelope::
+
+            {"process_list": <spec v1>,   # required
+             "priority": 0, "job_id": null, "metadata": {}}
+
+        Deserialises the spec (:func:`~repro.service.wire.from_spec`),
+        runs the pre-flight ``ProcessList.check()`` so structurally
+        broken chains are rejected before admission, then enqueues.
+
+        Returns: the queued :class:`Job`.
+        Raises:
+            WireError / ProcessListError: invalid spec (HTTP 400).
+            ValueError: duplicate active job id (HTTP 409).
+            QueueFull: admission control rejected (HTTP 429).
+        """
+        if not isinstance(envelope, dict) or \
+                "process_list" not in envelope:
+            raise WireError('body must be an object with a '
+                            '"process_list" spec')
+        priority = envelope.get("priority", 0)
+        if not isinstance(priority, int) or isinstance(priority, bool):
+            raise WireError(f"priority must be an integer, got "
+                            f"{priority!r}")
+        job_id = envelope.get("job_id")
+        if job_id is not None and not isinstance(job_id, str):
+            raise WireError(f"job_id must be a string, got {job_id!r}")
+        metadata = envelope.get("metadata") or {}
+        if not isinstance(metadata, dict):
+            raise WireError("metadata must be an object")
+        pl = from_spec(envelope["process_list"])
+        pl.check()
+        return self.queue.submit(pl, priority=priority, job_id=job_id,
+                                 metadata=metadata)
+
+    def cancel(self, job_id: str) -> dict[str, Any]:
+        """Cancel ``job_id`` if still queued.  Returns
+        ``{"job_id", "cancelled", "state"}``; ``cancelled`` is False for
+        a job already dispatched/terminal.  Raises KeyError if unknown."""
+        cancelled = self.queue.cancel(job_id)
+        job = self.queue.job(job_id)
+        return {"job_id": job_id, "cancelled": cancelled,
+                "state": job.state.value}
+
+    def stats(self) -> dict[str, Any]:
+        """Scheduler counters + compile-cache hit rates (``GET /stats``)."""
+        return self.scheduler.stats()
+
+    def result_dataset(self, job_id: str, dataset: str | None = None):
+        """Resolve a finished job's output dataset + its transport.
+
+        Args:
+            job_id: a DONE job still within ``max_history``.
+            dataset: dataset name; default = the chain's first saver
+                output (:meth:`PluginRunner.result_names`).
+
+        Returns: ``(DataSet, Transport)``.
+        Raises:
+            KeyError: unknown job or unknown dataset name.
+            RuntimeError: job not DONE yet, or its runner was pruned.
+        """
+        job = self.queue.job(job_id)
+        if job.state is not JobState.DONE:
+            raise RuntimeError(f"job {job_id!r} is {job.status!r}, "
+                               f"not done")
+        runner = job.runner
+        if runner is None:
+            raise RuntimeError(f"job {job_id!r} result was evicted "
+                               f"(max_history)")
+        name = dataset or (runner.result_names() or [None])[0]
+        if name is None or name not in runner.datasets:
+            raise KeyError(
+                f"job {job_id!r} has no dataset {name!r} "
+                f"(available: {sorted(runner.datasets)})")
+        return runner.datasets[name], runner.transport
+
+    # -- lifecycle ------------------------------------------------------
+    def serve(self, host: str = "127.0.0.1", port: int = 8080,
+              block: bool = False) -> tuple[str, int]:
+        """Start the scheduler workers and the HTTP front end.
+
+        Args:
+            host/port: bind address (``port=0`` picks an ephemeral port).
+            block: run ``serve_forever`` on the calling thread (CLI
+                mode) instead of a daemon thread.
+
+        Returns: the bound ``(host, port)``.
+        """
+        self.scheduler.start()
+        service = self
+
+        class Handler(_PipelineHandler):
+            pass
+
+        Handler.service = service
+        self._httpd = ThreadingHTTPServer((host, port), Handler)
+        self._httpd.daemon_threads = True
+        addr = self._httpd.server_address[:2]
+        if block:
+            try:
+                self._httpd.serve_forever()
+            finally:
+                self.stop()
+        else:
+            self._http_thread = threading.Thread(
+                target=self._httpd.serve_forever, name="pipeline-http",
+                daemon=True)
+            self._http_thread.start()
+        return addr
+
+    def stop(self) -> None:
+        """Shut down the HTTP server (if serving) and scheduler workers."""
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+            self._httpd = None
+        if self._http_thread is not None:
+            self._http_thread.join(timeout=10)
+            self._http_thread = None
+        self.scheduler.shutdown()
+
+
+# ----------------------------------------------------------------------
+def _npy_header(shape: tuple[int, ...], dtype) -> bytes:
+    """The ``.npy`` v1 magic + header for a C-ordered array, so a result
+    body can be streamed without building the array in RAM."""
+    from numpy.lib import format as npy
+    buf = io.BytesIO()
+    npy.write_array_header_1_0(
+        buf, {"descr": npy.dtype_to_descr(np.dtype(dtype)),
+              "fortran_order": False, "shape": tuple(shape)})
+    return buf.getvalue()     # write_array_header_1_0 includes the magic
+
+
+class _PipelineHandler(BaseHTTPRequestHandler):
+    """Routes HTTP verbs to the bound :class:`PipelineService`."""
+
+    service: PipelineService = None   # bound per-server in serve()
+    server_version = "SavuPipeline/1"
+    protocol_version = "HTTP/1.1"
+
+    def log_message(self, fmt, *args):   # quiet by default (tests)
+        pass
+
+    # -- helpers --------------------------------------------------------
+    def _json(self, code: int, obj: Any) -> None:
+        body = json.dumps(obj).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _error(self, code: int, message: str, **extra) -> None:
+        self._json(code, {"error": message, **extra})
+
+    def _read_body(self) -> Any:
+        length = int(self.headers.get("Content-Length") or 0)
+        raw = self.rfile.read(length) if length else b""
+        if not raw:
+            raise WireError("empty request body")
+        try:
+            return json.loads(raw)
+        except json.JSONDecodeError as e:
+            raise WireError(f"request body is not valid JSON: {e}")
+
+    def _drain_body(self) -> None:
+        """Consume an unread request body before replying — a keep-alive
+        connection would otherwise parse the leftover bytes as the next
+        request line."""
+        length = int(self.headers.get("Content-Length") or 0)
+        if length:
+            self.rfile.read(length)
+
+    # -- verbs ----------------------------------------------------------
+    def do_GET(self) -> None:
+        url = urlparse(self.path)
+        path, query = url.path.rstrip("/") or "/", parse_qs(url.query)
+        svc = self.service
+        if path == "/healthz":
+            return self._json(200, {"ok": True,
+                                    "pending": svc.queue.pending()})
+        if path == "/stats":
+            return self._json(200, svc.stats())
+        if path == "/plugins":
+            return self._json(200, registry_spec())
+        if path == "/jobs":
+            return self._json(200, {"jobs": svc.queue.snapshot()})
+        m = _JOB_RE.match(path)
+        if m:
+            job_id = unquote(m.group(1))
+            try:
+                return self._json(200, svc.queue.job(job_id).snapshot())
+            except KeyError:
+                return self._error(404, f"unknown job {job_id!r}")
+        m = _RESULT_RE.match(path)
+        if m:
+            return self._send_result(
+                unquote(m.group(1)), (query.get("dataset") or [None])[0])
+        self._error(404, f"no route for GET {path}")
+
+    def do_POST(self) -> None:
+        if urlparse(self.path).path.rstrip("/") != "/jobs":
+            self._drain_body()
+            return self._error(404, f"no route for POST {self.path}")
+        try:
+            envelope = self._read_body()
+            job = self.service.submit_envelope(envelope)
+        except (WireError, ProcessListError) as e:
+            return self._error(400, str(e))
+        except QueueFull as e:
+            return self._error(429, str(e))
+        except ValueError as e:           # duplicate active job id
+            return self._error(409, str(e))
+        self._json(201, {"job_id": job.job_id, "state": job.state.value,
+                         "priority": job.priority})
+
+    def do_DELETE(self) -> None:
+        self._drain_body()              # DELETEs may carry a body
+        m = _JOB_RE.match(urlparse(self.path).path.rstrip("/"))
+        if not m:
+            return self._error(404, f"no route for DELETE {self.path}")
+        job_id = unquote(m.group(1))
+        try:
+            out = self.service.cancel(job_id)
+        except KeyError:
+            return self._error(404, f"unknown job {job_id!r}")
+        if not out["cancelled"]:
+            # dispatched or already terminal: rejected, consistently
+            return self._json(409, {**out, "error":
+                                    f"job is {out['state']}, not queued"})
+        self._json(200, out)
+
+    # -- result streaming -----------------------------------------------
+    def _send_result(self, job_id: str, dataset: str | None) -> None:
+        try:
+            ds, transport = self.service.result_dataset(job_id, dataset)
+        except KeyError as e:
+            return self._error(404, str(e))
+        except RuntimeError as e:
+            return self._error(409, str(e))
+        header = _npy_header(ds.shape, ds.dtype)
+        self.send_response(200)
+        self.send_header("Content-Type", "application/x-npy")
+        self.send_header("Content-Length", str(len(header) + ds.nbytes))
+        self.send_header("X-Dataset", ds.name)
+        self.end_headers()
+        self.wfile.write(header)
+        backing = ds.backing
+        if isinstance(backing, ChunkedFile):
+            # chunk-row slabs straight off the checkpoint-layer file
+            # format: O(slab) RAM however big the volume is
+            backing.flush()
+            step = backing.chunks[0]
+            rest = tuple(slice(0, s) for s in ds.shape[1:])
+            for i in range(0, ds.shape[0], step):
+                slab = backing.read(
+                    (slice(i, min(i + step, ds.shape[0])),) + rest)
+                self.wfile.write(np.ascontiguousarray(slab).tobytes())
+        else:
+            arr = np.ascontiguousarray(np.asarray(transport.read(ds)))
+            self.wfile.write(arr.tobytes())

@@ -178,6 +178,102 @@ def test_get_batch_groups_identical_chains(data, rng):
     assert q.get(0).job_id == c.job_id
 
 
+def test_cancel_running_job_is_rejected(data):
+    """Once dispatched (checking/running) a job is uncancellable — the
+    worker owns it; cancel must refuse without corrupting state."""
+    q = JobQueue()
+    job = q.submit(_trace_chain(data))
+    assert q.get(0).job_id == job.job_id     # dispatched: CHECKING
+    assert not q.cancel(job.job_id)
+    job.state = JobState.RUNNING
+    assert not q.cancel(job.job_id)
+    assert job.state is JobState.RUNNING     # untouched
+    job.state = JobState.DONE
+    assert not q.cancel(job.job_id)          # terminal: still rejected
+
+
+def test_cancel_race_with_dispatch(data):
+    """Exactly one of {dispatcher, canceller} may win a queued job;
+    the loser must observe a consistent refusal."""
+    for _ in range(25):
+        q = JobQueue()
+        job = q.submit(_trace_chain(data))
+        results = {}
+        barrier = threading.Barrier(2)
+
+        def dispatch():
+            barrier.wait()
+            results["got"] = q.get(timeout=0.2)
+
+        def cancel():
+            barrier.wait()
+            results["cancelled"] = q.cancel(job.job_id)
+
+        ts = [threading.Thread(target=dispatch),
+              threading.Thread(target=cancel)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        if results["cancelled"]:
+            assert results["got"] is None
+            assert job.state is JobState.CANCELLED
+        else:
+            assert results["got"] is not None
+            assert job.state is JobState.CHECKING
+
+
+def test_cancelled_jobs_are_pruned(data):
+    q = JobQueue(max_history=1)
+    stale = [q.submit(_trace_chain(data)) for _ in range(3)]
+    for j in stale:
+        assert q.cancel(j.job_id)
+    q.submit(_trace_chain(data))             # submit triggers pruning
+    ids = {s["job_id"] for s in q.snapshot()}
+    assert stale[0].job_id not in ids and stale[1].job_id not in ids
+    assert stale[2].job_id in ids            # newest terminal retained
+
+
+def test_cancel_frees_admission_capacity(data):
+    q = JobQueue(max_pending=1)
+    j1 = q.submit(_trace_chain(data))
+    def free():
+        time.sleep(0.05)
+        q.cancel(j1.job_id)
+    t = threading.Thread(target=free)
+    t.start()
+    j2 = q.submit(_trace_chain(data), block=True, timeout=5.0)
+    t.join()
+    assert j2.state is JobState.QUEUED
+
+
+def test_wait_all_returns_when_last_job_cancelled(data):
+    """wait_all must not hang when the final non-terminal job is
+    cancelled rather than run (no scheduler attached at all)."""
+    q = JobQueue()
+    jobs = [q.submit(_trace_chain(data)) for _ in range(2)]
+    assert not q.wait_all(timeout=0.05)      # nothing ran yet
+    for j in jobs:
+        assert q.cancel(j.job_id)
+    assert q.wait_all(timeout=5.0)
+
+
+def test_wait_all_with_scheduler_and_cancelled_tail(data):
+    """Cancel the tail job while a 1-worker scheduler drains the head:
+    drain() completes, the cancelled job never executes."""
+    TraceFilter.executed = []
+    q = JobQueue()
+    head = q.submit(_trace_chain(data))
+    tail = q.submit(_trace_chain(data))
+    assert q.cancel(tail.job_id)
+    sched = PipelineScheduler(q, n_workers=1).start()
+    assert sched.drain(timeout=60)
+    sched.shutdown()
+    assert head.state is JobState.DONE
+    assert tail.state is JobState.CANCELLED
+    assert len(TraceFilter.executed) == 4    # only the head's 4 filters
+
+
 # ---------------------------------------------------------- stepping/resume
 def test_stepping_equals_run(data):
     r1 = PluginRunner(_trace_chain(data), InMemoryTransport())

@@ -1,0 +1,107 @@
+"""Wire format (repro.service.wire): spec v1 round-trips, loud
+rejection of unknown plugins/params, and the param-introspection
+registry served at GET /plugins."""
+import json
+
+import pytest
+
+from repro.core import LambdaFilter, ProcessList
+from repro.core.process_list import ProcessListError
+from repro.service import (WireError, chain_signature, from_spec,
+                           register_plugin, registered_plugins,
+                           registry_spec, to_spec)
+from repro.tomo import SyntheticTomoLoader, standard_chain
+
+
+def test_round_trip_preserves_chain_signature():
+    pl = standard_chain(n_det=24, n_angles=24, n_rows=1, paganin=True)
+    spec = to_spec(pl)
+    json.dumps(spec)                         # must be wire-able
+    pl2 = from_spec(spec)
+    assert chain_signature(pl) == chain_signature(pl2)
+    assert pl2.check() == pl.check()
+
+
+def test_round_trip_is_stable():
+    spec = to_spec(standard_chain(n_det=16, n_angles=16))
+    assert to_spec(from_spec(spec)) == spec
+
+
+def test_from_spec_accepts_bare_plugin_list():
+    spec = to_spec(standard_chain(n_det=16, n_angles=16))
+    pl = from_spec(spec["plugins"])
+    assert chain_signature(pl) == chain_signature(
+        standard_chain(n_det=16, n_angles=16))
+
+
+def test_unknown_plugin_rejected_loudly():
+    with pytest.raises(WireError, match="unknown plugin 'warp_drive'"):
+        from_spec({"plugins": [{"plugin": "warp_drive"}]})
+    # the error names the registered alternatives
+    with pytest.raises(WireError, match="synthetic_tomo_loader"):
+        from_spec({"plugins": [{"plugin": "warp_drive"}]})
+
+
+def test_unknown_param_rejected_loudly():
+    spec = {"plugins": [
+        {"plugin": "synthetic_tomo_loader",
+         "params": {"n_det": 16, "warp": 9},
+         "out_datasets": ["tomo"]}]}
+    with pytest.raises(WireError, match=r"unknown params \['warp'\]"):
+        from_spec(spec)
+
+
+@pytest.mark.parametrize("spec", [
+    42, "nope", {}, {"plugins": []}, {"plugins": [7]},
+    {"plugins": [{"params": {}}]},
+    {"version": 99, "plugins": [{"plugin": "fbp_recon"}]},
+    {"plugins": [{"plugin": "fbp_recon", "params": ["not", "a", "dict"]}]},
+    {"plugins": [{"plugin": "fbp_recon", "in_datasets": "tomo"}]},
+])
+def test_malformed_specs_rejected(spec):
+    with pytest.raises(WireError):
+        from_spec(spec)
+
+
+def test_to_spec_rejects_unregistered_plugin():
+    pl = ProcessList()
+    pl.add(SyntheticTomoLoader, params={"n_det": 16, "n_angles": 16},
+           out_datasets=("tomo",))
+    pl.add(LambdaFilter, params={"fn": lambda b: b},
+           in_datasets=("tomo",), out_datasets=("tomo",))
+    with pytest.raises(WireError, match="not wire-registered"):
+        to_spec(pl)
+
+
+def test_register_plugin_conflict_rejected():
+    class Impostor(SyntheticTomoLoader):
+        name = "synthetic_tomo_loader"
+    with pytest.raises(WireError, match="already registered"):
+        register_plugin(Impostor)
+    # re-registering the SAME class is a no-op
+    register_plugin(SyntheticTomoLoader)
+    assert registered_plugins()["synthetic_tomo_loader"] \
+        is SyntheticTomoLoader
+
+
+def test_structural_errors_still_caught_by_check():
+    # wire-valid but structurally broken: no saver
+    spec = {"plugins": [
+        {"plugin": "synthetic_tomo_loader", "params": {"n_det": 16},
+         "out_datasets": ["tomo"]}]}
+    pl = from_spec(spec)                     # deserialises fine
+    with pytest.raises(ProcessListError, match="saver"):
+        pl.check()
+
+
+def test_registry_spec_is_jsonable_introspection():
+    reg = registry_spec()
+    json.dumps(reg)
+    loader = reg["synthetic_tomo_loader"]
+    assert loader["params"]["seed"]["data_param"] is True
+    assert loader["params"]["n_det"] == {"default": 64,
+                                         "data_param": False}
+    assert loader["n_in_datasets"] == 0
+    recon = reg["fbp_recon"]
+    assert recon["params"]["use_pallas"]["default"] is True
+    assert recon["n_out_datasets"] == 1

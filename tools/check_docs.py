@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Docs checker (run by the CI docs job).
+
+Two guarantees over `docs/*.md`, `ARCHITECTURE.md`, `ROADMAP.md` and
+`README.md` (where present):
+
+1. every RELATIVE markdown link `[text](path)` resolves to an existing
+   file (http/mailto/anchor-only links are skipped, `#fragment`s are
+   stripped);
+2. every fenced ```python block parses: blocks are extracted to a temp
+   directory and byte-compiled with `compileall`, so documented
+   examples cannot rot into syntax errors.
+
+Exit status 0 = clean; 1 = problems (listed on stderr).
+"""
+from __future__ import annotations
+
+import compileall
+import pathlib
+import re
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(ROOT.glob("docs/*.md")) + [
+    p for p in (ROOT / "ARCHITECTURE.md", ROOT / "ROADMAP.md",
+                ROOT / "README.md") if p.exists()]
+
+#: [text](target) — target up to the first ')' or whitespace
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$",
+                      re.MULTILINE | re.DOTALL)
+CODE_BLOCK_RE = re.compile(r"^```.*?^```\s*$", re.MULTILINE | re.DOTALL)
+
+
+def check_links(md: pathlib.Path) -> list[str]:
+    """Relative links in ``md`` that do not resolve on disk."""
+    # don't treat `](` sequences inside fenced code as links
+    text = CODE_BLOCK_RE.sub("", md.read_text())
+    errors = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def extract_python_blocks(md: pathlib.Path) -> list[str]:
+    return [m.group(1) for m in FENCE_RE.finditer(md.read_text())]
+
+
+def main() -> int:
+    errors: list[str] = []
+    n_blocks = 0
+    with tempfile.TemporaryDirectory(prefix="check_docs_") as tmp:
+        tmpdir = pathlib.Path(tmp)
+        for md in DOC_FILES:
+            errors.extend(check_links(md))
+            for i, block in enumerate(extract_python_blocks(md)):
+                stem = md.relative_to(ROOT).as_posix().replace("/", "_")
+                (tmpdir / f"{stem}_{i}.py").write_text(block)
+                n_blocks += 1
+        if n_blocks and not compileall.compile_dir(str(tmpdir), quiet=1):
+            errors.append(
+                "python snippet(s) failed to compile (filenames above "
+                "map back to <doc>_<block-index>)")
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(DOC_FILES)} docs, {n_blocks} python blocks: "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
