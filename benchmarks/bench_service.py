@@ -1,12 +1,18 @@
 """Service-layer benchmark: jobs/sec for 1 vs many concurrent pipelines,
-and the compiled-plugin cache effect — resubmitting an identical process
+the compiled-plugin cache effect — resubmitting an identical process
 list must skip every jax.jit retrace, so the cache-hit job's wall time
-sits well under the first (cold) job's.
+sits well under the first (cold) job's — and multi-worker-process
+throughput through the broker (``--workers-remote N``).
 
 Standalone:   PYTHONPATH=src python benchmarks/bench_service.py
+CI smoke:     PYTHONPATH=src python benchmarks/bench_service.py \\
+                  --smoke --workers-remote 2
 Harness:      python -m benchmarks.run   (row prefix ``service_``)
 """
 from __future__ import annotations
+
+import argparse
+import time
 
 import numpy as np
 
@@ -15,6 +21,7 @@ from jax.sharding import Mesh
 
 from repro.service import (CompileCache, JobQueue, PipelineClient,
                            PipelineScheduler, PipelineService)
+from repro.service.worker import spawn_local_workers
 from repro.core import ShardedTransport
 from repro.tomo import standard_chain
 
@@ -47,7 +54,7 @@ def _run_jobs(q, sched, seeds) -> list:
     assert not bad, [j.snapshot() for j in bad]
     return jobs
 
-def run(report):
+def run(report, smoke: bool = False):
     # -- compile-cache: cold first job vs identical resubmission -------
     cache = CompileCache()
     q, sched = _mk_sched(1, cache)
@@ -65,9 +72,9 @@ def run(report):
         f"({first.wall:.2f}s)")
 
     # -- throughput: 1 worker vs many, warmed cache --------------------
-    n_jobs = 6
+    n_jobs = 3 if smoke else 6
     base = None
-    for workers in (1, 2, 4):
+    for workers in ((1, 2) if smoke else (1, 2, 4)):
         qn, schedn = _mk_sched(workers, cache)
         jobs = _run_jobs(qn, schedn, range(2, 2 + n_jobs))
         wall = max(j.finished_at for j in jobs) - min(j.started_at
@@ -76,6 +83,8 @@ def run(report):
         base = base or jps
         report(f"service_throughput_w{workers}", wall / n_jobs * 1e6,
                f"{jps:.2f} jobs/s ({jps / base:.2f}x vs 1 worker)")
+    if smoke:
+        return
 
     # -- gang batching: N jobs, one compiled call per plugin step ------
     gcache = CompileCache()
@@ -113,13 +122,58 @@ def run(report):
            f"warmed cache; compare service_throughput_w2)")
 
 
-def main() -> None:
+def run_remote(report, n_workers: int, smoke: bool = False) -> None:
+    """Multi-worker-PROCESS throughput through the broker: one queue,
+    ``n_workers`` subprocesses pulling leases over HTTP (compare
+    ``service_throughput_w{N}``, which is threads in one process)."""
+    n_jobs = 4 if smoke else 8
+    svc = PipelineService(workers_remote=True, lease_ttl=30.0,
+                          max_pending=n_jobs + 1)
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    workers = spawn_local_workers(url, n_workers, transport="inmemory",
+                                  poll=0.05)
+    client = PipelineClient(url)
+    try:
+        t0 = time.perf_counter()
+        ids = [client.submit(_chain(s)) for s in range(50, 50 + n_jobs)]
+        for jid in ids:
+            snap = client.wait(jid, timeout=600, poll=0.05)
+            assert snap["state"] == "done", snap
+            client.result(jid)
+        wall = time.perf_counter() - t0
+        st = client.stats()
+        busy = sum(1 for w in st["workers"].values() if w["jobs_done"])
+        report(f"service_remote_w{n_workers}", wall / n_jobs * 1e6,
+               f"{n_jobs / wall:.2f} jobs/s over {n_workers} worker "
+               f"processes ({busy} took jobs, "
+               f"{st['jobs_requeued']} requeues)")
+    finally:
+        for p in workers:
+            p.terminate()
+        for p in workers:
+            p.wait(timeout=10)
+        svc.stop()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized problem + reduced row set")
+    ap.add_argument("--workers-remote", type=int, default=0, metavar="N",
+                    help="add a broker row with N worker subprocesses")
+    args = ap.parse_args(argv)
+    global N_DET, N_ANGLES, N_ROWS
+    if args.smoke:
+        N_DET, N_ANGLES, N_ROWS = 24, 24, 1
     print("name,us_per_call,derived")
 
     def report(name, us, derived=""):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
-    run(report)
+    run(report, smoke=args.smoke)
+    if args.workers_remote:
+        run_remote(report, args.workers_remote, smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,17 @@ Three modes:
 
       PYTHONPATH=src python -m repro.launch.pipeline_serve client \\
           --url http://127.0.0.1:8973 submit --demo-chain --wait
+
+* **multi-host demo** — ``--workers-remote N`` runs the broker and N
+  detached worker *subprocesses* pulling jobs from it over HTTP (one
+  queue, many worker processes — see ``docs/worker-protocol.md``)::
+
+      PYTHONPATH=src python -m repro.launch.pipeline_serve \\
+          --jobs 6 --workers-remote 2 --checkpoint-dir /tmp/ckpts
+
+  ``--serve PORT --workers-remote N`` serves the broker for external
+  workers too (N may be 0; start more with
+  ``python -m repro.service.worker --url ...``).
 """
 from __future__ import annotations
 
@@ -41,6 +52,7 @@ from ..core import (ChunkedFileTransport, InMemoryTransport, PluginRunner,
 from ..service import (CheckpointStore, CompileCache, JobQueue,
                        PipelineClient, PipelineScheduler, PipelineService,
                        ServiceError, to_spec)
+from ..service.worker import spawn_local_workers
 from ..tomo import standard_chain
 
 _EPILOG = """\
@@ -120,6 +132,21 @@ def _build_parser() -> argparse.ArgumentParser:
                          "are evicted)")
     ap.add_argument("--batch-max", type=int, default=4,
                     help="--batch: gang size bound")
+    ap.add_argument("--workers-remote", type=int, default=None,
+                    metavar="N",
+                    help="broker mode: spawn N worker SUBPROCESSES "
+                         "pulling jobs over HTTP (demo), or serve the "
+                         "broker for external workers (--serve; N may "
+                         "be 0)")
+    ap.add_argument("--lease-ttl", type=float, default=15.0,
+                    help="broker mode: seconds a lease survives "
+                         "without a worker heartbeat before the job is "
+                         "requeued")
+    ap.add_argument("--shared-fs", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="broker mode: workers write results straight "
+                         "into the broker's results_dir instead of "
+                         "uploading over HTTP")
     return ap
 
 
@@ -141,27 +168,107 @@ def _transport_factory(args, cache: CompileCache):
 
 # ----------------------------------------------------------------------
 def _serve_main(args) -> None:
-    cache = CompileCache()
-    checkpoints = (CheckpointStore(args.checkpoint_dir)
-                   if args.checkpoint_dir else None)
-    service = PipelineService(
-        transport_factory=_transport_factory(args, cache),
-        n_workers=args.workers, max_pending=args.max_pending,
-        max_history=args.max_history, checkpoints=checkpoints,
-        batch_identical=args.batch, batch_max=args.batch_max,
-        fuse=args.fuse, compile_cache=cache)
-    host, port = service.serve(host=args.host, port=args.serve,
-                               block=False)
-    print(f"pipeline service listening on http://{host}:{port}  "
-          f"({args.workers} workers, transport={args.transport}"
-          f"{', gang-batched' if args.batch else ''}"
-          f"{', checkpointed' if checkpoints else ''})", flush=True)
+    workers = []
+    if args.workers_remote is not None:       # broker mode
+        service = PipelineService(
+            workers_remote=True, max_pending=args.max_pending,
+            max_history=args.max_history, lease_ttl=args.lease_ttl)
+        host, port = service.serve(host=args.host, port=args.serve,
+                                   block=False)
+        workers = spawn_local_workers(
+            f"http://{host}:{port}", args.workers_remote,
+            transport=args.transport,
+            checkpoint_dir=args.checkpoint_dir,
+            shared_fs=args.shared_fs)
+        print(f"pipeline broker listening on http://{host}:{port}  "
+              f"({len(workers)} local worker processes, lease_ttl="
+              f"{args.lease_ttl}s; attach more with `python -m "
+              f"repro.service.worker --url http://{host}:{port}`)",
+              flush=True)
+    else:
+        cache = CompileCache()
+        checkpoints = (CheckpointStore(args.checkpoint_dir)
+                       if args.checkpoint_dir else None)
+        service = PipelineService(
+            transport_factory=_transport_factory(args, cache),
+            n_workers=args.workers, max_pending=args.max_pending,
+            max_history=args.max_history, checkpoints=checkpoints,
+            batch_identical=args.batch, batch_max=args.batch_max,
+            fuse=args.fuse, compile_cache=cache)
+        host, port = service.serve(host=args.host, port=args.serve,
+                                   block=False)
+        print(f"pipeline service listening on http://{host}:{port}  "
+              f"({args.workers} workers, transport={args.transport}"
+              f"{', gang-batched' if args.batch else ''}"
+              f"{', checkpointed' if checkpoints else ''})", flush=True)
     try:
         while True:
             time.sleep(3600)
     except KeyboardInterrupt:
         print("shutting down")
     finally:
+        for p in workers:
+            p.terminate()
+        service.stop()
+
+
+# ----------------------------------------------------------------------
+def _remote_demo(args) -> None:
+    """The multi-host demo: one queue, N worker processes.  Submit
+    ``--jobs`` scans over HTTP, let the worker subprocesses pull them,
+    verify every reconstruction against a serial PluginRunner."""
+    service = PipelineService(
+        workers_remote=True, max_pending=max(args.max_pending, args.jobs),
+        lease_ttl=args.lease_ttl)
+    host, port = service.serve(port=0)
+    url = f"http://{host}:{port}"
+    workers = spawn_local_workers(
+        url, args.workers_remote, transport=args.transport,
+        checkpoint_dir=args.checkpoint_dir, shared_fs=args.shared_fs)
+    client = PipelineClient(url)
+    try:
+        t0 = time.time()
+        ids = [client.submit(_chain(args, seed=i), job_id=f"tomo-{i:03d}",
+                             metadata={"seed": i})
+               for i in range(args.jobs)]
+        snaps = [client.wait(jid, timeout=600) for jid in ids]
+        wall = time.time() - t0
+        for s in snaps:
+            extra = (f" (resumed at plugin {s['resumed_from']})"
+                     if s["resumed_from"] else "")
+            print(f"  {s['job_id']}: {s['status']:>10s}  "
+                  f"worker={s['worker_id']}  wall={s['wall']:.2f}s{extra}")
+        failed = [s for s in snaps if s["state"] != "done"]
+        if failed:
+            for s in failed:
+                print(s["error"])
+            raise SystemExit(f"{len(failed)}/{len(snaps)} jobs failed")
+        if args.verify:
+            worst = 0.0
+            for s in snaps:
+                got = client.result(s["job_id"])
+                ref = PluginRunner(
+                    _chain(args, seed=s["metadata"]["seed"])).run()
+                want = np.asarray(ref["recon"].materialise())
+                np.testing.assert_allclose(got, want, rtol=1e-3,
+                                           atol=1e-4)
+                worst = max(worst, float(np.max(np.abs(got - want))))
+            print(f"verified {len(snaps)} reconstructions against "
+                  f"serial PluginRunner (max |Δ|={worst:.2e})")
+        st = client.stats()
+        per_worker = {w: s["jobs_done"]
+                      for w, s in st["workers"].items()}
+        print(f"{args.jobs} jobs in {wall:.2f}s -> "
+              f"{args.jobs / wall:.2f} jobs/s  "
+              f"({args.workers_remote} worker processes, "
+              f"transport={args.transport})")
+        print(f"per-worker jobs done: {per_worker}  "
+              f"requeues: {st['jobs_requeued']}")
+    finally:
+        for p in workers:
+            p.terminate()
+        for p in workers:
+            p.wait(timeout=10)
         service.stop()
 
 
@@ -309,6 +416,8 @@ def main(argv: list[str] | None = None) -> None:
     args = _build_parser().parse_args(argv)
     if args.serve is not None:
         return _serve_main(args)
+    if args.workers_remote is not None:
+        return _remote_demo(args)
     return _demo_main(args)
 
 

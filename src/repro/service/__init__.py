@@ -1,22 +1,29 @@
 # The service layer — from processing *framework* to facility *service*
 # (the step Nanosurveyor/Daisy make explicit): a multi-tenant scheduler
 # that runs many process lists concurrently over shared workers, with a
-# process-level compiled-plugin cache, checkpoint/resume, and a
-# JSON-over-HTTP front end (server/client/wire) for remote submission.
+# process-level compiled-plugin cache, checkpoint/resume, a
+# JSON-over-HTTP front end (server/client/wire) for remote submission,
+# and worker-pull multi-host scheduling (broker/worker) — one queue,
+# many worker processes.
 from .compile_cache import CompileCache
 from .checkpoint import CheckpointError, CheckpointStore
 from .client import PipelineClient, ServiceError
 from .job import Job, JobState, chain_signature
 from .queue import JobQueue, QueueFull
-from .scheduler import PipelineScheduler
+from .scheduler import (LeaseLost, PipelineScheduler, WorkerBroker,
+                        WorkerInfo)
 from .server import PipelineService
-from .wire import (WireError, from_spec, register_plugin,
-                   registered_plugins, registry_spec, to_spec)
+from .wire import (WireError, chain_plugin_names, from_spec,
+                   register_plugin, registered_plugins, registry_spec,
+                   to_spec)
+from .worker import PipelineWorker
 
 __all__ = [
     "Job", "JobState", "chain_signature", "JobQueue", "QueueFull",
     "CompileCache", "CheckpointError", "CheckpointStore",
     "PipelineScheduler", "PipelineService", "PipelineClient",
+    "PipelineWorker", "WorkerBroker", "WorkerInfo", "LeaseLost",
     "ServiceError", "WireError", "from_spec", "to_spec",
     "register_plugin", "registered_plugins", "registry_spec",
+    "chain_plugin_names",
 ]

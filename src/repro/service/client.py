@@ -57,11 +57,18 @@ class PipelineClient:
 
     # -- transport ------------------------------------------------------
     def _request(self, method: str, path: str,
-                 body: dict | None = None, raw: bool = False) -> Any:
-        data = None if body is None else json.dumps(body).encode()
+                 body: dict | None = None, raw: bool = False,
+                 raw_body: bytes | None = None,
+                 headers: dict[str, str] | None = None) -> Any:
+        if raw_body is not None:
+            data = raw_body
+            hdrs = {"Content-Type": "application/octet-stream"}
+        else:
+            data = None if body is None else json.dumps(body).encode()
+            hdrs = {"Content-Type": "application/json"} if data else {}
+        hdrs.update(headers or {})
         req = urllib.request.Request(
-            self.base_url + path, data=data, method=method,
-            headers={"Content-Type": "application/json"} if data else {})
+            self.base_url + path, data=data, method=method, headers=hdrs)
         try:
             with urllib.request.urlopen(req, timeout=self.timeout) as resp:
                 payload = resp.read()
@@ -152,6 +159,71 @@ class PipelineClient:
         payload = self._request(
             "GET", f"/jobs/{quote(job_id, safe='')}/result{q}", raw=True)
         return np.load(io.BytesIO(payload))
+
+    # -- worker-pull protocol (broker mode; docs/worker-protocol.md) ----
+    def register_worker(self, *, worker_id: str | None = None,
+                        plugins: list[str] | None = None,
+                        mesh_shape: list[int] | None = None,
+                        max_batch: int = 1,
+                        shared_fs: bool = False) -> dict[str, Any]:
+        """Register a worker process (``POST /workers``) with its
+        capabilities.  Returns ``{"worker_id", "lease_ttl"}`` (plus
+        ``"results_dir"`` for shared-fs workers).  409 if the server is
+        not in broker mode."""
+        return self._request("POST", "/workers", {
+            "worker_id": worker_id, "plugins": plugins,
+            "mesh_shape": mesh_shape, "max_batch": max_batch,
+            "shared_fs": shared_fs})
+
+    def lease(self, worker_id: str, max_jobs: int = 1,
+              timeout: float = 0.0) -> list[dict[str, Any]]:
+        """Lease capability-matching jobs (``POST /jobs/lease``).
+        Returns the (possibly empty) job-descriptor list; ``timeout``
+        long-polls server-side up to 30s."""
+        return self._request("POST", "/jobs/lease", {
+            "worker_id": worker_id, "max_jobs": max_jobs,
+            "timeout": timeout})["jobs"]
+
+    def progress(self, job_id: str, worker_id: str,
+                 **fields: Any) -> dict[str, Any]:
+        """Heartbeat + progress for a leased job
+        (``POST /jobs/{id}/progress``; fields: ``plugin_index``,
+        ``n_plugins``, ``resumed_from``, ``checkpoint``).  The reply's
+        ``verdict`` is ``ok`` / ``cancelled`` / ``lost``."""
+        return self._request(
+            "POST", f"/jobs/{quote(job_id, safe='')}/progress",
+            {"worker_id": worker_id, **fields})
+
+    def complete(self, job_id: str, worker_id: str, state: str,
+                 error: str | None = None,
+                 results: dict[str, Any] | None = None,
+                 **fields: Any) -> dict[str, Any]:
+        """Report a leased job terminal (``POST /jobs/{id}/complete``).
+        Raises ServiceError(409) if the lease was lost — the caller
+        must discard its outcome."""
+        body: dict[str, Any] = {"worker_id": worker_id, "state": state,
+                                **fields}
+        if error is not None:
+            body["error"] = error
+        if results is not None:
+            body["results"] = results
+        return self._request(
+            "POST", f"/jobs/{quote(job_id, safe='')}/complete", body)
+
+    def upload_result(self, job_id: str, worker_id: str, dataset: str,
+                      payload: bytes) -> dict[str, Any]:
+        """Upload one result dataset as raw ``.npy`` bytes
+        (``PUT /jobs/{id}/result?dataset=``); only the lease holder may
+        upload (409 otherwise)."""
+        return self._request(
+            "PUT",
+            f"/jobs/{quote(job_id, safe='')}/result"
+            f"?dataset={quote(dataset, safe='')}",
+            raw_body=payload, headers={"X-Worker-Id": worker_id})
+
+    def workers(self) -> dict[str, Any]:
+        """Per-worker broker stats (``GET /workers``; broker mode)."""
+        return self._request("GET", "/workers")
 
     def wait(self, job_id: str, timeout: float | None = None,
              poll: float = 0.1) -> dict[str, Any]:

@@ -90,6 +90,18 @@ class Job:
     #: the live runner (datasets/transport/profiler) once checking starts
     runner: PluginRunner | None = None
     chain_sig: tuple = ()
+    # -- broker-mode (worker-pull) fields -------------------------------
+    #: worker currently (or last) holding this job's lease
+    worker_id: str | None = None
+    #: times the job has been leased; >1 means a lease expired and the
+    #: job was requeued onto another worker
+    attempt: int = 0
+    #: a cancel arrived while a worker held the lease; the worker's next
+    #: heartbeat is answered with verdict "cancelled"
+    cancel_requested: bool = False
+    #: dataset name -> server-readable .npy path, filled by remote
+    #: workers (upload spool or shared-fs hand-off)
+    remote_results: dict[str, str] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         if not self.chain_sig:
@@ -116,8 +128,9 @@ class Job:
         human-readable ``status`` (``running(plugin i/N)``), priority,
         ``resumed_from`` (>0 when restored from a checkpoint),
         submission/start/finish timestamps, elapsed ``wall``, the
-        failure ``error`` if any, and the JSON-able subset of
-        ``metadata``."""
+        failure ``error`` if any, the broker-mode ``worker_id`` /
+        ``attempt`` (attempt >1 = requeued after a lease expiry), and
+        the JSON-able subset of ``metadata``."""
         return {"job_id": self.job_id, "state": self.state.value,
                 "status": self.status, "priority": self.priority,
                 "plugin_index": self.plugin_index,
@@ -127,5 +140,6 @@ class Job:
                 "started_at": self.started_at,
                 "finished_at": self.finished_at, "wall": self.wall,
                 "error": self.error,
+                "worker_id": self.worker_id, "attempt": self.attempt,
                 "metadata": {k: v for k, v in self.metadata.items()
                              if _is_jsonable(v)}}

@@ -123,20 +123,59 @@ class JobQueue:
             return job
 
     # -- dispatch -------------------------------------------------------
-    def _pop_locked(self) -> Job | None:
-        while self._heap:
-            _, _, job = heapq.heappop(self._heap)
-            if job.state is JobState.QUEUED:      # skip cancelled entries
-                job.state = JobState.CHECKING     # dispatched: uncancellable
-                return job
-        return None
+    def _pop_locked(self, predicate: Callable[[Job], bool] | None = None
+                    ) -> Job | None:
+        if predicate is None:
+            while self._heap:
+                _, _, job = heapq.heappop(self._heap)
+                if job.state is JobState.QUEUED:  # skip cancelled entries
+                    job.state = JobState.CHECKING  # dispatched: uncancellable
+                    return job
+            return None
+        # Capability-filtered pop: scan the FULL dispatch order
+        # (-priority, seq) and take the first matching queued job,
+        # leaving non-matching QUEUED jobs exactly where they are.  This
+        # is the starvation-safe shape: an unmatchable high-priority
+        # head never shadows a matchable lower-priority job (we keep
+        # scanning past it), and because skipped entries are not
+        # popped/re-pushed their position — and FIFO fairness — is
+        # preserved for the worker that CAN run them.  Terminal
+        # tombstones (cancelled while queued) are discarded as the scan
+        # passes them; only the heappop path above would otherwise ever
+        # reap them, and a broker only uses this path.
+        taken = None
+        dead: list[tuple] = []
+        for entry in sorted(self._heap, key=lambda e: (e[0], e[1])):
+            job = entry[2]
+            if job.state is not JobState.QUEUED:
+                dead.append(entry)
+                continue
+            if predicate(job):
+                job.state = JobState.CHECKING
+                taken = entry
+                break
+        if taken is not None:
+            dead.append(taken)
+        if dead:
+            drop = {id(e) for e in dead}
+            self._heap = [e for e in self._heap if id(e) not in drop]
+            heapq.heapify(self._heap)
+        return None if taken is None else taken[2]
 
-    def get(self, timeout: float | None = None) -> Job | None:
-        """Pop the highest-priority queued job (None on timeout)."""
+    def get(self, timeout: float | None = None,
+            predicate: Callable[[Job], bool] | None = None) -> Job | None:
+        """Pop the highest-priority queued job (None on timeout).
+
+        Args:
+            timeout: seconds to wait for a (matching) job; None = forever.
+            predicate: capability filter — only jobs it accepts are
+                eligible; non-matching jobs keep their queue position
+                (see :meth:`_pop_locked` for the starvation guarantee).
+        """
         deadline = None if timeout is None else time.time() + timeout
         with self._lock:
             while True:
-                job = self._pop_locked()
+                job = self._pop_locked(predicate)
                 if job is not None:
                     return job
                 remaining = (None if deadline is None
@@ -146,14 +185,17 @@ class JobQueue:
                 self._not_empty.wait(remaining)
 
     def get_batch(self, max_jobs: int, timeout: float | None = None,
-                  match: Callable[[Job, Job], bool] | None = None
+                  match: Callable[[Job, Job], bool] | None = None,
+                  predicate: Callable[[Job], bool] | None = None
                   ) -> list[Job]:
         """Pop the head job plus up to ``max_jobs - 1`` queued jobs with
         an identical chain signature (gang scheduling).  Candidates are
         scanned in dispatch order — sorted ``(-priority, seq)``, not raw
         heap-array order — so gang members join by priority then FIFO
-        and a truncated gang takes the jobs whose turn it actually is."""
-        head = self.get(timeout)
+        and a truncated gang takes the jobs whose turn it actually is.
+        ``predicate`` restricts both the head and the gang members to
+        jobs a capability-filtered worker can run (lease path)."""
+        head = self.get(timeout, predicate)
         if head is None:
             return []
         match = match or (lambda a, b: a.chain_sig == b.chain_sig)
@@ -163,7 +205,8 @@ class JobQueue:
                 if len(batch) >= max_jobs:
                     break
                 job = entry[2]
-                if job.state is JobState.QUEUED and match(head, job):
+                if job.state is JobState.QUEUED and match(head, job) \
+                        and (predicate is None or predicate(job)):
                     job.state = JobState.CHECKING
                     batch.append(job)
             if len(batch) > 1:
@@ -172,6 +215,20 @@ class JobQueue:
                               if id(e[2]) not in taken]
                 heapq.heapify(self._heap)
         return batch
+
+    def requeue(self, job: Job) -> bool:
+        """Put a dispatched (leased) job back in the queue — the broker's
+        lease-expiry path.  The job keeps its original ``seq``, so it
+        re-enters at the FRONT of its priority class (it is the oldest
+        submission there) and resumes promptly on the next capable
+        worker.  Returns False (and does nothing) for terminal jobs."""
+        with self._lock:
+            if job.state.terminal() or job.state is JobState.QUEUED:
+                return False
+            job.state = JobState.QUEUED
+            heapq.heappush(self._heap, (-job.priority, job.seq, job))
+            self._not_empty.notify()
+            return True
 
     # -- bookkeeping ----------------------------------------------------
     def job(self, job_id: str) -> Job:

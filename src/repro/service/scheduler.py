@@ -23,16 +23,22 @@ day.  The scheduler closes that gap:
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+import re
+import tempfile
 import threading
 import time
 import traceback
 from typing import Any, Callable
 
 from ..core.framework import PluginRunner
+from ..core.plugin import _is_jsonable
 from ..core.transport import InMemoryTransport, Transport
 from .checkpoint import CheckpointStore
 from .job import Job, JobState
 from .queue import JobQueue
+from .wire import WireError, chain_plugin_names, to_spec
 
 
 class PipelineScheduler:
@@ -284,3 +290,530 @@ class PipelineScheduler:
                 elif job.state is JobState.FAILED:
                     self.jobs_failed += 1
         self.queue.notify_terminal()
+
+
+# ======================================================================
+# Worker-pull scheduling: the broker side of multi-host deployment.
+# ======================================================================
+class LeaseLost(RuntimeError):
+    """The caller no longer holds the job's lease (it expired and the
+    job was requeued, possibly onto another worker) — any late result
+    must be discarded (HTTP 409)."""
+
+
+#: names that may become path components (worker ids, result datasets):
+#: no separators, no leading dot — "../../x" or "/etc/x" never reaches
+#: os.path.join
+_SAFE_NAME = re.compile(r"^[\w\-][\w.\- ]*$")
+
+
+@dataclasses.dataclass
+class WorkerInfo:
+    """One registered worker process and its advertised capabilities."""
+
+    worker_id: str
+    #: wire plugin names the worker can execute; None = unrestricted
+    plugins: frozenset[str] | None = None
+    #: device-mesh shape the worker runs (capacity filter)
+    mesh_shape: tuple[int, ...] = (1,)
+    #: largest gang the worker accepts in one lease
+    max_batch: int = 1
+    #: worker sees the broker's results_dir (writes results directly)
+    shared_fs: bool = False
+    registered_at: float = dataclasses.field(default_factory=time.time)
+    last_seen: float = dataclasses.field(default_factory=time.time)
+    leases_granted: int = 0
+    jobs_done: int = 0
+    jobs_failed: int = 0
+    #: job ids currently leased to this worker
+    active: set[str] = dataclasses.field(default_factory=set)
+
+    def snapshot(self) -> dict[str, Any]:
+        return {"worker_id": self.worker_id,
+                "plugins": (sorted(self.plugins)
+                            if self.plugins is not None else None),
+                "mesh_shape": list(self.mesh_shape),
+                "max_batch": self.max_batch, "shared_fs": self.shared_fs,
+                "registered_at": self.registered_at,
+                "last_seen": self.last_seen,
+                "leases_granted": self.leases_granted,
+                "jobs_done": self.jobs_done,
+                "jobs_failed": self.jobs_failed,
+                "active": sorted(self.active)}
+
+
+@dataclasses.dataclass
+class _Lease:
+    worker_id: str
+    expires_at: float
+
+
+class WorkerBroker:
+    """Feeds :class:`JobQueue` jobs to detached worker *processes* —
+    the multi-host half of the paper's claim that the same process list
+    runs "in serial on a PC, or in parallel across a cluster": one
+    queue, N ``PipelineWorker`` processes pulling from it over HTTP.
+
+    Protocol (wire messages in ``docs/worker-protocol.md``):
+
+    * a worker registers (:meth:`register`) with its capabilities —
+      plugins available, mesh shape, max gang size, shared-fs flag;
+    * it leases jobs (:meth:`lease`): the queue pop is filtered by
+      those capabilities (``JobQueue.get`` with a predicate — see its
+      starvation guarantee), the job is serialised back to its wire
+      spec, and a lease with a TTL is recorded;
+    * while running it heartbeats (:meth:`progress`) after every plugin
+      step, renewing the lease and streaming ``plugin_index`` /
+      ``resumed_from`` / checkpoint location back; the reply carries a
+      verdict — ``ok``, ``cancelled`` (a cancel arrived mid-lease) or
+      ``lost`` (the lease expired and the job was requeued);
+    * it hands results over (:meth:`store_result` upload spool, or a
+      shared-fs path in :meth:`complete`) and reports terminal state.
+
+    A worker that dies silently stops heartbeating; the sweep loop
+    expires its leases and requeues the jobs, which resume from their
+    last checkpoint on the next capable worker (``resumed_from`` set by
+    the PR 2 checkpoint path — the worker restores, the broker records).
+    """
+
+    def __init__(self, queue: JobQueue, *, lease_ttl: float = 15.0,
+                 sweep_interval: float | None = None,
+                 results_dir: str | None = None):
+        """Args:
+            queue: the admission queue leases are fed from.
+            lease_ttl: seconds a lease survives without a heartbeat.
+            sweep_interval: expiry-sweep cadence (default ``ttl / 4``,
+                capped at 1s).
+            results_dir: spool for worker results (uploads land here;
+                shared-fs workers write into it).  Default: a fresh
+                temp directory.
+        """
+        self.queue = queue
+        self.lease_ttl = lease_ttl
+        self.sweep_interval = (sweep_interval if sweep_interval is not None
+                               else min(1.0, lease_ttl / 4))
+        self.results_dir = results_dir or tempfile.mkdtemp(
+            prefix="pipeline-results-")
+        os.makedirs(self.results_dir, exist_ok=True)
+        self._workers: dict[str, WorkerInfo] = {}
+        self._leases: dict[str, _Lease] = {}
+        self._required: dict[str, set[str]] = {}   # job_id -> plugin names
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._sweeper: threading.Thread | None = None
+        self._wseq = 0
+        self.jobs_done = 0
+        self.jobs_failed = 0
+        self.jobs_requeued = 0
+        self.leases_expired = 0
+        self._started_at: float | None = None
+
+    # -- lifecycle ------------------------------------------------------
+    def start(self) -> "WorkerBroker":
+        """Start the lease-expiry sweep thread (idempotent)."""
+        if self._sweeper is not None:
+            return self
+        self._started_at = time.time()
+        self._stop = threading.Event()
+        self._sweeper = threading.Thread(
+            target=self._sweep_loop, args=(self._stop,),
+            name="broker-sweep", daemon=True)
+        self._sweeper.start()
+        return self
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop the sweep thread.  Leases survive (workers keep running
+        their current jobs); nothing expires until the next start()."""
+        self._stop.set()
+        if self._sweeper is not None and wait:
+            self._sweeper.join(timeout=10)
+        self._sweeper = None
+
+    # -- registration ---------------------------------------------------
+    def register(self, info: dict[str, Any]) -> dict[str, Any]:
+        """Admit (or refresh) a worker from its registration message::
+
+            {"worker_id": null, "plugins": [...] | null,
+             "mesh_shape": [1], "max_batch": 1, "shared_fs": false}
+
+        Returns the reply envelope: the (possibly generated)
+        ``worker_id``, the broker's ``lease_ttl``, and — for shared-fs
+        workers — the ``results_dir`` to write results into.
+        Raises WireError on a malformed message.
+        """
+        if not isinstance(info, dict):
+            raise WireError("registration body must be an object")
+        plugins = info.get("plugins")
+        if plugins is not None and (
+                not isinstance(plugins, (list, tuple))
+                or not all(isinstance(p, str) for p in plugins)):
+            raise WireError(f"plugins must be a list of wire names or "
+                            f"null, got {plugins!r}")
+        mesh_shape = info.get("mesh_shape") or [1]
+        if not isinstance(mesh_shape, (list, tuple)) or \
+                not all(isinstance(d, int) and d > 0 for d in mesh_shape):
+            raise WireError(f"mesh_shape must be a list of positive ints, "
+                            f"got {mesh_shape!r}")
+        max_batch = info.get("max_batch", 1)
+        if not isinstance(max_batch, int) or max_batch < 1:
+            raise WireError(f"max_batch must be a positive int, got "
+                            f"{max_batch!r}")
+        worker_id = info.get("worker_id")
+        if worker_id is not None and (
+                not isinstance(worker_id, str)
+                or not _SAFE_NAME.match(worker_id)):
+            raise WireError(f"worker_id must be a filename-safe string "
+                            f"(no path separators), got {worker_id!r}")
+        with self._lock:
+            if worker_id is None:
+                self._wseq += 1
+                worker_id = f"worker-{self._wseq:03d}"
+            w = self._workers.get(worker_id)
+            if w is None:
+                w = WorkerInfo(worker_id)
+                self._workers[worker_id] = w
+            w.plugins = (frozenset(plugins) if plugins is not None
+                         else None)
+            w.mesh_shape = tuple(mesh_shape)
+            w.max_batch = max_batch
+            w.shared_fs = bool(info.get("shared_fs", False))
+            w.last_seen = time.time()
+            reply = {"worker_id": worker_id, "lease_ttl": self.lease_ttl}
+            if w.shared_fs:
+                reply["results_dir"] = self.results_dir
+            return reply
+
+    # -- capability matching --------------------------------------------
+    def _required_plugins(self, job: Job) -> set[str]:
+        need = self._required.get(job.job_id)
+        if need is None:
+            need = chain_plugin_names(job.process_list)
+            self._required[job.job_id] = need
+        return need
+
+    def _capable(self, w: WorkerInfo, job: Job) -> bool:
+        """Can ``w`` run ``job``?  Plugins: the chain's wire names must
+        all be advertised (None = unrestricted).  Mesh: a job that asks
+        for devices (``metadata["mesh_shape"]``) needs a worker whose
+        mesh has at least that many."""
+        if w.plugins is not None and \
+                not self._required_plugins(job) <= w.plugins:
+            return False
+        req = job.metadata.get("mesh_shape")
+        if req:
+            need = 1
+            for d in req:
+                need *= int(d)
+            have = 1
+            for d in w.mesh_shape:
+                have *= int(d)
+            if have < need:
+                return False
+        return True
+
+    # -- lease ----------------------------------------------------------
+    def lease(self, worker_id: str, max_jobs: int = 1,
+              timeout: float = 0.0) -> list[dict[str, Any]]:
+        """Pop up to ``max_jobs`` (capped by the worker's ``max_batch``)
+        capability-matching jobs and lease them to ``worker_id``.
+
+        Returns one descriptor per job: the wire spec to execute plus
+        identity/lease bookkeeping::
+
+            {"job_id": ..., "process_list": {spec v1}, "priority": 0,
+             "attempt": 1, "metadata": {...}, "lease_ttl": 15.0}
+
+        Raises KeyError for an unregistered worker.  A job whose chain
+        cannot be wire-serialised (in-process submission with opaque
+        params) is failed loudly rather than silently starving.
+        """
+        self._expire_locked_sweep()
+        with self._lock:
+            w = self._workers[worker_id]
+            w.last_seen = time.time()
+            n = max(1, min(max_jobs, w.max_batch))
+            pred = lambda job: self._capable(w, job)   # noqa: E731
+        if n == 1:
+            job = self.queue.get(timeout=timeout, predicate=pred)
+            jobs = [job] if job is not None else []
+        else:
+            jobs = self.queue.get_batch(n, timeout=timeout, predicate=pred)
+        out = []
+        now = time.time()
+        for job in jobs:
+            try:
+                spec = to_spec(job.process_list)
+            except WireError as e:
+                job.error = f"WireError: {e}"
+                job.state = JobState.FAILED
+                job.finished_at = time.time()
+                with self._lock:
+                    self.jobs_failed += 1
+                    self._required.pop(job.job_id, None)
+                self.queue.notify_terminal()
+                continue
+            with self._lock:
+                job.worker_id = worker_id
+                job.attempt += 1
+                job.started_at = job.started_at or now
+                self._leases[job.job_id] = _Lease(
+                    worker_id, now + self.lease_ttl)
+                w.leases_granted += 1
+                w.active.add(job.job_id)
+            out.append({
+                "job_id": job.job_id, "process_list": spec,
+                "priority": job.priority, "attempt": job.attempt,
+                "metadata": {k: v for k, v in job.metadata.items()
+                             if _is_jsonable(v)},
+                "lease_ttl": self.lease_ttl})
+        return out
+
+    # -- heartbeat / progress -------------------------------------------
+    def progress(self, job_id: str, worker_id: str,
+                 body: dict[str, Any] | None = None) -> dict[str, Any]:
+        """Heartbeat + per-plugin progress from the leased worker.
+
+        Renews the lease and folds ``plugin_index`` / ``n_plugins`` /
+        ``resumed_from`` / ``checkpoint`` (a location string) into the
+        job's snapshot.  The verdict in the reply is the control
+        channel back to the worker:
+
+        * ``"ok"`` — keep going (lease renewed);
+        * ``"cancelled"`` — a cancel arrived while the worker held the
+          lease; the job is now terminal, stop and discard;
+        * ``"lost"`` — the lease expired (or another worker owns the
+          job after a requeue); stop, the job is no longer yours.
+          Exactly one owner survives an expiry race: the requeue
+          happens under the broker lock, and a stale owner can never
+          match the new lease's ``worker_id``.
+
+        Raises KeyError for an unknown job.
+        """
+        body = body or {}
+        job = self.queue.job(job_id)
+        now = time.time()
+        with self._lock:
+            lease = self._leases.get(job_id)
+            if lease is None or lease.worker_id != worker_id:
+                return {"verdict": "lost"}
+            w = self._workers.get(worker_id)
+            if w is not None:
+                w.last_seen = now
+            if now > lease.expires_at:
+                # expired but not yet swept: reject the heartbeat and
+                # requeue NOW so the job lands on a live worker (the
+                # requeue may CANCEL a cancel-flagged job — terminal —
+                # so fall through to notify_terminal below)
+                self._drop_lease_locked(job_id, worker_id)
+                self._requeue_locked(job)
+                verdict = {"verdict": "lost"}
+            elif job.cancel_requested or job.state is JobState.CANCELLED:
+                self._drop_lease_locked(job_id, worker_id)
+                if not job.state.terminal():
+                    job.state = JobState.CANCELLED
+                    job.finished_at = now
+                verdict = {"verdict": "cancelled"}
+            else:
+                lease.expires_at = now + self.lease_ttl
+                if isinstance(body.get("plugin_index"), int):
+                    # a bare renewal (no fields) keeps the lease alive
+                    # without claiming execution started — batch-leased
+                    # jobs waiting their turn stay "checking"
+                    job.state = JobState.RUNNING
+                    job.plugin_index = body["plugin_index"]
+                if isinstance(body.get("n_plugins"), int):
+                    job.n_plugins = body["n_plugins"]
+                if isinstance(body.get("resumed_from"), int):
+                    job.resumed_from = max(job.resumed_from,
+                                           body["resumed_from"])
+                if isinstance(body.get("checkpoint"), str):
+                    job.metadata["checkpoint"] = body["checkpoint"]
+                return {"verdict": "ok", "lease_ttl": self.lease_ttl}
+        self.queue.notify_terminal()
+        return verdict
+
+    # -- results --------------------------------------------------------
+    def _job_spool(self, job_id: str) -> str:
+        d = os.path.join(self.results_dir,
+                         job_id.replace(os.sep, "_").replace("..", "_"))
+        os.makedirs(d, exist_ok=True)
+        return d
+
+    def store_result(self, job_id: str, worker_id: str, dataset: str,
+                     payload: bytes) -> str:
+        """Spool one uploaded result dataset (raw ``.npy`` bytes) for
+        ``GET /jobs/{id}/result`` to stream later.  Only the current
+        lease holder may upload — a worker that lost its lease gets
+        :class:`LeaseLost` and must discard its copy."""
+        if not _SAFE_NAME.match(dataset):
+            # the name becomes a path component under results_dir —
+            # refuse separators/dot-leading names, never traverse out
+            raise WireError(f"dataset must be a filename-safe name, "
+                            f"got {dataset!r}")
+        with self._lock:
+            lease = self._leases.get(job_id)
+            if lease is None or lease.worker_id != worker_id:
+                raise LeaseLost(f"worker {worker_id!r} no longer holds "
+                                f"the lease on job {job_id!r}")
+        path = os.path.join(self._job_spool(job_id), f"{dataset}.npy")
+        tmp = f"{path}.{worker_id}.tmp"
+        with open(tmp, "wb") as fh:
+            fh.write(payload)
+        os.replace(tmp, path)
+        job = self.queue.job(job_id)
+        with self._lock:
+            job.remote_results[dataset] = path
+        return path
+
+    def complete(self, job_id: str, worker_id: str,
+                 body: dict[str, Any]) -> dict[str, Any]:
+        """Terminal report from the lease holder::
+
+            {"state": "done" | "failed", "error": null,
+             "results": {"recon": {"path": "/shared/.../recon.npy"}}}
+
+        ``results`` paths are the shared-fs hand-off (the worker wrote
+        the ``.npy`` under ``results_dir`` where the broker can read
+        it — paths outside ``results_dir`` are refused);
+        uploaded datasets were already spooled via
+        :meth:`store_result`.  Raises :class:`LeaseLost` if the lease
+        is gone — the job was requeued, this worker's outcome is void.
+        """
+        job = self.queue.job(job_id)
+        state = body.get("state")
+        if state not in ("done", "failed"):
+            raise WireError(f'complete state must be "done" or "failed", '
+                            f'got {state!r}')
+        results = body.get("results") or {}
+        if not isinstance(results, dict):
+            raise WireError("results must be an object")
+        # validate BEFORE touching any state: a shared-fs hand-off may
+        # only name paths inside results_dir — the broker must never be
+        # talked into streaming an arbitrary server file to clients
+        root = os.path.realpath(self.results_dir)
+        accepted: dict[str, str] = {}
+        for name, ent in results.items():
+            path = ent.get("path") if isinstance(ent, dict) else None
+            if not path:
+                continue
+            real = os.path.realpath(path)
+            if not real.startswith(root + os.sep):
+                raise WireError(f"result path for {name!r} is outside "
+                                f"the broker results_dir")
+            if os.path.exists(real):
+                accepted[name] = real
+        now = time.time()
+        with self._lock:
+            lease = self._leases.get(job_id)
+            if lease is None or lease.worker_id != worker_id or \
+                    now > lease.expires_at:
+                raise LeaseLost(f"worker {worker_id!r} no longer holds "
+                                f"the lease on job {job_id!r}")
+            self._drop_lease_locked(job_id, worker_id)
+            w = self._workers.get(worker_id)
+            job.remote_results.update(accepted)
+            if isinstance(body.get("plugin_index"), int):
+                job.plugin_index = body["plugin_index"]
+            if isinstance(body.get("n_plugins"), int):
+                job.n_plugins = body["n_plugins"]
+            if state == "done":
+                job.state = JobState.DONE
+                self.jobs_done += 1
+                if w is not None:
+                    w.jobs_done += 1
+            else:
+                job.error = str(body.get("error") or "worker failure")
+                job.state = JobState.FAILED
+                self.jobs_failed += 1
+                if w is not None:
+                    w.jobs_failed += 1
+            job.finished_at = now
+            self._required.pop(job_id, None)
+        self.queue.notify_terminal()
+        return {"job_id": job_id, "state": job.state.value}
+
+    # -- cancellation ---------------------------------------------------
+    def request_cancel(self, job_id: str) -> bool:
+        """Cancel a LEASED job cooperatively: flag it so the worker's
+        next heartbeat is answered ``cancelled``.  Returns True if the
+        job is currently leased (cancel pending), False otherwise."""
+        with self._lock:
+            lease = self._leases.get(job_id)
+            if lease is None:
+                return False
+            try:
+                job = self.queue.job(job_id)
+            except KeyError:
+                return False
+            if job.state.terminal():
+                return False
+            job.cancel_requested = True
+            return True
+
+    # -- expiry ---------------------------------------------------------
+    def _drop_lease_locked(self, job_id: str, worker_id: str) -> None:
+        self._leases.pop(job_id, None)
+        w = self._workers.get(worker_id)
+        if w is not None:
+            w.active.discard(job_id)
+
+    def _requeue_locked(self, job: Job) -> None:
+        self.leases_expired += 1
+        if job.cancel_requested and not job.state.terminal():
+            job.state = JobState.CANCELLED
+            job.finished_at = time.time()
+            return
+        if self.queue.requeue(job):
+            self.jobs_requeued += 1
+
+    def _expire_locked_sweep(self) -> None:
+        """Requeue every job whose lease expired (dead worker), and
+        prune the required-plugins cache of jobs that went terminal via
+        any path (cancel, failure, eviction) — the cache must not grow
+        for the broker's lifetime."""
+        now = time.time()
+        with self._lock:
+            expired = [(jid, ls) for jid, ls in self._leases.items()
+                       if now > ls.expires_at]
+            for jid, ls in expired:
+                self._drop_lease_locked(jid, ls.worker_id)
+                try:
+                    job = self.queue.job(jid)
+                except KeyError:
+                    continue
+                if not job.state.terminal():
+                    self._requeue_locked(job)
+            for jid in list(self._required):
+                try:
+                    if self.queue.job(jid).state.terminal():
+                        del self._required[jid]
+                except KeyError:
+                    del self._required[jid]
+        if expired:
+            self.queue.notify_terminal()
+
+    def _sweep_loop(self, stop: threading.Event) -> None:
+        while not stop.wait(self.sweep_interval):
+            self._expire_locked_sweep()
+
+    # -- stats ----------------------------------------------------------
+    def stats(self) -> dict[str, Any]:
+        """Broker counters + per-worker stats (``GET /stats`` in broker
+        mode): ``jobs_done``/``jobs_failed``/``jobs_requeued``/
+        ``leases_expired``, active lease count, and one entry per
+        registered worker under ``workers``."""
+        with self._lock:
+            out: dict[str, Any] = {
+                "mode": "broker",
+                "jobs_done": self.jobs_done,
+                "jobs_failed": self.jobs_failed,
+                "jobs_requeued": self.jobs_requeued,
+                "leases_expired": self.leases_expired,
+                "active_leases": len(self._leases),
+                "workers": {wid: w.snapshot()
+                            for wid, w in self._workers.items()},
+            }
+        out["pending"] = self.queue.pending()
+        if self._started_at is not None:
+            out["wall"] = time.time() - self._started_at
+        return out

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import io
 import json
+import os
 import re
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -48,11 +49,13 @@ from .checkpoint import CheckpointStore
 from .compile_cache import CompileCache
 from .job import Job, JobState
 from .queue import JobQueue, QueueFull
-from .scheduler import PipelineScheduler
+from .scheduler import LeaseLost, PipelineScheduler, WorkerBroker
 from .wire import WireError, from_spec, registry_spec
 
 _JOB_RE = re.compile(r"^/jobs/([^/]+)$")
 _RESULT_RE = re.compile(r"^/jobs/([^/]+)/result$")
+_PROGRESS_RE = re.compile(r"^/jobs/([^/]+)/progress$")
+_COMPLETE_RE = re.compile(r"^/jobs/([^/]+)/complete$")
 
 
 class PipelineService:
@@ -74,20 +77,39 @@ class PipelineService:
                  batch_identical: bool = False,
                  batch_max: int = 4,
                  fuse: bool = False,
-                 compile_cache: CompileCache | None = None):
+                 compile_cache: CompileCache | None = None,
+                 workers_remote: bool = False,
+                 lease_ttl: float = 15.0,
+                 sweep_interval: float | None = None,
+                 results_dir: str | None = None):
         """Args mirror :class:`PipelineScheduler`; ``max_pending``
         bounds admission (HTTP 429 past it) and ``max_history`` bounds
-        retained terminal jobs (a pruned job's result is gone — 404)."""
+        retained terminal jobs (a pruned job's result is gone — 404).
+
+        ``workers_remote=True`` is **broker mode**: instead of
+        in-process scheduler threads, detached :class:`PipelineWorker`
+        processes register over HTTP and pull jobs via leases
+        (``lease_ttl``/``sweep_interval``/``results_dir`` configure the
+        :class:`WorkerBroker`; ``transport_factory``/``n_workers``/
+        gang options are worker-side concerns and are ignored here).
+        """
         # explicit None-check: an EMPTY CompileCache is falsy (__len__)
         self.compile_cache = (compile_cache if compile_cache is not None
                               else CompileCache())
         self.queue = JobQueue(max_pending=max_pending,
                               max_history=max_history)
-        self.scheduler = PipelineScheduler(
-            self.queue, transport_factory=transport_factory,
-            n_workers=n_workers, checkpoints=checkpoints,
-            batch_identical=batch_identical, batch_max=batch_max,
-            fuse=fuse, compile_cache=self.compile_cache)
+        self.scheduler: PipelineScheduler | None = None
+        self.broker: WorkerBroker | None = None
+        if workers_remote:
+            self.broker = WorkerBroker(
+                self.queue, lease_ttl=lease_ttl,
+                sweep_interval=sweep_interval, results_dir=results_dir)
+        else:
+            self.scheduler = PipelineScheduler(
+                self.queue, transport_factory=transport_factory,
+                n_workers=n_workers, checkpoints=checkpoints,
+                batch_identical=batch_identical, batch_max=batch_max,
+                fuse=fuse, compile_cache=self.compile_cache)
         self._httpd: ThreadingHTTPServer | None = None
         self._http_thread: threading.Thread | None = None
 
@@ -128,16 +150,26 @@ class PipelineService:
                                  metadata=metadata)
 
     def cancel(self, job_id: str) -> dict[str, Any]:
-        """Cancel ``job_id`` if still queued.  Returns
-        ``{"job_id", "cancelled", "state"}``; ``cancelled`` is False for
-        a job already dispatched/terminal.  Raises KeyError if unknown."""
+        """Cancel ``job_id`` if still queued — or, in broker mode, flag
+        a LEASED job so its worker's next heartbeat gets a ``cancelled``
+        verdict.  Returns ``{"job_id", "cancelled", "state"}`` (plus
+        ``"pending": True`` for the leased case, where the terminal
+        state lands at the next heartbeat); ``cancelled`` is False for a
+        job already terminal.  Raises KeyError if unknown."""
         cancelled = self.queue.cancel(job_id)
         job = self.queue.job(job_id)
-        return {"job_id": job_id, "cancelled": cancelled,
-                "state": job.state.value}
+        out = {"job_id": job_id, "cancelled": cancelled,
+               "state": job.state.value}
+        if not cancelled and self.broker is not None \
+                and self.broker.request_cancel(job_id):
+            out.update(cancelled=True, pending=True)
+        return out
 
     def stats(self) -> dict[str, Any]:
-        """Scheduler counters + compile-cache hit rates (``GET /stats``)."""
+        """Scheduler (or broker) counters + compile-cache hit rates
+        (``GET /stats``)."""
+        if self.broker is not None:
+            return self.broker.stats()
         return self.scheduler.stats()
 
     def result_dataset(self, job_id: str, dataset: str | None = None):
@@ -158,6 +190,10 @@ class PipelineService:
             raise RuntimeError(f"job {job_id!r} is {job.status!r}, "
                                f"not done")
         runner = job.runner
+        if runner is None and job.remote_results:
+            raise RuntimeError(          # broker-mode: served from files
+                f"job {job_id!r} ran on a remote worker; its results "
+                f"are .npy files, not live datasets")
         if runner is None:
             raise RuntimeError(f"job {job_id!r} result was evicted "
                                f"(max_history)")
@@ -167,6 +203,32 @@ class PipelineService:
                 f"job {job_id!r} has no dataset {name!r} "
                 f"(available: {sorted(runner.datasets)})")
         return runner.datasets[name], runner.transport
+
+    def result_file(self, job_id: str, dataset: str | None = None
+                    ) -> tuple[str, str] | None:
+        """Broker-mode result lookup: ``(name, path)`` of the ``.npy`` a
+        remote worker handed over for ``dataset`` (default: the first
+        reported), or None when this job has no remote results
+        (in-process path).
+
+        Raises:
+            KeyError: unknown job, or remote results exist but not for
+                ``dataset``.
+            RuntimeError: job not DONE yet.
+        """
+        job = self.queue.job(job_id)
+        if not job.remote_results:
+            return None
+        if job.state is not JobState.DONE:
+            raise RuntimeError(f"job {job_id!r} is {job.status!r}, "
+                               f"not done")
+        name = dataset or next(iter(job.remote_results))
+        path = job.remote_results.get(name)
+        if path is None or not os.path.exists(path):
+            raise KeyError(
+                f"job {job_id!r} has no result dataset {name!r} "
+                f"(available: {sorted(job.remote_results)})")
+        return name, path
 
     # -- lifecycle ------------------------------------------------------
     def serve(self, host: str = "127.0.0.1", port: int = 8080,
@@ -180,7 +242,10 @@ class PipelineService:
 
         Returns: the bound ``(host, port)``.
         """
-        self.scheduler.start()
+        if self.broker is not None:
+            self.broker.start()
+        else:
+            self.scheduler.start()
         service = self
 
         class Handler(_PipelineHandler):
@@ -203,7 +268,8 @@ class PipelineService:
         return addr
 
     def stop(self) -> None:
-        """Shut down the HTTP server (if serving) and scheduler workers."""
+        """Shut down the HTTP server (if serving) and the scheduler
+        workers / broker sweep thread."""
         if self._httpd is not None:
             self._httpd.shutdown()
             self._httpd.server_close()
@@ -211,7 +277,10 @@ class PipelineService:
         if self._http_thread is not None:
             self._http_thread.join(timeout=10)
             self._http_thread = None
-        self.scheduler.shutdown()
+        if self.broker is not None:
+            self.broker.shutdown()
+        if self.scheduler is not None:
+            self.scheduler.shutdown()
 
 
 # ----------------------------------------------------------------------
@@ -280,6 +349,10 @@ class _PipelineHandler(BaseHTTPRequestHandler):
             return self._json(200, registry_spec())
         if path == "/jobs":
             return self._json(200, {"jobs": svc.queue.snapshot()})
+        if path == "/workers":
+            if svc.broker is None:
+                return self._error(409, "not serving in broker mode")
+            return self._json(200, svc.broker.stats()["workers"])
         m = _JOB_RE.match(path)
         if m:
             job_id = unquote(m.group(1))
@@ -294,9 +367,30 @@ class _PipelineHandler(BaseHTTPRequestHandler):
         self._error(404, f"no route for GET {path}")
 
     def do_POST(self) -> None:
-        if urlparse(self.path).path.rstrip("/") != "/jobs":
-            self._drain_body()
-            return self._error(404, f"no route for POST {self.path}")
+        path = urlparse(self.path).path.rstrip("/")
+        if path == "/jobs":
+            return self._submit()
+        if path == "/workers":
+            return self._broker_call(
+                lambda b, body: (201, b.register(body)))
+        if path == "/jobs/lease":
+            return self._broker_call(self._lease)
+        m = _PROGRESS_RE.match(path)
+        if m:
+            job_id = unquote(m.group(1))
+            return self._broker_call(
+                lambda b, body: (200, b.progress(
+                    job_id, self._worker_of(body), body)))
+        m = _COMPLETE_RE.match(path)
+        if m:
+            job_id = unquote(m.group(1))
+            return self._broker_call(
+                lambda b, body: (200, b.complete(
+                    job_id, self._worker_of(body), body)))
+        self._drain_body()
+        self._error(404, f"no route for POST {self.path}")
+
+    def _submit(self) -> None:
         try:
             envelope = self._read_body()
             job = self.service.submit_envelope(envelope)
@@ -308,6 +402,85 @@ class _PipelineHandler(BaseHTTPRequestHandler):
             return self._error(409, str(e))
         self._json(201, {"job_id": job.job_id, "state": job.state.value,
                          "priority": job.priority})
+
+    # -- worker-pull protocol (broker mode) -----------------------------
+    @staticmethod
+    def _worker_of(body: Any) -> str:
+        wid = body.get("worker_id") if isinstance(body, dict) else None
+        if not isinstance(wid, str):
+            raise WireError('body must carry a string "worker_id"')
+        return wid
+
+    @staticmethod
+    def _lease(broker, body: Any) -> tuple[int, Any]:
+        wid = _PipelineHandler._worker_of(body)
+        max_jobs = body.get("max_jobs", 1)
+        if not isinstance(max_jobs, int) or max_jobs < 1:
+            raise WireError(f"max_jobs must be a positive int, got "
+                            f"{max_jobs!r}")
+        timeout = body.get("timeout", 0.0)
+        if not isinstance(timeout, (int, float)) or timeout < 0 \
+                or timeout > 30:
+            raise WireError(f"timeout must be 0..30s, got {timeout!r}")
+        return 200, {"jobs": broker.lease(wid, max_jobs=max_jobs,
+                                          timeout=float(timeout))}
+
+    def _broker_call(self, fn) -> None:
+        """Run one worker-protocol operation: parse the JSON body, hand
+        it to ``fn(broker, body) -> (status, payload)``, map the shared
+        error contract (409 no-broker/lease-lost, 404 unknown, 400
+        malformed)."""
+        if self.service.broker is None:
+            self._drain_body()
+            return self._error(
+                409, "not serving in broker mode (start the service "
+                     "with workers_remote=True / --workers-remote)")
+        try:
+            body = self._read_body()
+            code, payload = fn(self.service.broker, body)
+        except WireError as e:
+            return self._error(400, str(e))
+        except LeaseLost as e:
+            return self._error(409, str(e))
+        except KeyError as e:
+            return self._error(404, f"unknown {e}")
+        self._json(code, payload)
+
+    def do_PUT(self) -> None:
+        """Result upload from a leased worker: raw ``.npy`` bytes to
+        ``/jobs/{id}/result?dataset=name`` with ``X-Worker-Id``."""
+        url = urlparse(self.path)
+        m = _RESULT_RE.match(url.path.rstrip("/"))
+        if not m:
+            self._drain_body()
+            return self._error(404, f"no route for PUT {self.path}")
+        if self.service.broker is None:
+            self._drain_body()
+            return self._error(409, "not serving in broker mode")
+        job_id = unquote(m.group(1))
+        query = parse_qs(url.query)
+        dataset = (query.get("dataset") or [None])[0]
+        worker_id = self.headers.get("X-Worker-Id")
+        if not dataset or not worker_id:
+            self._drain_body()
+            return self._error(
+                400, "PUT result needs ?dataset= and an X-Worker-Id "
+                     "header")
+        length = int(self.headers.get("Content-Length") or 0)
+        payload = self.rfile.read(length) if length else b""
+        if not payload:
+            return self._error(400, "empty result body")
+        try:
+            self.service.broker.store_result(job_id, worker_id, dataset,
+                                             payload)
+        except WireError as e:            # e.g. unsafe dataset name
+            return self._error(400, str(e))
+        except LeaseLost as e:
+            return self._error(409, str(e))
+        except KeyError:
+            return self._error(404, f"unknown job {job_id!r}")
+        self._json(200, {"job_id": job_id, "dataset": dataset,
+                         "bytes": len(payload)})
 
     def do_DELETE(self) -> None:
         self._drain_body()              # DELETEs may carry a body
@@ -328,6 +501,9 @@ class _PipelineHandler(BaseHTTPRequestHandler):
     # -- result streaming -----------------------------------------------
     def _send_result(self, job_id: str, dataset: str | None) -> None:
         try:
+            remote = self.service.result_file(job_id, dataset)
+            if remote is not None:        # broker mode: stream the file
+                return self._send_result_file(remote[1], remote[0])
             ds, transport = self.service.result_dataset(job_id, dataset)
         except KeyError as e:
             return self._error(404, str(e))
@@ -354,3 +530,20 @@ class _PipelineHandler(BaseHTTPRequestHandler):
         else:
             arr = np.ascontiguousarray(np.asarray(transport.read(ds)))
             self.wfile.write(arr.tobytes())
+
+    def _send_result_file(self, path: str, dataset: str | None) -> None:
+        """Stream a worker-delivered ``.npy`` file block-wise (broker
+        mode) — O(block) RAM, same contract as the chunk-slab path."""
+        size = os.path.getsize(path)
+        self.send_response(200)
+        self.send_header("Content-Type", "application/x-npy")
+        self.send_header("Content-Length", str(size))
+        if dataset:
+            self.send_header("X-Dataset", dataset)
+        self.end_headers()
+        with open(path, "rb") as fh:
+            while True:
+                block = fh.read(1 << 20)
+                if not block:
+                    break
+                self.wfile.write(block)

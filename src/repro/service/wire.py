@@ -211,6 +211,19 @@ def to_spec(process_list: ProcessList | Iterable[PluginEntry]
     return {"version": WIRE_VERSION, "plugins": out}
 
 
+def chain_plugin_names(process_list: ProcessList | Iterable[PluginEntry]
+                       ) -> set[str]:
+    """Wire names a worker must have registered to execute this chain —
+    the broker's plugin-capability filter.  An entry whose class is not
+    wire-registered maps to its python qualname, which no worker
+    advertises, so such a chain is never leased out."""
+    by_cls = {cls: name for name, cls in _REGISTRY.items()}
+    entries = (process_list.entries
+               if isinstance(process_list, ProcessList) else process_list)
+    return {by_cls.get(e.cls, f"{e.cls.__module__}.{e.cls.__qualname__}")
+            for e in entries}
+
+
 # -- default registry: the paper's standard full-field chain ------------
 def _register_defaults() -> None:
     from ..tomo import plugins as tomo

@@ -1,0 +1,431 @@
+"""PipelineWorker — a detached worker process pulling jobs from the
+broker over HTTP (the cluster half of the paper's "serial on a PC, or in
+parallel across a cluster").
+
+One worker = one process (one device mesh).  It registers its
+capabilities with the broker (``POST /workers``), leases jobs
+(``POST /jobs/lease``), executes each job's process list with a local
+:class:`~repro.core.framework.PluginRunner`, heartbeats + streams
+per-plugin progress back (``POST /jobs/{id}/progress``) — renewing its
+lease and obeying the returned verdict — checkpoints after every step
+when ``--checkpoint-dir`` is set, and hands results over either by
+uploading ``.npy`` bytes (``PUT /jobs/{id}/result``) or, with
+``--shared-fs``, by writing them directly into the broker's shared
+results directory (atomic rename).  Wire messages are specified in ``docs/worker-protocol.md``.
+
+Fault model: if this process dies (SIGKILL, OOM, node loss) it simply
+stops heartbeating; the broker expires the lease and requeues the job,
+and the next worker to lease it restores the last checkpoint from the
+shared ``--checkpoint-dir`` (``resumed_from`` reported via progress).
+A worker that *loses* a lease (verdict ``lost``) abandons the job and
+discards any local state — exactly one owner survives.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.service.worker \\
+        --url http://127.0.0.1:8973 --transport inmemory \\
+        --checkpoint-dir /shared/ckpts --worker-id w0
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import io
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from ..core.framework import PluginRunner
+from ..core.transport import ChunkedFileTransport, InMemoryTransport, \
+    Transport
+from .checkpoint import CheckpointStore
+from .client import PipelineClient, ServiceError
+from .compile_cache import CompileCache
+from .wire import from_spec, registered_plugins
+
+
+class _Abandon(Exception):
+    """Stop working on the current job (lease lost or job cancelled)."""
+
+    def __init__(self, verdict: str):
+        super().__init__(verdict)
+        self.verdict = verdict
+
+
+class _Heartbeat(threading.Thread):
+    """Background lease renewal while a (possibly slow) plugin step or
+    result upload runs: posts a progress message every ``interval``
+    seconds for the active job — and a bare renewal for every other
+    job leased in the same batch but not yet started, so a batch
+    member's lease cannot expire while it waits its turn — and records
+    the verdicts; a non-``ok`` verdict on the active job aborts the
+    run loop at the next step boundary, one on a pending job drops it
+    from the batch."""
+
+    def __init__(self, worker: "PipelineWorker", job_id: str,
+                 interval: float, pending: tuple[str, ...] = ()):
+        super().__init__(name=f"heartbeat-{job_id}", daemon=True)
+        self.worker = worker
+        self.job_id = job_id
+        self.interval = interval
+        self.pending = list(pending)
+        self.abort: str | None = None     # set to the fatal verdict
+        self.dropped: set[str] = set()    # pending ids we lost
+        self._stop = threading.Event()
+
+    def run(self) -> None:
+        while not self._stop.wait(self.interval):
+            for jid in [j for j in self.pending
+                        if j not in self.dropped]:
+                try:                      # bare renewal, no fields
+                    out = self.worker.client.progress(
+                        jid, self.worker.worker_id)
+                except (ServiceError, OSError):
+                    continue
+                if out.get("verdict") != "ok":
+                    self.dropped.add(jid)
+            try:
+                out = self.worker.client.progress(
+                    self.job_id, self.worker.worker_id,
+                    **dict(self.worker._progress_fields))
+            except (ServiceError, OSError):
+                continue                  # transient server hiccup
+            if out.get("verdict") != "ok":
+                self.abort = out.get("verdict", "lost")
+                return
+
+    def stop(self) -> None:
+        self._stop.set()
+
+
+class PipelineWorker:
+    """Lease → run → heartbeat → hand over results, forever.
+
+    Args:
+        base_url: the broker's HTTP address.
+        transport_factory: job descriptor -> Transport for each leased
+            job (default: a fresh ``InMemoryTransport``).
+        checkpoint_dir: save per-plugin checkpoints here and restore on
+            lease (point every worker at the SAME directory — shared
+            filesystem — to get cross-worker resume of killed jobs).
+        shared_fs: write results straight into the broker's
+            ``results_dir`` (shared filesystem) instead of uploading
+            bytes.
+        plugins: advertised wire plugin names (default: everything in
+            this process's registry).
+        mesh_shape: advertised device-mesh shape (capacity filter).
+        max_batch: largest lease the worker accepts.
+        poll: idle sleep between empty leases, seconds.
+        heartbeat: lease-renewal cadence; default ``lease_ttl / 3``
+            once registered.
+        worker_id: explicit id (handy for tests/ops); default assigned
+            by the broker.
+    """
+
+    def __init__(self, base_url: str, *,
+                 transport_factory: Callable[[dict], Transport]
+                 | None = None,
+                 checkpoint_dir: str | None = None,
+                 shared_fs: bool = False,
+                 plugins: list[str] | None = None,
+                 mesh_shape: list[int] | None = None,
+                 max_batch: int = 1,
+                 poll: float = 0.5,
+                 heartbeat: float | None = None,
+                 worker_id: str | None = None,
+                 timeout: float = 60.0):
+        self.client = PipelineClient(base_url, timeout=timeout)
+        self.transport_factory = (transport_factory
+                                  or (lambda desc: InMemoryTransport()))
+        self.checkpoints = (CheckpointStore(checkpoint_dir)
+                            if checkpoint_dir else None)
+        self.shared_fs = shared_fs
+        self.plugins = (plugins if plugins is not None
+                        else sorted(registered_plugins()))
+        self.mesh_shape = mesh_shape
+        self.max_batch = max_batch
+        self.poll = poll
+        self.heartbeat = heartbeat
+        self.worker_id = worker_id
+        self.lease_ttl = 15.0
+        self.results_dir: str | None = None
+        self.jobs_done = 0
+        self.jobs_failed = 0
+        self._registered = False
+        self._progress_fields: dict[str, Any] = {}
+
+    # -- registration ---------------------------------------------------
+    def register(self) -> str:
+        """Announce capabilities; adopt the broker's ``lease_ttl`` (and
+        ``results_dir`` when shared-fs).  Returns the worker id."""
+        reply = self.client.register_worker(
+            worker_id=self.worker_id, plugins=self.plugins,
+            mesh_shape=self.mesh_shape, max_batch=self.max_batch,
+            shared_fs=self.shared_fs)
+        self.worker_id = reply["worker_id"]
+        self.lease_ttl = float(reply.get("lease_ttl", self.lease_ttl))
+        self.results_dir = reply.get("results_dir")
+        if self.heartbeat is None:
+            self.heartbeat = max(0.05, self.lease_ttl / 3)
+        self._registered = True
+        return self.worker_id
+
+    # -- main loop ------------------------------------------------------
+    def run_forever(self) -> None:
+        """Register, then lease-and-run until the process is killed."""
+        while True:
+            if not self.run_once():
+                time.sleep(self.poll)
+
+    def run_once(self) -> bool:
+        """One lease round.  Returns True if any job was run."""
+        if not self._registered:
+            self.register()
+        try:
+            leases = self.client.lease(self.worker_id,
+                                       max_jobs=self.max_batch)
+        except ServiceError as e:
+            if e.status == 404:          # broker restarted and lost the
+                self._registered = False  # registry: re-register next try
+            return False
+        except OSError:
+            return False
+        dropped: set[str] = set()
+        for i, desc in enumerate(leases):
+            if desc["job_id"] in dropped:
+                continue                 # lease lost while queued locally
+            rest = tuple(d["job_id"] for d in leases[i + 1:])
+            dropped |= self._run_leased(desc, pending=rest)
+        return bool(leases)
+
+    # -- one job --------------------------------------------------------
+    def _run_leased(self, desc: dict[str, Any],
+                    pending: tuple[str, ...] = ()) -> set[str]:
+        """Run one leased job; keep ``pending`` batch-mates' leases
+        renewed meanwhile.  Returns the pending ids whose leases were
+        lost (the caller must skip them)."""
+        job_id = desc["job_id"]
+        hb = _Heartbeat(self, job_id, self.heartbeat or 1.0,
+                        pending=pending)
+        try:
+            self._execute(desc, hb)
+        except _Abandon:
+            pass          # broker said lost/cancelled: walk away quietly
+        except Exception as e:           # noqa: BLE001 — report upstream
+            self.jobs_failed += 1
+            try:
+                self.client.complete(job_id, self.worker_id, "failed",
+                                     error=f"{type(e).__name__}: {e}")
+            except (ServiceError, OSError):
+                pass                     # lease lost: nothing to report
+        finally:
+            hb.stop()
+        return hb.dropped
+
+    def _check(self, job_id: str, **fields: Any) -> None:
+        """Post a progress heartbeat and enforce the verdict."""
+        # rebind instead of .update(): the heartbeat thread snapshots
+        # this dict concurrently, and a dict is never mutated once
+        # published (no resize-during-copy race)
+        self._progress_fields = {**self._progress_fields, **fields}
+        out = self.client.progress(job_id, self.worker_id,
+                                   **self._progress_fields)
+        verdict = out.get("verdict")
+        if verdict != "ok":
+            raise _Abandon(verdict or "lost")
+
+    def _execute(self, desc: dict[str, Any], hb: _Heartbeat) -> None:
+        job_id = desc["job_id"]
+        self._progress_fields = {}
+        # cheap lease confirm BEFORE any expensive prepare/restore — a
+        # batch-mate whose lease expired while it waited abandons here
+        self._check(job_id)
+        # renewals (this job bare, batch-mates pending) start NOW, not
+        # after prepare: a slow first prepare must not eat the TTL of
+        # every lease in the batch
+        hb.start()
+        pl = from_spec(desc["process_list"])
+        runner = PluginRunner(pl, self.transport_factory(desc))
+        runner.prepare()
+        resumed = 0
+        if self.checkpoints is not None:
+            resumed = self.checkpoints.restore(job_id, runner)
+        self._check(job_id, plugin_index=runner.current_step,
+                    n_plugins=runner.n_steps, resumed_from=resumed,
+                    **({"checkpoint": self.checkpoints.root}
+                       if self.checkpoints else {}))
+        while True:
+            if hb.abort:
+                raise _Abandon(hb.abort)
+            if not runner.step():
+                break
+            if self.checkpoints is not None:
+                self.checkpoints.save(job_id, runner)
+            self._check(job_id, plugin_index=runner.current_step)
+        runner.finalise()
+        # the heartbeat keeps renewing through hand-over + complete: a
+        # result upload slower than lease_ttl must not lose the lease
+        # (hb is stopped by _run_leased's finally)
+        results = self._hand_over(job_id, runner)
+        self.client.complete(job_id, self.worker_id, "done",
+                             results=results,
+                             plugin_index=runner.current_step,
+                             n_plugins=runner.n_steps)
+        self.jobs_done += 1
+        if self.checkpoints is not None:
+            self.checkpoints.clear(job_id)
+
+    # -- result hand-over ----------------------------------------------
+    def _hand_over(self, job_id: str,
+                   runner: PluginRunner) -> dict[str, Any]:
+        """Deliver every saver output: write an ``.npy`` into the
+        broker's shared results_dir, or upload the bytes."""
+        results: dict[str, Any] = {}
+        for name in runner.result_names():
+            ds = runner.datasets[name]
+            arr = np.ascontiguousarray(
+                np.asarray(runner.transport.read(ds)))
+            if self.shared_fs and self.results_dir:
+                results[name] = {
+                    "path": self._link_result(job_id, name, arr)}
+            else:
+                buf = io.BytesIO()
+                np.save(buf, arr)
+                self.client.upload_result(job_id, self.worker_id, name,
+                                          buf.getvalue())
+                results[name] = {"uploaded": True}
+        return results
+
+    def _link_result(self, job_id: str, name: str,
+                     arr: np.ndarray) -> str:
+        """Write the ``.npy`` straight into the broker's shared
+        results_dir (per-worker tmp name + atomic rename, so two
+        owners racing a requeue can never interleave bytes)."""
+        d = os.path.join(self.results_dir, job_id.replace(os.sep, "_"))
+        os.makedirs(d, exist_ok=True)
+        dst = os.path.join(d, f"{name}.npy")
+        tmp = f"{dst}.{self.worker_id}.tmp"
+        with open(tmp, "wb") as fh:
+            np.save(fh, arr)
+        os.replace(tmp, dst)
+        return dst
+
+
+# ----------------------------------------------------------------------
+def spawn_local_workers(url: str, n: int, *, transport: str = "inmemory",
+                        checkpoint_dir: str | None = None,
+                        shared_fs: bool = False, poll: float = 0.1,
+                        heartbeat: float | None = None,
+                        imports: tuple[str, ...] = (),
+                        worker_ids: list[str] | None = None,
+                        pythonpath_extra: tuple[str, ...] = (),
+                        stdout: Any = None) -> list:
+    """Spawn ``n`` worker subprocesses against a broker URL — the
+    ``pipeline_serve --workers-remote N`` demo, benchmarks and tests all
+    use this.  Each worker is a real OS process (kill one to exercise
+    the lease-expiry/resume path).  Returns the ``Popen`` handles;
+    caller terminates them."""
+    import subprocess
+    import sys
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env = dict(os.environ)
+    parts = [src, *pythonpath_extra]
+    if env.get("PYTHONPATH"):
+        parts.append(env["PYTHONPATH"])
+    env["PYTHONPATH"] = os.pathsep.join(parts)
+    procs = []
+    for i in range(n):
+        # -c instead of -m: repro.service.__init__ imports this module,
+        # so runpy would warn about the double import
+        cmd = [sys.executable, "-c",
+               "from repro.service.worker import main; main()",
+               "--url", url, "--transport", transport,
+               "--poll", str(poll),
+               "--worker-id",
+               (worker_ids[i] if worker_ids else f"local-{i}")]
+        if checkpoint_dir:
+            cmd += ["--checkpoint-dir", checkpoint_dir]
+        if shared_fs:
+            cmd += ["--shared-fs"]
+        if heartbeat is not None:
+            cmd += ["--heartbeat", str(heartbeat)]
+        for mod in imports:
+            cmd += ["--import", mod]
+        procs.append(subprocess.Popen(cmd, env=env, stdout=stdout,
+                                      stderr=stdout))
+    return procs
+
+
+def _transport_factory(kind: str,
+                       scratch: str) -> Callable[[dict], Transport]:
+    if kind == "sharded":
+        import jax
+        from jax.sharding import Mesh
+        from ..core.transport import ShardedTransport
+        mesh = Mesh(np.asarray(jax.devices()), ("data",))
+        cache = CompileCache()            # process-level: reused per job
+        return lambda desc: ShardedTransport(mesh, donate=True,
+                                             compile_cache=cache)
+    if kind == "chunked":
+        return lambda desc: ChunkedFileTransport(
+            os.path.join(scratch, desc["job_id"]))
+    return lambda desc: InMemoryTransport()
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="repro.service.worker",
+        description=__doc__.split("\n\n")[0])
+    ap.add_argument("--url", default="http://127.0.0.1:8973",
+                    help="broker base URL")
+    ap.add_argument("--transport", default="inmemory",
+                    choices=("inmemory", "chunked", "sharded"))
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="shared checkpoint directory (cross-worker "
+                         "resume needs every worker pointed here)")
+    ap.add_argument("--shared-fs", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="write results straight into the broker's "
+                         "results_dir (shared filesystem) instead of "
+                         "uploading")
+    ap.add_argument("--worker-id", default=None)
+    ap.add_argument("--max-batch", type=int, default=1)
+    ap.add_argument("--poll", type=float, default=0.5,
+                    help="idle sleep between empty leases, seconds")
+    ap.add_argument("--heartbeat", type=float, default=None,
+                    help="lease-renewal cadence (default lease_ttl/3)")
+    ap.add_argument("--import", dest="imports", action="append",
+                    default=[], metavar="MODULE",
+                    help="import MODULE before serving (register extra "
+                         "wire plugins; repeatable)")
+    args = ap.parse_args(argv)
+    for mod in args.imports:
+        importlib.import_module(mod)
+    scratch = tempfile.mkdtemp(prefix="pipeline-worker-")
+    worker = PipelineWorker(
+        args.url,
+        transport_factory=_transport_factory(args.transport, scratch),
+        checkpoint_dir=args.checkpoint_dir, shared_fs=args.shared_fs,
+        worker_id=args.worker_id, max_batch=args.max_batch,
+        poll=args.poll, heartbeat=args.heartbeat)
+    wid = worker.register()
+    print(f"worker {wid} serving {args.url} "
+          f"(transport={args.transport}, plugins={len(worker.plugins)}"
+          f"{', checkpointed' if worker.checkpoints else ''}"
+          f"{', shared-fs' if args.shared_fs else ''})", flush=True)
+    try:
+        worker.run_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Wire-registered test plugins shared by the broker/worker tests.
+
+Imported BOTH by the test process (so the server-side spec validation
+knows the plugin) and by worker subprocesses via
+``python -m repro.service.worker --import slow_plugins`` (so the worker
+can execute it) — which also exercises the capability filter: a worker
+started WITHOUT the import must never be leased a chain containing
+``slow_identity``.
+"""
+import time
+
+from repro.core.patterns import PROJECTION
+from repro.core.plugin import BaseFilter
+from repro.service import register_plugin
+
+
+@register_plugin
+class SlowIdentity(BaseFilter):
+    """Pass-through that sleeps per frame call — makes a chain slow
+    enough to SIGKILL a worker mid-job deterministically."""
+
+    name = "slow_identity"
+    pattern_name = PROJECTION
+    frames = 1
+    fusable = False
+    parameters = {"delay": 0.1}
+
+    def process_frames(self, frames):
+        time.sleep(self.params["delay"])
+        return frames[0]

@@ -1,6 +1,8 @@
 """Wire format (repro.service.wire): spec v1 round-trips, loud
-rejection of unknown plugins/params, and the param-introspection
-registry served at GET /plugins."""
+rejection of unknown plugins/params, the param-introspection registry
+served at GET /plugins — plus hypothesis property tests (arbitrary
+valid specs round-trip and preserve the chain signature; arbitrary
+invalid specs always raise with the valid alternatives listed)."""
 import json
 
 import pytest
@@ -10,7 +12,15 @@ from repro.core.process_list import ProcessListError
 from repro.service import (WireError, chain_signature, from_spec,
                            register_plugin, registered_plugins,
                            registry_spec, to_spec)
+from repro.service.wire import _valid_params
 from repro.tomo import SyntheticTomoLoader, standard_chain
+
+try:                       # same optional dep the other property tests
+    from hypothesis import given, settings   # use via importorskip —
+    from hypothesis import strategies as st  # but this module also has
+    HAVE_HYPOTHESIS = True                   # plain tests to keep
+except ImportError:                          # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 
 def test_round_trip_preserves_chain_signature():
@@ -92,6 +102,110 @@ def test_structural_errors_still_caught_by_check():
     pl = from_spec(spec)                     # deserialises fine
     with pytest.raises(ProcessListError, match="saver"):
         pl.check()
+
+
+# ------------------------------------------------- property tests
+if HAVE_HYPOTHESIS:
+    _REG = registered_plugins()              # snapshot for sampling
+    _WIRE_NAMES = sorted(_REG)
+    _DS_NAMES = ("a", "b", "c", "d")
+
+    _json_values = st.recursive(
+        st.none() | st.booleans() | st.integers(-2 ** 31, 2 ** 31)
+        | st.floats(allow_nan=False, allow_infinity=False)
+        | st.text(max_size=8),
+        lambda kids: st.lists(kids, max_size=3)
+        | st.dictionaries(st.text(max_size=4), kids, max_size=3),
+        max_leaves=6)
+
+    @st.composite
+    def _valid_entries(draw):
+        """One canonical spec entry: a registered plugin, a subset of
+        its declared params with arbitrary JSON values, short dataset
+        wiring lists; empty fields omitted (the form to_spec emits)."""
+        name = draw(st.sampled_from(_WIRE_NAMES))
+        entry = {"plugin": name}
+        declared = sorted(_REG[name].parameters)
+        if declared:
+            params = draw(st.dictionaries(st.sampled_from(declared),
+                                          _json_values, max_size=3))
+            if params:
+                entry["params"] = params
+        for key in ("in_datasets", "out_datasets"):
+            names = draw(st.lists(st.sampled_from(_DS_NAMES),
+                                  max_size=2, unique=True))
+            if names:
+                entry[key] = names
+        return entry
+
+    @st.composite
+    def _valid_specs(draw):
+        return {"version": 1,
+                "plugins": draw(st.lists(_valid_entries(),
+                                         min_size=1, max_size=4))}
+
+    @given(spec=_valid_specs())
+    @settings(max_examples=60, deadline=None)
+    def test_property_valid_spec_round_trips(spec):
+        """to_spec(from_spec(s)) == s for every canonical valid spec,
+        and the round trip preserves the chain signature."""
+        pl = from_spec(spec)
+        again = to_spec(pl)
+        assert again == spec
+        assert chain_signature(from_spec(again)) == chain_signature(pl)
+
+    @given(name=st.text(min_size=1, max_size=12).filter(
+        lambda s: s not in registered_plugins()))
+    @settings(max_examples=40, deadline=None)
+    def test_property_unknown_plugin_lists_alternatives(name):
+        with pytest.raises(WireError) as ei:
+            from_spec({"plugins": [{"plugin": name}]})
+        msg = str(ei.value)
+        assert "unknown plugin" in msg
+        for known in _WIRE_NAMES:        # every alternative is named
+            assert known in msg
+
+    @given(data=st.data())
+    @settings(max_examples=40, deadline=None)
+    def test_property_unknown_param_lists_valid(data):
+        wire = data.draw(st.sampled_from(_WIRE_NAMES))
+        valid = _valid_params(_REG[wire])
+        bad = data.draw(st.text(min_size=1, max_size=10).filter(
+            lambda s: s not in valid))
+        with pytest.raises(WireError) as ei:
+            from_spec({"plugins": [{"plugin": wire,
+                                    "params": {bad: 1}}]})
+        msg = str(ei.value)
+        assert "unknown params" in msg and "valid:" in msg
+        for p in sorted(valid):          # the alternatives are listed
+            assert p in msg
+
+    _malformed_specs = st.one_of(
+        st.integers(), st.text(max_size=6), st.booleans(),
+        st.just({}),
+        st.just({"plugins": []}),
+        st.just({"plugins": [7]}),
+        st.just({"plugins": [{"params": {}}]}),
+        st.builds(
+            lambda v: {"version": v,
+                       "plugins": [{"plugin": "fbp_recon"}]},
+            st.one_of(st.integers().filter(lambda v: v != 1),
+                      st.just("1"))),
+        st.just({"plugins": [{"plugin": "fbp_recon",
+                              "params": ["not", "a", "dict"]}]}),
+        st.just({"plugins": [{"plugin": "fbp_recon",
+                              "in_datasets": "tomo"}]}),
+        st.just({"plugins": [{"plugin": "fbp_recon",
+                              "out_datasets": [1, 2]}]}),
+        st.just({"plugins": [{"plugin": "synthetic_tomo_loader",
+                              "params": {"seed": {1, 2}}}]}),
+    )
+
+    @given(spec=_malformed_specs)
+    @settings(max_examples=60, deadline=None)
+    def test_property_malformed_specs_always_raise(spec):
+        with pytest.raises(WireError):
+            from_spec(spec)
 
 
 def test_registry_spec_is_jsonable_introspection():

@@ -1,0 +1,351 @@
+"""Multi-host scheduling: one queue, many worker PROCESSES.
+
+The PR acceptance path end-to-end: a broker-mode PipelineService on an
+ephemeral port, two ``repro.service.worker`` subprocesses pulling jobs
+over HTTP; a job SIGKILLed mid-chain on one worker finishes on the
+survivor — resumed from its checkpoint (``resumed_from`` set) — with
+results bit-identical to a single-process PluginRunner.  Plus the lease
+state machine (expiry → requeue → exactly one owner; cancel-during-lease
+→ ``cancelled`` verdict) and the capability-filter starvation
+regression on ``JobQueue``.
+"""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+import slow_plugins  # noqa: F401 — registers slow_identity server-side
+from repro.core import PluginRunner
+from repro.service import (JobQueue, PipelineClient, PipelineService,
+                           PipelineWorker, ServiceError,
+                           chain_plugin_names, from_spec)
+from repro.service.worker import spawn_local_workers
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+#: the standard chain's wire names — a worker WITHOUT slow_identity
+PLAIN_CAPS = ["synthetic_tomo_loader", "dark_flat_correction",
+              "fbp_recon", "hdf5_saver"]
+
+
+def _spec(seed=0, delay=0.0, n_det=16, n_angles=8):
+    """A small wire spec; ``delay`` > 0 inserts the slow_identity
+    plugin (sleeps per frame) so a worker can be killed mid-chain."""
+    plugins = [
+        {"plugin": "synthetic_tomo_loader",
+         "params": {"n_det": n_det, "n_angles": n_angles, "n_rows": 1,
+                    "seed": seed},
+         "out_datasets": ["tomo"]},
+        {"plugin": "dark_flat_correction",
+         "params": {"use_pallas": False},
+         "in_datasets": ["tomo"], "out_datasets": ["tomo"]},
+    ]
+    if delay:
+        plugins.append({"plugin": "slow_identity",
+                        "params": {"delay": delay},
+                        "in_datasets": ["tomo"], "out_datasets": ["tomo"]})
+    plugins += [
+        {"plugin": "fbp_recon", "params": {"use_pallas": False},
+         "in_datasets": ["tomo"], "out_datasets": ["recon"]},
+        {"plugin": "hdf5_saver", "in_datasets": ["recon"]},
+    ]
+    return {"version": 1, "plugins": plugins}
+
+
+def _reference(spec) -> np.ndarray:
+    """The single-process path for the same spec."""
+    ref = PluginRunner(from_spec(spec)).run()
+    return np.asarray(ref["recon"].materialise())
+
+
+@pytest.fixture
+def broker():
+    """A broker-mode service on an ephemeral port + client (fast lease
+    expiry so the race tests run in milliseconds)."""
+    svc = PipelineService(workers_remote=True, lease_ttl=0.4,
+                          sweep_interval=0.05)
+    host, port = svc.serve(port=0)
+    client = PipelineClient(f"http://{host}:{port}", timeout=30.0)
+    try:
+        yield svc, client
+    finally:
+        svc.stop()
+
+
+# ===================================================== kill/resume (E2E)
+def test_worker_crash_job_resumes_on_survivor(tmp_path):
+    """SIGKILL the worker holding the lease mid-chain: the lease
+    expires, the job requeues, the surviving worker restores the shared
+    checkpoint (resumed_from > 0) and finishes — results bit-identical
+    to a single-process run."""
+    ckpt = str(tmp_path / "ckpts")
+    svc = PipelineService(workers_remote=True, lease_ttl=1.5,
+                          sweep_interval=0.1)
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    client = PipelineClient(url, timeout=60.0)
+    workers = spawn_local_workers(
+        url, 2, transport="inmemory", checkpoint_dir=ckpt,
+        poll=0.05, heartbeat=0.3, imports=("slow_plugins",),
+        worker_ids=["w0", "w1"], pythonpath_extra=(TESTS_DIR,))
+    by_id = dict(zip(["w0", "w1"], workers))
+    try:
+        spec = _spec(seed=5, delay=0.25)
+        jid = client.submit(spec, job_id="crash-job")
+        # wait until mid-chain: >=1 plugin done (so a checkpoint
+        # exists) and the slow plugin is running on a known worker
+        deadline = time.time() + 120
+        while True:
+            snap = client.status(jid)
+            if snap["state"] == "running" and snap["plugin_index"] >= 1 \
+                    and snap["worker_id"]:
+                break
+            assert snap["state"] not in ("done", "failed"), snap
+            assert time.time() < deadline, f"never got mid-chain: {snap}"
+            time.sleep(0.05)
+        victim = snap["worker_id"]
+        os.kill(by_id[victim].pid, signal.SIGKILL)
+
+        snap = client.wait(jid, timeout=120)
+        assert snap["state"] == "done", snap
+        assert snap["resumed_from"] > 0, snap
+        assert snap["worker_id"] != victim, snap
+        assert snap["attempt"] >= 2, snap
+        np.testing.assert_array_equal(client.result(jid),
+                                      _reference(spec))
+        st = client.stats()
+        assert st["jobs_requeued"] >= 1
+        assert st["leases_expired"] >= 1
+
+        # the survivor keeps serving: a fresh job completes normally,
+        # also bit-identical to the single-process path
+        spec2 = _spec(seed=6)
+        jid2 = client.submit(spec2)
+        snap2 = client.wait(jid2, timeout=120)
+        assert snap2["state"] == "done", snap2
+        assert snap2["worker_id"] != victim
+        np.testing.assert_array_equal(client.result(jid2),
+                                      _reference(spec2))
+    finally:
+        for p in workers:
+            if p.poll() is None:
+                p.kill()
+        for p in workers:
+            p.wait(timeout=10)
+        svc.stop()
+
+
+# ================================================== lease state machine
+def test_lease_expiry_exactly_one_owner(broker):
+    """A heartbeat after expiry is rejected; after the requeue exactly
+    one worker owns the job and the stale owner's complete/upload are
+    discarded with 409."""
+    svc, client = broker
+    client.register_worker(worker_id="w1")
+    client.register_worker(worker_id="w2")
+    jid = client.submit(_spec(seed=1))
+    leased = client.lease("w1")
+    assert [d["job_id"] for d in leased] == [jid]
+    assert leased[0]["attempt"] == 1
+    assert leased[0]["process_list"]["plugins"][0]["params"]["seed"] == 1
+    # double-lease of the same job is impossible while it is leased
+    assert client.lease("w2") == []
+    assert client.lease("w1") == []
+
+    time.sleep(0.8)                      # ttl 0.4s: expired and swept
+    assert client.progress(jid, "w1", plugin_index=1)["verdict"] == "lost"
+    assert client.status(jid)["state"] in ("queued", "checking")
+
+    l2 = client.lease("w2")              # exactly one new owner
+    assert [d["job_id"] for d in l2] == [jid]
+    assert l2[0]["attempt"] == 2
+    assert client.lease("w1") == []
+    assert client.progress(jid, "w1")["verdict"] == "lost"
+    assert client.progress(jid, "w2", plugin_index=0)["verdict"] == "ok"
+    # the stale owner's outcome is void: complete and upload are 409
+    with pytest.raises(ServiceError) as ei:
+        client.complete(jid, "w1", "done")
+    assert ei.value.status == 409
+    with pytest.raises(ServiceError) as ei:
+        client.upload_result(jid, "w1", "recon", b"\x93NUMPY...")
+    assert ei.value.status == 409
+
+
+def test_unsafe_names_rejected(broker):
+    """worker_id and result dataset names become path components on
+    the broker — separators and dot-leading names are refused with
+    400 before they reach the filesystem."""
+    svc, client = broker
+    for bad in ("../evil", "a/b", "/abs", ".."):
+        with pytest.raises(ServiceError) as ei:
+            client.register_worker(worker_id=bad)
+        assert ei.value.status == 400
+    client.register_worker(worker_id="w1")
+    jid = client.submit(_spec(seed=3))
+    assert client.lease("w1")
+    for bad in ("../../etc/evil", "..", "a/b"):
+        with pytest.raises(ServiceError) as ei:
+            client.upload_result(jid, "w1", bad, b"x")
+        assert ei.value.status == 400
+
+
+def test_cancel_during_lease_yields_cancelled_verdict(broker):
+    svc, client = broker
+    client.register_worker(worker_id="w1")
+    jid = client.submit(_spec(seed=2))
+    assert client.lease("w1")
+    assert client.progress(jid, "w1", plugin_index=0,
+                           n_plugins=3)["verdict"] == "ok"
+    out = client.cancel(jid)
+    assert out["cancelled"] is True and out.get("pending") is True
+    # the job is not terminal until the worker is told to stop...
+    assert client.progress(jid, "w1",
+                           plugin_index=1)["verdict"] == "cancelled"
+    assert client.status(jid)["state"] == "cancelled"
+    # ...and the lease is gone with it
+    assert client.progress(jid, "w1")["verdict"] == "lost"
+    with pytest.raises(ServiceError) as ei:
+        client.complete(jid, "w1", "done")
+    assert ei.value.status == 409
+
+
+def test_requeued_job_leases_in_priority_order(broker):
+    """An expired lease's job re-enters at the front of its priority
+    class (oldest seq), ahead of later same-priority submissions."""
+    svc, client = broker
+    client.register_worker(worker_id="w1")
+    j1 = client.submit(_spec(seed=1))
+    assert [d["job_id"] for d in client.lease("w1")] == [j1]
+    j2 = client.submit(_spec(seed=2))
+    time.sleep(0.8)                      # j1's lease expires, requeued
+    got = client.lease("w1", max_jobs=1)
+    assert [d["job_id"] for d in got] == [j1], (got, j2)
+
+
+# ============================================ capability filters & leases
+def test_capability_filter_routes_jobs(broker):
+    """plugins / mesh_shape capability filters decide which worker may
+    lease which job."""
+    svc, client = broker
+    client.register_worker(worker_id="plain", plugins=PLAIN_CAPS)
+    client.register_worker(worker_id="full")      # unrestricted
+    jid = client.submit(_spec(seed=1, delay=0.01))   # needs slow_identity
+    assert client.lease("plain") == []   # can't run slow_identity
+    assert [d["job_id"] for d in client.lease("full")] == [jid]
+
+    # mesh capacity: a job demanding 4 devices skips a 1-device worker
+    client.register_worker(worker_id="small", mesh_shape=[1])
+    client.register_worker(worker_id="big", mesh_shape=[2, 2])
+    jm = client.submit(_spec(seed=2), metadata={"mesh_shape": [4]})
+    assert client.lease("small") == []
+    assert [d["job_id"] for d in client.lease("big")] == [jm]
+
+
+def test_capability_starvation_regression(broker):
+    """An unmatchable high-priority head must not shadow matchable
+    lower-priority jobs: the restricted worker keeps draining its
+    matchable jobs in FIFO order while the head waits for a capable
+    worker (two capability sets, as in the PR checklist)."""
+    svc, client = broker
+    client.register_worker(worker_id="plain", plugins=PLAIN_CAPS)
+    client.register_worker(worker_id="full")
+    j_slow = client.submit(_spec(seed=1, delay=0.01), priority=10)
+    j_plain = [client.submit(_spec(seed=s)) for s in (2, 3, 4)]
+    # the plain worker drains ITS jobs FIFO, never blocked by j_slow
+    for expect in j_plain:
+        got = client.lease("plain")
+        assert [d["job_id"] for d in got] == [expect]
+    assert client.lease("plain") == []   # only the unmatchable one left
+    assert client.status(j_slow)["state"] == "queued"
+    # the capable worker still sees priority order: j_slow first
+    assert [d["job_id"] for d in client.lease("full")] == [j_slow]
+
+
+def test_queue_predicate_pop_is_starvation_safe():
+    """JobQueue.get(predicate=...) regression: scan past an unmatchable
+    head without disturbing it, repeatedly."""
+    q = JobQueue()
+    a = q.submit(from_spec(_spec(seed=0, delay=0.01)), priority=5)
+    b = q.submit(from_spec(_spec(seed=1)), priority=0)
+    c = q.submit(from_spec(_spec(seed=2)), priority=0)
+    caps = set(PLAIN_CAPS)
+    pred = lambda j: chain_plugin_names(j.process_list) <= caps  # noqa: E731
+    assert q.get(timeout=0, predicate=pred) is b   # skips head a, FIFO
+    assert q.get(timeout=0, predicate=pred) is c
+    assert q.get(timeout=0, predicate=pred) is None  # a never matched
+    assert q.get(timeout=0) is a        # ...and kept its queue position
+    # get_batch honours the predicate for head + gang members too
+    d = q.submit(from_spec(_spec(seed=3)))
+    e = q.submit(from_spec(_spec(seed=3, delay=0.01)))
+    batch = q.get_batch(4, timeout=0, match=lambda x, y: True,
+                        predicate=pred)
+    assert batch == [d]                 # e filtered out of the gang
+
+
+def test_batch_lease_renews_pending_mates(broker):
+    """A worker leasing max_batch jobs runs them sequentially; the
+    heartbeat must renew the WAITING jobs' leases too (ttl here is
+    0.4s, well under the first job's runtime), so none are requeued."""
+    svc, client = broker
+    ids = [client.submit(_spec(seed=s)) for s in range(3)]
+    w = PipelineWorker(client.base_url, worker_id="batch-w",
+                       max_batch=3, poll=0.01, heartbeat=0.1)
+    w.register()
+    assert w.run_once() is True
+    assert [client.status(j)["state"] for j in ids] == ["done"] * 3
+    st = client.stats()
+    assert st["jobs_requeued"] == 0 and st["leases_expired"] == 0
+    for i, j in enumerate(ids):
+        np.testing.assert_array_equal(client.result(j),
+                                      _reference(_spec(seed=i)))
+
+
+def test_queue_predicate_scan_reaps_cancelled_tombstones():
+    """Broker-mode pops always pass a predicate; cancelled jobs' heap
+    entries must be reaped by the scan, not linger forever."""
+    q = JobQueue()
+    a = q.submit(from_spec(_spec(seed=0)))
+    b = q.submit(from_spec(_spec(seed=1)))
+    assert q.cancel(a.job_id) is True
+    assert q.get(timeout=0, predicate=lambda j: True) is b
+    assert q._heap == []                # tombstone reaped with the pop
+
+
+def test_shared_fs_results_and_outside_paths_refused(broker):
+    """Shared-fs hand-off works end-to-end, and a complete() naming a
+    path OUTSIDE the broker results_dir is refused."""
+    svc, client = broker
+    spec = _spec(seed=8)
+    jid = client.submit(spec)
+    w = PipelineWorker(client.base_url, worker_id="fs-w", poll=0.01,
+                       shared_fs=True)
+    w.register()
+    assert w.results_dir == svc.broker.results_dir
+    assert w.run_once() is True
+    np.testing.assert_array_equal(client.result(jid), _reference(spec))
+
+    j2 = client.submit(_spec(seed=9))
+    assert client.lease("fs-w")
+    with pytest.raises(ServiceError) as ei:
+        client.complete(j2, "fs-w", "done",
+                        results={"recon": {"path": "/etc/hostname"}})
+    assert ei.value.status == 400
+
+
+# ====================================================== in-process worker
+def test_inprocess_worker_round_trip(broker):
+    """PipelineWorker as a library (no subprocess): register, lease,
+    run, upload; the broker serves the result and per-worker stats."""
+    svc, client = broker
+    spec = _spec(seed=7)
+    jid = client.submit(spec)
+    w = PipelineWorker(client.base_url, worker_id="lib-w", poll=0.01)
+    w.register()
+    assert w.run_once() is True
+    snap = client.status(jid)
+    assert snap["state"] == "done" and snap["worker_id"] == "lib-w"
+    np.testing.assert_array_equal(client.result(jid), _reference(spec))
+    workers = client.workers()
+    assert workers["lib-w"]["jobs_done"] == 1
+    assert client.stats()["jobs_done"] == 1
