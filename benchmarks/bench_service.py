@@ -1,12 +1,14 @@
 """Service-layer benchmark: jobs/sec for 1 vs many concurrent pipelines,
 the compiled-plugin cache effect — resubmitting an identical process
 list must skip every jax.jit retrace, so the cache-hit job's wall time
-sits well under the first (cold) job's — and multi-worker-process
-throughput through the broker (``--workers-remote N``).
+sits well under the first (cold) job's — multi-worker-process
+throughput through the broker (``--workers-remote N``), and parameter
+sweeps (``--sweep``): an N-point gang-batched sweep vs N sequential
+solo jobs on a warm cache.
 
 Standalone:   PYTHONPATH=src python benchmarks/bench_service.py
 CI smoke:     PYTHONPATH=src python benchmarks/bench_service.py \\
-                  --smoke --workers-remote 2
+                  --smoke --sweep --workers-remote 2
 Harness:      python -m benchmarks.run   (row prefix ``service_``)
 """
 from __future__ import annotations
@@ -20,7 +22,8 @@ import jax
 from jax.sharding import Mesh
 
 from repro.service import (CompileCache, JobQueue, PipelineClient,
-                           PipelineScheduler, PipelineService)
+                           PipelineScheduler, PipelineService,
+                           SweepManager)
 from repro.service.worker import spawn_local_workers
 from repro.core import ShardedTransport
 from repro.tomo import standard_chain
@@ -122,6 +125,113 @@ def run(report, smoke: bool = False):
            f"warmed cache; compare service_throughput_w2)")
 
 
+def _sweep_axis(n: int) -> dict:
+    return {"plugin": "sinogram_filter", "param": "cutoff",
+            "values": [float(v) for v in np.linspace(0.4, 1.0, n)]}
+
+
+def _sweep_chain(seed: int, cutoff: float):
+    pl = _chain(seed)
+    for e in pl.entries:
+        if e.cls.name == "sinogram_filter":
+            e.params["cutoff"] = cutoff
+    return pl
+
+
+def run_sweep(report, smoke: bool = False) -> None:
+    """Parameter tuning: one N-point sweep (gang-batched, one compiled
+    call per plugin step over all variants) vs N sequential solo jobs —
+    both on a warm cache.  The sweep must land well above N/2x."""
+    n = 4 if smoke else 8
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    cache = CompileCache()
+
+    def mk(batch: bool):
+        q = JobQueue()
+        sched = PipelineScheduler(
+            q, n_workers=1, compile_cache=cache,
+            batch_identical=batch, batch_max=n,
+            transport_factory=lambda job: ShardedTransport(
+                mesh, donate=False, compile_cache=cache))
+        return q, sched
+
+    def envelope(seed: int):
+        return {"process_list": _chain(seed), "sweep": _sweep_axis(n)}
+
+    # warm BOTH program families: solo per-plugin jits and the batched
+    # (vmapped) gang programs
+    q, sched = mk(False)
+    _run_jobs(q, sched, [0])
+    q, sched = mk(True)
+    mgr = SweepManager(q)
+    sched.start()
+    mgr.submit(envelope(1))
+    assert q.wait_all(timeout=600)
+    sched.shutdown()
+
+    # timed: N solo jobs, strictly sequential (submit -> drain -> next)
+    q, sched = mk(False)
+    sched.start()
+    t0 = time.perf_counter()
+    for v in _sweep_axis(n)["values"]:
+        q.submit(_sweep_chain(2, v))
+        assert q.wait_all(timeout=600)
+    t_seq = time.perf_counter() - t0
+    sched.shutdown()
+
+    # timed: ONE sweep over the same values (atomic admission -> gang)
+    q, sched = mk(True)
+    mgr = SweepManager(q)
+    sched.start()
+    t0 = time.perf_counter()
+    g = mgr.submit(envelope(2))
+    assert q.wait_all(timeout=600)
+    t_sweep = time.perf_counter() - t0
+    sched.shutdown()
+    bad = [j.job_id for j in g.jobs if j.state.value != "done"]
+    assert not bad, bad
+    speedup = t_seq / t_sweep
+    report("service_sweep_gang", t_sweep / n * 1e6,
+           f"{n}-pt sweep {speedup:.1f}x vs {n} sequential solo "
+           f"(target >={n / 2:.0f}x), {sched.gangs_run} gang(s)")
+
+
+def run_sweep_remote(report, n_workers: int, smoke: bool = False) -> None:
+    """A sweep through the broker: the variants gang-lease across
+    ``n_workers`` sharded worker subprocesses, each batch gang-executing
+    worker-side (``run_plugin_batch``); the broker streams the stacked
+    result back."""
+    n = 4 if smoke else 8
+    svc = PipelineService(workers_remote=True, lease_ttl=60.0,
+                          max_pending=n + 1)
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    workers = spawn_local_workers(
+        url, n_workers, transport="sharded", poll=0.05,
+        max_batch=max(1, n // n_workers))
+    client = PipelineClient(url, timeout=120.0)
+    try:
+        t0 = time.perf_counter()
+        reply = client.sweep(_chain(60), _sweep_axis(n),
+                             metric="sharpness")
+        snap = client.wait_sweep(reply["sweep_id"], timeout=600,
+                                 poll=0.05)
+        assert snap["state"] == "done", snap
+        stacked = client.sweep_result(reply["sweep_id"])
+        wall = time.perf_counter() - t0
+        assert stacked.shape[0] == n, stacked.shape
+        best = snap["best_variant"]["values"]
+        report(f"service_sweep_remote_w{n_workers}", wall / n * 1e6,
+               f"{n}-pt sweep over {n_workers} gang workers, stacked "
+               f"{'x'.join(map(str, stacked.shape))}, best={best}")
+    finally:
+        for p in workers:
+            p.terminate()
+        for p in workers:
+            p.wait(timeout=10)
+        svc.stop()
+
+
 def run_remote(report, n_workers: int, smoke: bool = False) -> None:
     """Multi-worker-PROCESS throughput through the broker: one queue,
     ``n_workers`` subprocesses pulling leases over HTTP (compare
@@ -162,6 +272,10 @@ def main(argv=None) -> None:
                     help="CI-sized problem + reduced row set")
     ap.add_argument("--workers-remote", type=int, default=0, metavar="N",
                     help="add a broker row with N worker subprocesses")
+    ap.add_argument("--sweep", action="store_true",
+                    help="add the parameter-sweep rows (gang-batched "
+                         "sweep vs sequential solo; with "
+                         "--workers-remote also a remote sweep row)")
     args = ap.parse_args(argv)
     global N_DET, N_ANGLES, N_ROWS
     if args.smoke:
@@ -172,8 +286,13 @@ def main(argv=None) -> None:
         print(f"{name},{us:.1f},{derived}", flush=True)
 
     run(report, smoke=args.smoke)
+    if args.sweep:
+        run_sweep(report, smoke=args.smoke)
     if args.workers_remote:
         run_remote(report, args.workers_remote, smoke=args.smoke)
+        if args.sweep:
+            run_sweep_remote(report, args.workers_remote,
+                             smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -79,6 +79,16 @@ class BasePlugin:
     #: rather than HOW — excluded from the chain signature so jobs over
     #: different datasets still count as "the same pipeline"
     data_params: tuple[str, ...] = ()
+    #: *tunable* params — Savu-style parameter-tuning candidates (filter
+    #: cutoff, Paganin tau, ring strength...).  Declaring a param here is
+    #: the same contract as ``data_params``: its effect on
+    #: ``process_frames`` flows ONLY through :meth:`jit_constants`
+    #: (arrays/floats built in ``setup``), never as a static trace-time
+    #: value.  Tunables are excluded from both the chain signature and
+    #: the compile-cache signature, so a parameter sweep expands into
+    #: variant jobs with IDENTICAL chains that gang-batch and share one
+    #: compiled program (see ``repro.service.sweep``).
+    tunable_params: tuple[str, ...] = ()
     #: instance attrs that must stay trace-time constants even though
     #: they are arrays/floats (e.g. a float used in python control flow
     #: inside process_frames) — excluded from jit_constants and folded
@@ -152,13 +162,16 @@ class BasePlugin:
         Returns:
             dict with ``name`` (wire name), ``doc`` (first docstring
             line), ``n_in_datasets``/``n_out_datasets``, and ``params``
-            mapping each parameter to ``{"default", "data_param"}``
-            (non-JSON defaults are shown as their ``repr``).
+            mapping each parameter to ``{"default", "data_param",
+            "sweepable"}`` (non-JSON defaults are shown as their
+            ``repr``; ``sweepable`` marks ``tunable_params`` — the only
+            ones a parameter sweep may grid over).
         """
         params = {}
         for k, v in cls.parameters.items():
             params[k] = {"default": v if _is_jsonable(v) else repr(v),
-                         "data_param": k in cls.data_params}
+                         "data_param": k in cls.data_params,
+                         "sweepable": k in cls.tunable_params}
         doc = (cls.__doc__ or "").strip().splitlines()
         return {"name": cls.name,
                 "doc": doc[0] if doc else "",
@@ -201,14 +214,16 @@ class BasePlugin:
         class + jsonable params + static (int/str/bool/None) attrs.  Two
         instances with equal signatures, equal in/out dataset specs and
         structurally-equal :meth:`jit_constants` may share one compiled
-        function.  ``data_params`` are excluded: declaring a param there
-        is a contract that its effect on ``process_frames`` flows ONLY
-        through :meth:`jit_constants` (arrays/floats built in setup),
-        never as a static trace-time value."""
+        function.  ``data_params`` and ``tunable_params`` are excluded:
+        declaring a param in either is a contract that its effect on
+        ``process_frames`` flows ONLY through :meth:`jit_constants`
+        (arrays/floats built in setup), never as a static trace-time
+        value — which is what lets a parameter sweep's variants share
+        one compiled program."""
         sig_params: dict[str, Any] = {}
         unsignable: list[tuple] = []
         for k, v in sorted(self.params.items()):
-            if k in self.data_params:
+            if k in self.data_params or k in self.tunable_params:
                 continue
             if _is_jsonable(v):
                 sig_params[k] = v

@@ -24,6 +24,14 @@ Three modes:
       PYTHONPATH=src python -m repro.launch.pipeline_serve client \\
           --url http://127.0.0.1:8973 submit --demo-chain --wait
 
+  including parameter sweeps (Savu's parameter tuning — the service
+  gang-batches the variants and serves the stacked result; see
+  ``docs/sweeps.md``)::
+
+      PYTHONPATH=src python -m repro.launch.pipeline_serve client \\
+          sweep --demo-chain --param sinogram_filter.cutoff=0.4:1.0:7 \\
+          --metric sharpness --wait --out sweep.npy
+
 * **multi-host demo** — ``--workers-remote N`` runs the broker and N
   detached worker *subprocesses* pulling jobs from it over HTTP (one
   queue, many worker processes — see ``docs/worker-protocol.md``)::
@@ -49,7 +57,7 @@ from jax.sharding import Mesh
 
 from ..core import (ChunkedFileTransport, InMemoryTransport, PluginRunner,
                     ShardedTransport)
-from ..service import (CheckpointStore, CompileCache, JobQueue,
+from ..service import (METRICS, CheckpointStore, CompileCache, JobQueue,
                        PipelineClient, PipelineScheduler, PipelineService,
                        ServiceError, to_spec)
 from ..service.worker import spawn_local_workers
@@ -350,6 +358,50 @@ def _client_parser() -> argparse.ArgumentParser:
     s.add_argument("--wait", action="store_true",
                    help="poll until the job is terminal")
 
+    sw = sub.add_parser(
+        "sweep", help="POST a parameter sweep (docs/sweeps.md)",
+        description="Expand a process list over a ≤2-param grid of "
+                    "sweepable values; the service gang-batches the "
+                    "variants and serves the stacked result.")
+    sw.add_argument("--spec", metavar="FILE", default=None,
+                    help="spec v1 JSON file (see docs/plugin-spec.md)")
+    sw.add_argument("--demo-chain", action="store_true",
+                    help="sweep the standard synthetic chain")
+    sw.add_argument("--n-det", type=int, default=48)
+    sw.add_argument("--n-angles", type=int, default=48)
+    sw.add_argument("--n-rows", type=int, default=2)
+    sw.add_argument("--seed", type=int, default=0)
+    sw.add_argument("--param", action="append", required=True,
+                    metavar="PLUGIN.PARAM=SPEC", dest="params",
+                    help="one sweep axis (repeatable, ≤2): SPEC is "
+                         "START:STOP:N (inclusive linspace, e.g. "
+                         "sinogram_filter.cutoff=0.4:1.0:7) or a "
+                         "comma list of JSON values (e.g. "
+                         "ring_removal.strength=0.5,1.0,1.5); PLUGIN "
+                         "is a wire name or an entry index")
+    sw.add_argument("--metric", default=None, choices=sorted(METRICS),
+                    help="score each variant and report best_variant")
+    sw.add_argument("--priority", type=int, default=0)
+    sw.add_argument("--sweep-id", default=None)
+    sw.add_argument("--wait", action="store_true",
+                    help="poll until every variant is terminal")
+    sw.add_argument("--out", metavar="FILE", default=None,
+                    help="download the stacked npy here when done "
+                         "(implies --wait)")
+
+    sws = sub.add_parser("sweep-status", help="GET one sweep's snapshot")
+    sws.add_argument("sweep_id")
+    swr = sub.add_parser("sweep-result",
+                         help="download the stacked result (.npy)")
+    swr.add_argument("sweep_id")
+    swr.add_argument("--dataset", default=None)
+    swr.add_argument("--out", metavar="FILE", default=None,
+                     help="write the npy here (default: <sweep_id>.npy)")
+    swc = sub.add_parser("sweep-cancel",
+                         help="DELETE a sweep (cancel live variants)")
+    swc.add_argument("sweep_id")
+    sub.add_parser("sweeps", help="GET every sweep group's summary")
+
     st = sub.add_parser("status", help="GET one job's snapshot")
     st.add_argument("job_id")
     w = sub.add_parser("wait", help="poll a job to completion")
@@ -368,11 +420,83 @@ def _client_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def _parse_sweep_axis(s: str) -> dict:
+    """``PLUGIN.PARAM=START:STOP:N`` (inclusive linspace) or
+    ``PLUGIN.PARAM=v1,v2,...`` (JSON values) -> one sweep-axis object."""
+    target, eq, spec = s.partition("=")
+    plugin, dot, param = target.rpartition(".")
+    if not (eq and dot and plugin and param and spec):
+        raise SystemExit(f"--param wants PLUGIN.PARAM=SPEC, got {s!r}")
+    if ":" in spec and "," not in spec:
+        parts = spec.split(":")
+        try:
+            start, stop, n = (float(parts[0]), float(parts[1]),
+                              int(parts[2]))
+        except (IndexError, ValueError):
+            # a typo like 0.4:1.0 must die here, not as N failed jobs
+            raise SystemExit(f"--param range must be START:STOP:N, "
+                             f"got {spec!r}") from None
+        if len(parts) != 3:
+            raise SystemExit(f"--param range must be START:STOP:N, "
+                             f"got {spec!r}")
+        values = [float(v) for v in np.linspace(start, stop, n)]
+    else:
+        values = []
+        for v in spec.split(","):
+            try:
+                values.append(json.loads(v))
+            except json.JSONDecodeError:
+                values.append(v)           # bare string value
+    axis: dict = {"param": param, "values": values}
+    if plugin.isdigit():
+        axis["plugin_index"] = int(plugin)
+    else:
+        axis["plugin"] = plugin
+    return axis
+
+
 def _client_main(argv: list[str]) -> None:
     args = _client_parser().parse_args(argv)
     client = PipelineClient(args.url)
     try:
-        if args.action == "submit":
+        if args.action == "sweep":
+            if args.spec:
+                with open(args.spec) as fh:
+                    spec = json.load(fh)
+            elif args.demo_chain:
+                spec = to_spec(standard_chain(
+                    n_det=args.n_det, n_angles=args.n_angles,
+                    n_rows=args.n_rows, seed=args.seed))
+            else:
+                raise SystemExit("sweep needs --spec FILE or --demo-chain")
+            reply = client.sweep(
+                spec, [_parse_sweep_axis(p) for p in args.params],
+                metric=args.metric, priority=args.priority,
+                sweep_id=args.sweep_id)
+            print(json.dumps(reply, indent=2))
+            if args.wait or args.out:
+                snap = client.wait_sweep(reply["sweep_id"])
+                print(json.dumps(snap, indent=2))
+                if args.out and snap["state"] == "done":
+                    arr = client.sweep_result(reply["sweep_id"])
+                    np.save(args.out, arr)
+                    print(f"{args.out}: shape={arr.shape} "
+                          f"dtype={arr.dtype}")
+        elif args.action == "sweep-status":
+            print(json.dumps(client.sweep_status(args.sweep_id),
+                             indent=2))
+        elif args.action == "sweep-result":
+            arr = client.sweep_result(args.sweep_id,
+                                      dataset=args.dataset)
+            out = args.out or f"{args.sweep_id}.npy"
+            np.save(out, arr)
+            print(f"{out}: shape={arr.shape} dtype={arr.dtype}")
+        elif args.action == "sweep-cancel":
+            print(json.dumps(client.cancel_sweep(args.sweep_id),
+                             indent=2))
+        elif args.action == "sweeps":
+            print(json.dumps(client.sweeps(), indent=2))
+        elif args.action == "submit":
             if args.spec:
                 with open(args.spec) as fh:
                     spec = json.load(fh)

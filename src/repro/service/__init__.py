@@ -3,8 +3,9 @@
 # that runs many process lists concurrently over shared workers, with a
 # process-level compiled-plugin cache, checkpoint/resume, a
 # JSON-over-HTTP front end (server/client/wire) for remote submission,
-# and worker-pull multi-host scheduling (broker/worker) — one queue,
-# many worker processes.
+# worker-pull multi-host scheduling (broker/worker) — one queue, many
+# worker processes — and parameter sweeps (sweep): Savu-style parameter
+# tuning expanded into gang-batched variant jobs.
 from .compile_cache import CompileCache
 from .checkpoint import CheckpointError, CheckpointStore
 from .client import PipelineClient, ServiceError
@@ -13,6 +14,8 @@ from .queue import JobQueue, QueueFull
 from .scheduler import (LeaseLost, PipelineScheduler, WorkerBroker,
                         WorkerInfo)
 from .server import PipelineService
+from .sweep import (METRICS, SweepAxis, SweepError, SweepGroup,
+                    SweepManager, expand_sweep, parse_sweep_block)
 from .wire import (WireError, chain_plugin_names, from_spec,
                    register_plugin, registered_plugins, registry_spec,
                    to_spec)
@@ -26,4 +29,6 @@ __all__ = [
     "ServiceError", "WireError", "from_spec", "to_spec",
     "register_plugin", "registered_plugins", "registry_spec",
     "chain_plugin_names",
+    "METRICS", "SweepAxis", "SweepError", "SweepGroup", "SweepManager",
+    "expand_sweep", "parse_sweep_block",
 ]

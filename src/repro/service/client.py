@@ -160,20 +160,104 @@ class PipelineClient:
             "GET", f"/jobs/{quote(job_id, safe='')}/result{q}", raw=True)
         return np.load(io.BytesIO(payload))
 
+    # -- parameter sweeps (docs/sweeps.md) -------------------------------
+    def sweep(self, process_list: ProcessList | dict | list,
+              sweep: dict | list, *, metric: str | None = None,
+              priority: int = 0, sweep_id: str | None = None,
+              metadata: dict | None = None) -> dict[str, Any]:
+        """Submit a parameter sweep (``POST /sweeps``): the process list
+        plus a grid block over ≤2 *sweepable* params, expanded
+        server-side into gang-batched variant jobs.
+
+        Args:
+            process_list: a :class:`ProcessList` or spec document.
+            sweep: one axis (``{"plugin": name | "plugin_index": i,
+                "param": p, "values": [...]}``) or a list of ≤2.
+            metric: optional per-variant score (``sharpness`` /
+                ``entropy`` / ``std``) — surfaces ``best_variant``.
+            priority: shared by every variant.
+            sweep_id: explicit group id (variants are ``{id}/v{k}``).
+            metadata: annotations copied onto every variant.
+
+        Returns: the submission reply — ``sweep_id``, ``n_variants``,
+        ``shape``, ``job_ids``.
+        Raises:
+            ServiceError: 400 invalid spec/sweep (non-sweepable param,
+                >2 axes, unknown metric...), 409 duplicate active id,
+                429 the whole group was rejected by admission control.
+        """
+        if isinstance(process_list, ProcessList):
+            process_list = to_spec(process_list)
+        envelope: dict[str, Any] = {"process_list": process_list,
+                                    "sweep": sweep, "priority": priority}
+        if metric is not None:
+            envelope["metric"] = metric
+        if sweep_id is not None:
+            envelope["sweep_id"] = sweep_id
+        if metadata:
+            envelope["metadata"] = metadata
+        return self._request("POST", "/sweeps", envelope)
+
+    def sweep_status(self, sweep_id: str) -> dict[str, Any]:
+        """One sweep group's snapshot (``GET /sweeps/{id}``): aggregate
+        state, per-variant snapshots with their grid values, scores +
+        ``best_variant`` once done (when a metric was requested)."""
+        return self._request("GET",
+                             f"/sweeps/{quote(sweep_id, safe='')}")
+
+    def sweeps(self) -> list[dict[str, Any]]:
+        """Every retained sweep group's summary (``GET /sweeps``)."""
+        return self._request("GET", "/sweeps")["sweeps"]
+
+    def sweep_result(self, sweep_id: str, dataset: str | None = None
+                     ) -> np.ndarray:
+        """Fetch the stacked result (``GET /sweeps/{id}/result``): shape
+        ``(*grid_shape, *variant_shape)`` — the parameter axes lead.
+        Raises ServiceError 404 (unknown) / 409 (not all done)."""
+        q = f"?dataset={quote(dataset, safe='')}" if dataset else ""
+        payload = self._request(
+            "GET", f"/sweeps/{quote(sweep_id, safe='')}/result{q}",
+            raw=True)
+        return np.load(io.BytesIO(payload))
+
+    def cancel_sweep(self, sweep_id: str) -> dict[str, Any]:
+        """Cancel every live variant (``DELETE /sweeps/{id}``).  Returns
+        the per-variant ``cancelled``/``skipped`` id lists."""
+        return self._request("DELETE",
+                             f"/sweeps/{quote(sweep_id, safe='')}")
+
+    def wait_sweep(self, sweep_id: str, timeout: float | None = None,
+                   poll: float = 0.1) -> dict[str, Any]:
+        """Block until every variant is terminal.  Returns the final
+        group snapshot (inspect ``snapshot["state"]`` — done / failed /
+        cancelled / partial).  Raises TimeoutError at the deadline."""
+        deadline = None if timeout is None else time.time() + timeout
+        while True:
+            snap = self.sweep_status(sweep_id)
+            if snap["all_terminal"]:
+                return snap
+            if deadline is not None and time.time() >= deadline:
+                raise TimeoutError(
+                    f"sweep {sweep_id!r} still {snap['state']!r} "
+                    f"({snap['counts']}) after {timeout}s")
+            time.sleep(poll)
+
     # -- worker-pull protocol (broker mode; docs/worker-protocol.md) ----
     def register_worker(self, *, worker_id: str | None = None,
                         plugins: list[str] | None = None,
                         mesh_shape: list[int] | None = None,
                         max_batch: int = 1,
-                        shared_fs: bool = False) -> dict[str, Any]:
+                        shared_fs: bool = False,
+                        sweeps: bool = True) -> dict[str, Any]:
         """Register a worker process (``POST /workers``) with its
-        capabilities.  Returns ``{"worker_id", "lease_ttl"}`` (plus
-        ``"results_dir"`` for shared-fs workers).  409 if the server is
-        not in broker mode."""
+        capabilities (``sweeps=False`` keeps the worker out of
+        parameter-sweep fan-outs).  Returns ``{"worker_id",
+        "lease_ttl"}`` (plus ``"results_dir"`` for shared-fs workers).
+        409 if the server is not in broker mode."""
         return self._request("POST", "/workers", {
             "worker_id": worker_id, "plugins": plugins,
             "mesh_shape": mesh_shape, "max_batch": max_batch,
-            "shared_fs": shared_fs})
+            "shared_fs": shared_fs, "sweeps": sweeps})
 
     def lease(self, worker_id: str, max_jobs: int = 1,
               timeout: float = 0.0) -> list[dict[str, Any]]:

@@ -37,10 +37,14 @@ def chain_signature(process_list: ProcessList) -> tuple:
     params, dataset wiring).  Equal signatures ⇒ identical plugin chains
     that may share compiled programs and be gang-executed; non-jsonable
     params (inline arrays, geometry objects) are data, not structure, and
-    deliberately excluded."""
+    deliberately excluded.  ``data_params`` (which dataset) and
+    ``tunable_params`` (sweepable calibration values whose effect rides
+    in ``jit_constants``) are excluded too — a parameter sweep's
+    variants are "the same pipeline" and must gang."""
     sig = []
     for e in process_list.entries:
-        skip = set(getattr(e.cls, "data_params", ()))
+        skip = set(getattr(e.cls, "data_params", ())) \
+            | set(getattr(e.cls, "tunable_params", ()))
         jsonable, opaque = {}, []
         for k, v in sorted(e.params.items()):
             if k in skip:

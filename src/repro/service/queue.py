@@ -51,19 +51,40 @@ class JobQueue:
         self._not_empty = threading.Condition(self._lock)
         self._capacity = threading.Condition(self._lock)
         self._seq = itertools.count()
+        self._evict_hooks: list[Callable[[Job], None]] = []
+
+    def add_evict_hook(self, hook: Callable[[Job], None]) -> None:
+        """Register a callback fired for each TERMINAL job evicted by
+        ``max_history`` pruning — how the broker ties its result spool
+        GC to job retention.  Called with the evicted Job *after* it is
+        removed and *outside* the queue lock (hooks may do filesystem
+        I/O); exceptions are swallowed."""
+        self._evict_hooks.append(hook)
+
+    def _fire_evict_hooks(self, evicted: list[Job]) -> None:
+        for job in evicted:
+            for hook in self._evict_hooks:
+                try:
+                    hook(job)
+                except Exception:    # noqa: BLE001 — GC best-effort
+                    pass
 
     # -- admission ------------------------------------------------------
     def _pending_locked(self) -> int:
         return sum(1 for j in self._jobs.values() if not j.state.terminal())
 
-    def _prune_locked(self) -> None:
+    def _prune_locked(self) -> list[Job]:
+        """Evict over-history terminal jobs; returns them so the caller
+        can fire the evict hooks once the lock is released."""
         if self.max_history is None:
-            return
+            return []
         terminal = sorted((j for j in self._jobs.values()
                            if j.state.terminal()), key=lambda j: j.seq)
-        for j in terminal[:max(0, len(terminal) - self.max_history)]:
+        evicted = terminal[:max(0, len(terminal) - self.max_history)]
+        for j in evicted:
             j.runner = None
             del self._jobs[j.job_id]
+        return evicted
 
     def submit(self, process_list: ProcessList, *, priority: int = 0,
                job_id: str | None = None, block: bool = False,
@@ -95,32 +116,102 @@ class JobQueue:
                     and not self._jobs[job_id].state.terminal()):
                 raise ValueError(f"job id {job_id!r} already active")
 
-        with self._lock:
-            self._prune_locked()
-            seq = next(self._seq)
-            job_id = job_id or f"job-{seq:04d}"
-            check_id()
-            if self.max_pending is not None:
-                deadline = None if timeout is None else time.time() + timeout
-                while self._pending_locked() >= self.max_pending:
-                    if not block:
-                        raise QueueFull(
-                            f"{self._pending_locked()} jobs pending "
-                            f"(max_pending={self.max_pending})")
-                    remaining = (None if deadline is None
-                                 else deadline - time.time())
-                    if remaining is not None and remaining <= 0:
-                        raise QueueFull(
-                            f"timed out after {timeout}s waiting for "
-                            f"queue capacity")
-                    self._capacity.wait(remaining)
-                    check_id()
-            job = Job(job_id, process_list, priority=priority, seq=seq,
-                      metadata=dict(metadata or {}))
-            self._jobs[job_id] = job
-            heapq.heappush(self._heap, (-priority, seq, job))
-            self._not_empty.notify()
-            return job
+        evicted: list[Job] = []
+        try:
+            with self._lock:
+                evicted = self._prune_locked()
+                seq = next(self._seq)
+                job_id = job_id or f"job-{seq:04d}"
+                check_id()
+                if self.max_pending is not None:
+                    deadline = (None if timeout is None
+                                else time.time() + timeout)
+                    while self._pending_locked() >= self.max_pending:
+                        if not block:
+                            raise QueueFull(
+                                f"{self._pending_locked()} jobs pending "
+                                f"(max_pending={self.max_pending})")
+                        remaining = (None if deadline is None
+                                     else deadline - time.time())
+                        if remaining is not None and remaining <= 0:
+                            raise QueueFull(
+                                f"timed out after {timeout}s waiting for "
+                                f"queue capacity")
+                        self._capacity.wait(remaining)
+                        check_id()
+                job = Job(job_id, process_list, priority=priority, seq=seq,
+                          metadata=dict(metadata or {}))
+                self._jobs[job_id] = job
+                heapq.heappush(self._heap, (-priority, seq, job))
+                self._not_empty.notify()
+                return job
+        finally:
+            # hooks (broker spool GC) do filesystem I/O — never under
+            # the queue lock, and even when admission raises
+            self._fire_evict_hooks(evicted)
+
+    def submit_many(self, process_lists: list[ProcessList], *,
+                    priority: int = 0,
+                    job_ids: list[str] | None = None,
+                    metadatas: list[dict[str, Any]] | None = None
+                    ) -> list[Job]:
+        """Admit a GROUP of process lists atomically — all admitted, or
+        nothing is.  The jobs get consecutive ``seq`` numbers under one
+        lock hold, so no other submission (or dispatch) interleaves: a
+        gang-batching pop sees the whole group together.  This is the
+        parameter-sweep admission path (``repro.service.sweep``).
+
+        Args:
+            process_lists: the chains, in variant order.
+            priority: shared by every member (a sweep is one workload).
+            job_ids: explicit ids, same length (default ``job-{seq}``).
+            metadatas: per-job annotations, same length.
+
+        Returns: the queued Jobs, in input order.
+        Raises:
+            QueueFull: the WHOLE group would exceed ``max_pending`` —
+                nothing was admitted.
+            ValueError: a job id is already active (or duplicated within
+                the group) — nothing was admitted.
+        """
+        n = len(process_lists)
+        if job_ids is not None and len(job_ids) != n:
+            raise ValueError(f"{len(job_ids)} job_ids for {n} jobs")
+        if metadatas is not None and len(metadatas) != n:
+            raise ValueError(f"{len(metadatas)} metadatas for {n} jobs")
+        evicted: list[Job] = []
+        try:
+            with self._lock:
+                evicted = self._prune_locked()
+                if self.max_pending is not None and \
+                        self._pending_locked() + n > self.max_pending:
+                    raise QueueFull(
+                        f"group of {n} would exceed max_pending="
+                        f"{self.max_pending} ({self._pending_locked()} "
+                        f"already pending)")
+                if job_ids is not None:
+                    if len(set(job_ids)) != n:
+                        raise ValueError(
+                            "duplicate job ids within the group")
+                    for jid in job_ids:
+                        if jid in self._jobs and \
+                                not self._jobs[jid].state.terminal():
+                            raise ValueError(
+                                f"job id {jid!r} already active")
+                jobs = []
+                for i, pl in enumerate(process_lists):
+                    seq = next(self._seq)
+                    jid = job_ids[i] if job_ids is not None \
+                        else f"job-{seq:04d}"
+                    job = Job(jid, pl, priority=priority, seq=seq,
+                              metadata=dict((metadatas or [{}] * n)[i]))
+                    self._jobs[jid] = job
+                    heapq.heappush(self._heap, (-priority, seq, job))
+                    jobs.append(job)
+                self._not_empty.notify_all()
+                return jobs
+        finally:
+            self._fire_evict_hooks(evicted)
 
     # -- dispatch -------------------------------------------------------
     def _pop_locked(self, predicate: Callable[[Job], bool] | None = None

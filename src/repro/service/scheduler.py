@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import re
+import shutil
 import tempfile
 import threading
 import time
@@ -320,6 +321,9 @@ class WorkerInfo:
     max_batch: int = 1
     #: worker sees the broker's results_dir (writes results directly)
     shared_fs: bool = False
+    #: worker accepts parameter-sweep variant jobs (False keeps e.g.
+    #: lightweight interactive workers out of wide sweep fan-outs)
+    sweeps: bool = True
     registered_at: float = dataclasses.field(default_factory=time.time)
     last_seen: float = dataclasses.field(default_factory=time.time)
     leases_granted: int = 0
@@ -334,6 +338,7 @@ class WorkerInfo:
                             if self.plugins is not None else None),
                 "mesh_shape": list(self.mesh_shape),
                 "max_batch": self.max_batch, "shared_fs": self.shared_fs,
+                "sweeps": self.sweeps,
                 "registered_at": self.registered_at,
                 "last_seen": self.last_seen,
                 "leases_granted": self.leases_granted,
@@ -395,6 +400,10 @@ class WorkerBroker:
         self.results_dir = results_dir or tempfile.mkdtemp(
             prefix="pipeline-results-")
         os.makedirs(self.results_dir, exist_ok=True)
+        # result-spool GC: when max_history evicts a job, its uploaded
+        # .npy spool goes with it — otherwise the spool grows for the
+        # broker's lifetime (ROADMAP follow-up)
+        queue.add_evict_hook(self._gc_spool)
         self._workers: dict[str, WorkerInfo] = {}
         self._leases: dict[str, _Lease] = {}
         self._required: dict[str, set[str]] = {}   # job_id -> plugin names
@@ -477,6 +486,7 @@ class WorkerBroker:
             w.mesh_shape = tuple(mesh_shape)
             w.max_batch = max_batch
             w.shared_fs = bool(info.get("shared_fs", False))
+            w.sweeps = bool(info.get("sweeps", True))
             w.last_seen = time.time()
             reply = {"worker_id": worker_id, "lease_ttl": self.lease_ttl}
             if w.shared_fs:
@@ -493,11 +503,15 @@ class WorkerBroker:
 
     def _capable(self, w: WorkerInfo, job: Job) -> bool:
         """Can ``w`` run ``job``?  Plugins: the chain's wire names must
-        all be advertised (None = unrestricted).  Mesh: a job that asks
-        for devices (``metadata["mesh_shape"]``) needs a worker whose
-        mesh has at least that many."""
+        all be advertised (None = unrestricted).  Sweeps: a parameter-
+        sweep variant (``metadata["sweep"]``) only goes to workers that
+        accept sweep workloads.  Mesh: a job that asks for devices
+        (``metadata["mesh_shape"]``) needs a worker whose mesh has at
+        least that many."""
         if w.plugins is not None and \
                 not self._required_plugins(job) <= w.plugins:
+            return False
+        if not w.sweeps and job.metadata.get("sweep"):
             return False
         req = job.metadata.get("mesh_shape")
         if req:
@@ -633,11 +647,22 @@ class WorkerBroker:
         return verdict
 
     # -- results --------------------------------------------------------
+    def _spool_dir(self, job_id: str) -> str:
+        return os.path.join(self.results_dir,
+                            job_id.replace(os.sep, "_").replace("..", "_"))
+
     def _job_spool(self, job_id: str) -> str:
-        d = os.path.join(self.results_dir,
-                         job_id.replace(os.sep, "_").replace("..", "_"))
+        d = self._spool_dir(job_id)
         os.makedirs(d, exist_ok=True)
         return d
+
+    def _gc_spool(self, job: Job) -> None:
+        """``JobQueue`` evict hook: delete the evicted job's result
+        spool (uploaded AND shared-fs files live under
+        ``results_dir/<job_id>``).  The job is already removed — its
+        result was going to 404 anyway; now the bytes go too."""
+        shutil.rmtree(self._spool_dir(job.job_id), ignore_errors=True)
+        job.remote_results.clear()
 
     def store_result(self, job_id: str, worker_id: str, dataset: str,
                      payload: bytes) -> str:

@@ -19,6 +19,13 @@ Endpoints (JSON unless noted; see ``docs/service.md``):
 ``GET /jobs/{id}/result``   output dataset as ``.npy`` bytes
                             (``?dataset=`` selects; chunk-streamed)
 ``DELETE /jobs/{id}``       cancel a queued job (409 once dispatched)
+``POST /sweeps``            expand a parameter-sweep envelope into a
+                            gang of variant jobs (``docs/sweeps.md``)
+``GET /sweeps[/{id}]``      sweep group status (per-variant snapshots,
+                            ``best_variant`` when a metric was set)
+``GET /sweeps/{id}/result`` the stacked ``.npy`` — parameter axes as
+                            the new leading dimension(s)
+``DELETE /sweeps/{id}``     cancel every live variant
 ``GET /stats``              scheduler + compile-cache counters
 ``GET /plugins``            the wire-format plugin registry
 ``GET /healthz``            liveness probe
@@ -50,12 +57,15 @@ from .compile_cache import CompileCache
 from .job import Job, JobState
 from .queue import JobQueue, QueueFull
 from .scheduler import LeaseLost, PipelineScheduler, WorkerBroker
+from .sweep import SweepError, SweepGroup, SweepManager
 from .wire import WireError, from_spec, registry_spec
 
 _JOB_RE = re.compile(r"^/jobs/([^/]+)$")
 _RESULT_RE = re.compile(r"^/jobs/([^/]+)/result$")
 _PROGRESS_RE = re.compile(r"^/jobs/([^/]+)/progress$")
 _COMPLETE_RE = re.compile(r"^/jobs/([^/]+)/complete$")
+_SWEEP_RE = re.compile(r"^/sweeps/([^/]+)$")
+_SWEEP_RESULT_RE = re.compile(r"^/sweeps/([^/]+)/result$")
 
 
 class PipelineService:
@@ -81,7 +91,8 @@ class PipelineService:
                  workers_remote: bool = False,
                  lease_ttl: float = 15.0,
                  sweep_interval: float | None = None,
-                 results_dir: str | None = None):
+                 results_dir: str | None = None,
+                 max_sweep_variants: int = 64):
         """Args mirror :class:`PipelineScheduler`; ``max_pending``
         bounds admission (HTTP 429 past it) and ``max_history`` bounds
         retained terminal jobs (a pruned job's result is gone — 404).
@@ -110,6 +121,8 @@ class PipelineService:
                 n_workers=n_workers, checkpoints=checkpoints,
                 batch_identical=batch_identical, batch_max=batch_max,
                 fuse=fuse, compile_cache=self.compile_cache)
+        self.sweeps = SweepManager(self.queue, fetch=self._variant_array,
+                                   max_variants=max_sweep_variants)
         self._httpd: ThreadingHTTPServer | None = None
         self._http_thread: threading.Thread | None = None
 
@@ -165,12 +178,39 @@ class PipelineService:
             out.update(cancelled=True, pending=True)
         return out
 
+    # -- parameter sweeps (docs/sweeps.md) ------------------------------
+    def submit_sweep(self, envelope: dict[str, Any]) -> SweepGroup:
+        """Admit one sweep envelope (``POST /sweeps``): the spec plus a
+        ``sweep`` grid block, expanded into variant jobs submitted
+        atomically so the gang path batches them.  See
+        :meth:`SweepManager.submit` for the error contract."""
+        return self.sweeps.submit(envelope)
+
+    def cancel_sweep(self, sweep_id: str) -> dict[str, Any]:
+        """Cancel every live variant of ``sweep_id``
+        (``DELETE /sweeps/{id}``) — queued variants cancel immediately,
+        leased ones at their worker's next heartbeat.  Raises KeyError
+        if unknown."""
+        return self.sweeps.cancel(sweep_id, self.cancel)
+
+    def _variant_array(self, job_id: str, dataset: str | None = None
+                       ) -> np.ndarray:
+        """One DONE variant's result as a host array — covers both the
+        in-process runner path and the broker-mode ``.npy`` spool (the
+        SweepManager's ``fetch`` hook, O(variant) RAM)."""
+        remote = self.result_file(job_id, dataset)
+        if remote is not None:
+            return np.load(remote[1])
+        ds, transport = self.result_dataset(job_id, dataset)
+        return np.ascontiguousarray(np.asarray(transport.read(ds)))
+
     def stats(self) -> dict[str, Any]:
-        """Scheduler (or broker) counters + compile-cache hit rates
-        (``GET /stats``)."""
-        if self.broker is not None:
-            return self.broker.stats()
-        return self.scheduler.stats()
+        """Scheduler (or broker) counters + compile-cache hit rates +
+        sweep-group counters (``GET /stats``)."""
+        out = (self.broker.stats() if self.broker is not None
+               else self.scheduler.stats())
+        out["sweeps"] = self.sweeps.stats()
+        return out
 
     def result_dataset(self, job_id: str, dataset: str | None = None):
         """Resolve a finished job's output dataset + its transport.
@@ -349,6 +389,19 @@ class _PipelineHandler(BaseHTTPRequestHandler):
             return self._json(200, registry_spec())
         if path == "/jobs":
             return self._json(200, {"jobs": svc.queue.snapshot()})
+        if path == "/sweeps":
+            return self._json(200, {"sweeps": svc.sweeps.snapshot_all()})
+        m = _SWEEP_RESULT_RE.match(path)
+        if m:
+            return self._send_sweep_result(
+                unquote(m.group(1)), (query.get("dataset") or [None])[0])
+        m = _SWEEP_RE.match(path)
+        if m:
+            sweep_id = unquote(m.group(1))
+            try:
+                return self._json(200, svc.sweeps.status(sweep_id))
+            except KeyError:
+                return self._error(404, f"unknown sweep {sweep_id!r}")
         if path == "/workers":
             if svc.broker is None:
                 return self._error(409, "not serving in broker mode")
@@ -370,6 +423,8 @@ class _PipelineHandler(BaseHTTPRequestHandler):
         path = urlparse(self.path).path.rstrip("/")
         if path == "/jobs":
             return self._submit()
+        if path == "/sweeps":
+            return self._submit_sweep()
         if path == "/workers":
             return self._broker_call(
                 lambda b, body: (201, b.register(body)))
@@ -402,6 +457,24 @@ class _PipelineHandler(BaseHTTPRequestHandler):
             return self._error(409, str(e))
         self._json(201, {"job_id": job.job_id, "state": job.state.value,
                          "priority": job.priority})
+
+    def _submit_sweep(self) -> None:
+        # NB: SweepError/WireError are ValueError subclasses — they must
+        # be caught before the duplicate-id ValueError below
+        try:
+            envelope = self._read_body()
+            group = self.service.submit_sweep(envelope)
+        except (SweepError, WireError, ProcessListError) as e:
+            return self._error(400, str(e))
+        except QueueFull as e:
+            return self._error(429, str(e))
+        except ValueError as e:           # duplicate active sweep/job id
+            return self._error(409, str(e))
+        self._json(201, {
+            "sweep_id": group.sweep_id, "state": group.state(),
+            "n_variants": group.n_variants, "shape": list(group.shape),
+            "axes": [a.spec() for a in group.axes],
+            "job_ids": [j.job_id for j in group.jobs]})
 
     # -- worker-pull protocol (broker mode) -----------------------------
     @staticmethod
@@ -484,7 +557,15 @@ class _PipelineHandler(BaseHTTPRequestHandler):
 
     def do_DELETE(self) -> None:
         self._drain_body()              # DELETEs may carry a body
-        m = _JOB_RE.match(urlparse(self.path).path.rstrip("/"))
+        path = urlparse(self.path).path.rstrip("/")
+        m = _SWEEP_RE.match(path)
+        if m:
+            sweep_id = unquote(m.group(1))
+            try:
+                return self._json(200, self.service.cancel_sweep(sweep_id))
+            except KeyError:
+                return self._error(404, f"unknown sweep {sweep_id!r}")
+        m = _JOB_RE.match(path)
         if not m:
             return self._error(404, f"no route for DELETE {self.path}")
         job_id = unquote(m.group(1))
@@ -529,6 +610,43 @@ class _PipelineHandler(BaseHTTPRequestHandler):
                 self.wfile.write(np.ascontiguousarray(slab).tobytes())
         else:
             arr = np.ascontiguousarray(np.asarray(transport.read(ds)))
+            self.wfile.write(arr.tobytes())
+
+    def _send_sweep_result(self, sweep_id: str,
+                           dataset: str | None) -> None:
+        """Stream the STACKED sweep result as one ``.npy``: shape
+        ``(*grid_shape, *variant_shape)`` — the swept parameter axes are
+        the new leading dimension(s) (Savu's tuning dimension), variants
+        in C grid order.  One variant is materialised at a time, so RAM
+        stays O(variant) however wide the grid is."""
+        svc = self.service
+        try:
+            group, shape, dtype, first = svc.sweeps.result_plan(
+                sweep_id, dataset)
+        except KeyError as e:
+            return self._error(404, str(e))
+        except RuntimeError as e:
+            return self._error(409, str(e))
+        header = _npy_header(shape, dtype)
+        body = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        self.send_response(200)
+        self.send_header("Content-Type", "application/x-npy")
+        self.send_header("Content-Length", str(len(header) + body))
+        self.send_header("X-Sweep-Id", group.sweep_id)
+        self.end_headers()
+        self.wfile.write(header)
+        self.wfile.write(np.ascontiguousarray(first).tobytes())
+        for job in group.jobs[1:]:
+            arr = np.ascontiguousarray(svc._variant_array(job.job_id,
+                                                          dataset))
+            if arr.shape != first.shape or arr.dtype != first.dtype:
+                # headers are gone — abort the stream rather than ship
+                # a silently corrupt stack (identical chains make this
+                # unreachable in practice)
+                raise RuntimeError(
+                    f"sweep {sweep_id!r}: variant {job.job_id!r} shape/"
+                    f"dtype {arr.shape}/{arr.dtype} != "
+                    f"{first.shape}/{first.dtype}")
             self.wfile.write(arr.tobytes())
 
     def _send_result_file(self, path: str, dataset: str | None) -> None:

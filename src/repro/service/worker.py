@@ -13,6 +13,14 @@ uploading ``.npy`` bytes (``PUT /jobs/{id}/result``) or, with
 ``--shared-fs``, by writing them directly into the broker's shared
 results directory (atomic rename).  Wire messages are specified in ``docs/worker-protocol.md``.
 
+Gang execution: a ``--max-batch N`` worker that leases several jobs
+with IDENTICAL chain signatures (the broker's batch pop gangs them —
+notably parameter-sweep variants, ``docs/sweeps.md``) steps them in
+lockstep through ``run_plugin_batch`` when the transport supports it:
+each plugin step is ONE compiled call over the whole gang, so remote
+sweeps gang exactly like local ones.  Transports without batch support
+(inmemory/chunked) fall back to sequential execution.
+
 Fault model: if this process dies (SIGKILL, OOM, node loss) it simply
 stops heartbeating; the broker expires the lease and requeues the job,
 and the next worker to lease it restores the last checkpoint from the
@@ -46,6 +54,7 @@ from ..core.transport import ChunkedFileTransport, InMemoryTransport, \
 from .checkpoint import CheckpointStore
 from .client import PipelineClient, ServiceError
 from .compile_cache import CompileCache
+from .job import chain_signature
 from .wire import from_spec, registered_plugins
 
 
@@ -65,11 +74,13 @@ class _Heartbeat(threading.Thread):
     member's lease cannot expire while it waits its turn — and records
     the verdicts; a non-``ok`` verdict on the active job aborts the
     run loop at the next step boundary, one on a pending job drops it
-    from the batch."""
+    from the batch.  ``job_id=None`` (gang execution) renews only the
+    ``pending`` set — gang members all post their own progress from the
+    lockstep loop."""
 
-    def __init__(self, worker: "PipelineWorker", job_id: str,
+    def __init__(self, worker: "PipelineWorker", job_id: str | None,
                  interval: float, pending: tuple[str, ...] = ()):
-        super().__init__(name=f"heartbeat-{job_id}", daemon=True)
+        super().__init__(name=f"heartbeat-{job_id or 'gang'}", daemon=True)
         self.worker = worker
         self.job_id = job_id
         self.interval = interval
@@ -89,6 +100,8 @@ class _Heartbeat(threading.Thread):
                     continue
                 if out.get("verdict") != "ok":
                     self.dropped.add(jid)
+            if self.job_id is None:       # gang mode: pending-only
+                continue
             try:
                 out = self.worker.client.progress(
                     self.job_id, self.worker.worker_id,
@@ -119,7 +132,11 @@ class PipelineWorker:
         plugins: advertised wire plugin names (default: everything in
             this process's registry).
         mesh_shape: advertised device-mesh shape (capacity filter).
-        max_batch: largest lease the worker accepts.
+        max_batch: largest lease the worker accepts; leased jobs with
+            identical chain signatures are gang-executed
+            (``run_plugin_batch``) when the transport supports it.
+        sweeps: advertise willingness to run parameter-sweep variants
+            (False keeps this worker out of sweep fan-outs).
         poll: idle sleep between empty leases, seconds.
         heartbeat: lease-renewal cadence; default ``lease_ttl / 3``
             once registered.
@@ -135,6 +152,7 @@ class PipelineWorker:
                  plugins: list[str] | None = None,
                  mesh_shape: list[int] | None = None,
                  max_batch: int = 1,
+                 sweeps: bool = True,
                  poll: float = 0.5,
                  heartbeat: float | None = None,
                  worker_id: str | None = None,
@@ -149,6 +167,7 @@ class PipelineWorker:
                         else sorted(registered_plugins()))
         self.mesh_shape = mesh_shape
         self.max_batch = max_batch
+        self.sweeps = sweeps
         self.poll = poll
         self.heartbeat = heartbeat
         self.worker_id = worker_id
@@ -166,7 +185,7 @@ class PipelineWorker:
         reply = self.client.register_worker(
             worker_id=self.worker_id, plugins=self.plugins,
             mesh_shape=self.mesh_shape, max_batch=self.max_batch,
-            shared_fs=self.shared_fs)
+            shared_fs=self.shared_fs, sweeps=self.sweeps)
         self.worker_id = reply["worker_id"]
         self.lease_ttl = float(reply.get("lease_ttl", self.lease_ttl))
         self.results_dir = reply.get("results_dir")
@@ -183,7 +202,9 @@ class PipelineWorker:
                 time.sleep(self.poll)
 
     def run_once(self) -> bool:
-        """One lease round.  Returns True if any job was run."""
+        """One lease round: identical-chain runs of the leased batch are
+        gang-executed, the rest run solo.  Returns True if any job was
+        run."""
         if not self._registered:
             self.register()
         try:
@@ -195,12 +216,30 @@ class PipelineWorker:
             return False
         except OSError:
             return False
+        # group consecutive identical chain signatures (the broker's
+        # batch pop already delivers gangs contiguously); a spec that
+        # fails to parse gets a unique sentinel and fails loudly solo
+        sigs: list[Any] = []
+        for d in leases:
+            try:
+                sigs.append(chain_signature(from_spec(d["process_list"])))
+            except Exception:            # noqa: BLE001
+                sigs.append(("unparseable", d["job_id"]))
         dropped: set[str] = set()
-        for i, desc in enumerate(leases):
-            if desc["job_id"] in dropped:
-                continue                 # lease lost while queued locally
-            rest = tuple(d["job_id"] for d in leases[i + 1:])
-            dropped |= self._run_leased(desc, pending=rest)
+        i = 0
+        while i < len(leases):
+            j = i + 1
+            while j < len(leases) and sigs[j] == sigs[i]:
+                j += 1
+            group = [d for d in leases[i:j]
+                     if d["job_id"] not in dropped]
+            rest = tuple(d["job_id"] for d in leases[j:]
+                         if d["job_id"] not in dropped)
+            if len(group) > 1:
+                dropped |= self._run_gang(group, pending=rest)
+            elif group:
+                dropped |= self._run_leased(group[0], pending=rest)
+            i = j
         return bool(leases)
 
     # -- one job --------------------------------------------------------
@@ -280,7 +319,152 @@ class PipelineWorker:
         if self.checkpoints is not None:
             self.checkpoints.clear(job_id)
 
-    # -- result hand-over ----------------------------------------------
+    # -- gang execution ---------------------------------------------------
+    def _verdict(self, job_id: str, **fields: Any) -> str:
+        """One per-job progress post; returns the broker's verdict."""
+        out = self.client.progress(job_id, self.worker_id, **fields)
+        return out.get("verdict", "lost")
+
+    def _fail_remote(self, job_id: str, exc: Exception) -> None:
+        self.jobs_failed += 1
+        try:
+            self.client.complete(job_id, self.worker_id, "failed",
+                                 error=f"{type(exc).__name__}: {exc}")
+        except (ServiceError, OSError):
+            pass                         # lease lost: nothing to report
+
+    def _run_gang(self, descs: list[dict[str, Any]],
+                  pending: tuple[str, ...] = ()) -> set[str]:
+        """Execute leased jobs with identical chain signatures in
+        lockstep: ONE transport, each single-plugin step as one
+        ``run_plugin_batch`` call over the whole gang — so remote
+        parameter sweeps gang exactly like local ones.  Transports
+        without batch support fall back to sequential solo runs; a
+        member restored from a checkpoint is handed back to the solo
+        path (a gang would drag it to step 0).  Returns the ids whose
+        leases were lost (caller must skip them)."""
+        ids = [d["job_id"] for d in descs]
+        transport = self.transport_factory(descs[0])
+        if not hasattr(transport, "run_plugin_batch"):
+            dropped: set[str] = set()
+            for i, d in enumerate(descs):
+                if d["job_id"] in dropped:
+                    continue
+                rest = tuple(x for x in ids[i + 1:]
+                             if x not in dropped) + tuple(pending)
+                dropped |= self._run_leased(d, pending=rest)
+            return dropped
+        hb = _Heartbeat(self, None, self.heartbeat or 1.0,
+                        pending=tuple(ids) + tuple(pending))
+        dropped = set()
+        live: list[tuple[dict[str, Any], PluginRunner]] = []
+        try:
+            hb.start()
+            solo: list[dict[str, Any]] = []
+            for d in descs:
+                jid = d["job_id"]
+                if self.checkpoints is not None and \
+                        self.checkpoints.load(jid) is not None:
+                    # a checkpoint exists: resume solo (a gang would
+                    # drag it back to step 0); manifest-only probe — the
+                    # solo path does the actual restore
+                    solo.append(d)
+                    continue
+                try:
+                    if self._verdict(jid) != "ok":
+                        dropped.add(jid)
+                        continue
+                    runner = PluginRunner(from_spec(d["process_list"]),
+                                          transport)
+                    runner.prepare()
+                    if self._verdict(jid, plugin_index=0,
+                                     n_plugins=runner.n_steps,
+                                     **({"checkpoint": self.checkpoints.root}
+                                        if self.checkpoints else {})) != "ok":
+                        dropped.add(jid)
+                        continue
+                except (ServiceError, OSError):
+                    dropped.add(jid)
+                    continue
+                except Exception as e:   # noqa: BLE001 — report upstream
+                    self._fail_remote(jid, e)
+                    continue
+                live.append((d, runner))
+            # lockstep: one batched compiled call per plugin step
+            exc: Exception | None = None
+            step_total = live[0][1].n_steps if live else 0
+            for _ in range(step_total):
+                if not live:
+                    break
+                try:
+                    groups = [r.begin_step() for _, r in live]
+                    if len(live) > 1 and len(groups[0]) == 1:
+                        try:
+                            transport.run_plugin_batch(
+                                [g[0] for g in groups])
+                        except ValueError:   # runtime-shape mismatch
+                            for g in groups:
+                                transport.run_plugin(g[0])
+                    else:
+                        for g in groups:
+                            if len(g) > 1:
+                                transport.run_fused(g)
+                            else:
+                                transport.run_plugin(g[0])
+                    for _, r in live:
+                        r.complete_step()
+                except Exception as e:   # noqa: BLE001 — fails the gang
+                    exc = e
+                    break
+                keep = []
+                for d, r in live:
+                    jid = d["job_id"]
+                    if jid in hb.dropped:
+                        dropped.add(jid)
+                        continue
+                    if self.checkpoints is not None:
+                        self.checkpoints.save(jid, r)
+                    try:
+                        v = self._verdict(jid,
+                                          plugin_index=r.current_step)
+                    except (ServiceError, OSError):
+                        v = "ok"        # transient; hb catches real loss
+                    if v != "ok":
+                        dropped.add(jid)
+                        continue
+                    keep.append((d, r))
+                live = keep
+            if exc is not None:
+                for d, _ in live:
+                    self._fail_remote(d["job_id"], exc)
+                live = []
+            for d, r in live:
+                jid = d["job_id"]
+                try:
+                    r.finalise()
+                    results = self._hand_over(jid, r)
+                    self.client.complete(jid, self.worker_id, "done",
+                                         results=results,
+                                         plugin_index=r.current_step,
+                                         n_plugins=r.n_steps)
+                    self.jobs_done += 1
+                    if self.checkpoints is not None:
+                        self.checkpoints.clear(jid)
+                except (ServiceError, OSError):
+                    dropped.add(jid)     # lease lost at hand-over
+                except Exception as e:   # noqa: BLE001
+                    self._fail_remote(jid, e)
+            # checkpointed members go back through the solo path (fresh
+            # transport + restore; leases were renewed by hb meanwhile)
+            for i, d in enumerate(solo):
+                if d["job_id"] in dropped | hb.dropped:
+                    continue
+                rest = tuple(x["job_id"] for x in solo[i + 1:]) \
+                    + tuple(pending)
+                dropped |= self._run_leased(d, pending=rest)
+        finally:
+            hb.stop()
+        return dropped | hb.dropped
     def _hand_over(self, job_id: str,
                    runner: PluginRunner) -> dict[str, Any]:
         """Deliver every saver output: write an ``.npy`` into the
@@ -321,6 +505,7 @@ def spawn_local_workers(url: str, n: int, *, transport: str = "inmemory",
                         checkpoint_dir: str | None = None,
                         shared_fs: bool = False, poll: float = 0.1,
                         heartbeat: float | None = None,
+                        max_batch: int = 1,
                         imports: tuple[str, ...] = (),
                         worker_ids: list[str] | None = None,
                         pythonpath_extra: tuple[str, ...] = (),
@@ -355,6 +540,8 @@ def spawn_local_workers(url: str, n: int, *, transport: str = "inmemory",
             cmd += ["--shared-fs"]
         if heartbeat is not None:
             cmd += ["--heartbeat", str(heartbeat)]
+        if max_batch != 1:
+            cmd += ["--max-batch", str(max_batch)]
         for mod in imports:
             cmd += ["--import", mod]
         procs.append(subprocess.Popen(cmd, env=env, stdout=stdout,
@@ -362,15 +549,15 @@ def spawn_local_workers(url: str, n: int, *, transport: str = "inmemory",
     return procs
 
 
-def _transport_factory(kind: str,
-                       scratch: str) -> Callable[[dict], Transport]:
+def _transport_factory(kind: str, scratch: str,
+                       donate: bool = True) -> Callable[[dict], Transport]:
     if kind == "sharded":
         import jax
         from jax.sharding import Mesh
         from ..core.transport import ShardedTransport
         mesh = Mesh(np.asarray(jax.devices()), ("data",))
         cache = CompileCache()            # process-level: reused per job
-        return lambda desc: ShardedTransport(mesh, donate=True,
+        return lambda desc: ShardedTransport(mesh, donate=donate,
                                              compile_cache=cache)
     if kind == "chunked":
         return lambda desc: ChunkedFileTransport(
@@ -395,7 +582,14 @@ def main(argv: list[str] | None = None) -> None:
                          "results_dir (shared filesystem) instead of "
                          "uploading")
     ap.add_argument("--worker-id", default=None)
-    ap.add_argument("--max-batch", type=int, default=1)
+    ap.add_argument("--max-batch", type=int, default=1,
+                    help="largest lease accepted; identical-chain "
+                         "batches (e.g. sweep variants) gang-execute")
+    ap.add_argument("--sweeps", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="accept parameter-sweep variant jobs "
+                         "(--no-sweeps keeps this worker out of sweep "
+                         "fan-outs)")
     ap.add_argument("--poll", type=float, default=0.5,
                     help="idle sleep between empty leases, seconds")
     ap.add_argument("--heartbeat", type=float, default=None,
@@ -410,10 +604,14 @@ def main(argv: list[str] | None = None) -> None:
     scratch = tempfile.mkdtemp(prefix="pipeline-worker-")
     worker = PipelineWorker(
         args.url,
-        transport_factory=_transport_factory(args.transport, scratch),
+        # gang execution stacks job inputs — donation would invalidate
+        # buffers the stack still references (mirrors the scheduler's
+        # --batch rule), so donate only when leases stay solo
+        transport_factory=_transport_factory(args.transport, scratch,
+                                             donate=args.max_batch == 1),
         checkpoint_dir=args.checkpoint_dir, shared_fs=args.shared_fs,
         worker_id=args.worker_id, max_batch=args.max_batch,
-        poll=args.poll, heartbeat=args.heartbeat)
+        sweeps=args.sweeps, poll=args.poll, heartbeat=args.heartbeat)
     wid = worker.register()
     print(f"worker {wid} serving {args.url} "
           f"(transport={args.transport}, plugins={len(worker.plugins)}"

@@ -97,6 +97,9 @@ class PaganinFilter(BaseFilter):
     pattern_name = PROJECTION
     frames = 1
     parameters = {"tau": 10.0}   # δ·z/μ lumped constant, pixel units
+    # tau only shapes self._denom (a jit constant), so it is sweepable:
+    # variants with different tau share one compiled program
+    tunable_params = ("tau",)
 
     def setup(self, in_datasets):
         (din,) = in_datasets
@@ -127,11 +130,16 @@ class RingRemoval(BaseFilter):
     pattern_name = SINOGRAM
     frames = 1
     parameters = {"kernel": 9, "strength": 1.0}
+    # strength scales the correction as a float jit constant
+    # (self._strength below), so it is sweepable; kernel selects shapes
+    # and stays a static trace-time value
+    tunable_params = ("strength",)
 
     def setup(self, in_datasets):
         (din,) = in_datasets
         dout = din.like(self.out_dataset_names[0], dtype=np.float32)
         dout.metadata = dict(din.metadata)
+        self._strength = float(self.params["strength"])
         self.chunk_frames(self.pattern_name, self.frames)
         return [dout]
 
@@ -145,7 +153,7 @@ class RingRemoval(BaseFilter):
         smooth = jax.vmap(lambda r: jnp.convolve(r, kern, mode="valid"))(
             padded[:, 0, :])[:, None, :]
         stripe = col_mean - smooth
-        return block - self.params["strength"] * stripe
+        return block - self._strength * stripe
 
 
 class SinogramFilter(BaseFilter):
@@ -154,14 +162,22 @@ class SinogramFilter(BaseFilter):
     name = "sinogram_filter"
     pattern_name = SINOGRAM
     frames = 1
-    parameters = {"kind": "shepp", "use_pallas": True}
+    # cutoff: fraction of Nyquist above which the response is zeroed —
+    # the classic Savu tuning knob.  It only shapes self._filt (a jit
+    # constant), so sweep variants share one compiled program.
+    parameters = {"kind": "shepp", "use_pallas": True, "cutoff": 1.0}
+    tunable_params = ("cutoff",)
 
     def setup(self, in_datasets):
         (din,) = in_datasets
         dout = din.like(self.out_dataset_names[0], dtype=np.float32)
         dout.metadata = dict(din.metadata)
         n_det = din.shape[din.label_index("detector_x")]
-        self._filt = jnp.asarray(make_filter(n_det, self.params["kind"]))
+        filt = make_filter(n_det, self.params["kind"])
+        cutoff = float(self.params["cutoff"])
+        nyq_frac = np.linspace(0.0, 1.0, filt.shape[0], dtype=np.float32)
+        filt = (filt * (nyq_frac <= cutoff)).astype(np.float32)
+        self._filt = jnp.asarray(filt)
         self.chunk_frames(self.pattern_name, self.frames)
         return [dout]
 

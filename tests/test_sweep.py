@@ -1,0 +1,369 @@
+"""Parameter sweeps — Savu-style parameter tuning as a service workload.
+
+The PR acceptance path: a sweep over N values of one tunable param
+expands into N variant jobs with IDENTICAL chain signatures, admitted
+atomically so the gang path batches them — exactly one compile per
+plugin (cache stats), gang execution visible in scheduler/worker stats,
+and a stacked ``(N, ...)`` result bit-identical to N independently
+submitted solo jobs, both through the local scheduler and through
+``workers_remote`` gang workers.  Plus the 400/404/409/429 error
+contract, metric scoring / best_variant, group cancel, atomic
+admission, and the broker result-spool GC satellite.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import PluginRunner, ShardedTransport
+from repro.service import (CompileCache, JobQueue, PipelineClient,
+                           PipelineService, PipelineWorker, ServiceError,
+                           SweepManager, chain_signature, expand_sweep,
+                           parse_sweep_block, to_spec)
+from repro.tomo import standard_chain
+
+N = dict(n_det=20, n_angles=20, n_rows=1)
+CUTOFFS = [0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0]
+
+
+def _chain(seed=0, **over):
+    return standard_chain(**{**N, **over}, seed=seed)
+
+
+def _axis(values=CUTOFFS):
+    return {"plugin": "sinogram_filter", "param": "cutoff",
+            "values": list(values)}
+
+
+def _mesh1():
+    return Mesh(np.asarray(jax.devices()[:1]), ("data",))
+
+
+def _solo_ref(mesh, seed, **params):
+    """Serial PluginRunner reference on the sharded transport."""
+    pl = standard_chain(**N, seed=seed)
+    for e in pl.entries:
+        if e.cls.name == "sinogram_filter":
+            e.params.update(params)
+    ref = PluginRunner(pl, ShardedTransport(mesh, donate=False)).run()
+    return np.asarray(ref["recon"].materialise())
+
+
+# ==================================================== expansion (units)
+def test_variants_share_one_chain_signature():
+    axes = parse_sweep_block(_axis(), _chain())
+    variants = expand_sweep(_chain(), axes)
+    assert len(variants) == len(CUTOFFS)
+    sigs = {chain_signature(pl) for _, pl in variants}
+    assert len(sigs) == 1                  # identical chains => they gang
+    assert sigs == {chain_signature(_chain())}
+    for (combo, pl), want in zip(variants, CUTOFFS):
+        assert combo == (want,)
+        (sf,) = [e for e in pl.entries if e.cls.name == "sinogram_filter"]
+        assert sf.params["cutoff"] == want
+
+
+def test_two_param_grid_expands_in_c_order():
+    pl = _chain(ring=True)
+    axes = parse_sweep_block(
+        [_axis([0.5, 1.0]),
+         {"plugin": "ring_removal", "param": "strength",
+          "values": [0.0, 1.0, 2.0]}], pl)
+    variants = expand_sweep(pl, axes)
+    assert [c for c, _ in variants] == [
+        (0.5, 0.0), (0.5, 1.0), (0.5, 2.0),
+        (1.0, 0.0), (1.0, 1.0), (1.0, 2.0)]   # first axis outermost
+    assert len({chain_signature(p) for _, p in variants}) == 1
+
+
+def test_queue_submit_many_is_atomic():
+    q = JobQueue(max_pending=3)
+    q.submit(_chain(seed=0))
+    with pytest.raises(Exception) as ei:      # QueueFull
+        q.submit_many([_chain(seed=s) for s in range(3)])
+    assert "max_pending" in str(ei.value)
+    assert q.pending() == 1                   # nothing admitted
+    q2 = JobQueue()
+    q2.submit(_chain(seed=0), job_id="dup")
+    with pytest.raises(ValueError):
+        q2.submit_many([_chain(seed=1), _chain(seed=2)],
+                       job_ids=["fresh", "dup"])
+    assert q2.pending() == 1                  # all-or-nothing held
+
+
+# ============================================== acceptance path (local)
+@pytest.fixture
+def gang_service():
+    """Gang-batching service on an ephemeral port: sharded transport,
+    one shared CompileCache, batch_max wide enough for a 7-point
+    sweep."""
+    cache = CompileCache()
+    mesh = _mesh1()
+    svc = PipelineService(
+        n_workers=2, compile_cache=cache, batch_identical=True,
+        batch_max=8,
+        transport_factory=lambda job: ShardedTransport(
+            mesh, donate=False, compile_cache=cache))
+    host, port = svc.serve(port=0)
+    client = PipelineClient(f"http://{host}:{port}", timeout=60.0)
+    try:
+        yield svc, client, cache, mesh
+    finally:
+        svc.stop()
+
+
+def test_sweep_bit_identical_one_compile_per_plugin(gang_service):
+    """POST /sweeps with 7 values of one param: stacked (7, ...) result
+    bit-identical to 7 solo jobs, exactly one compile per plugin, gang
+    execution visible in /stats."""
+    svc, client, cache, mesh = gang_service
+    reply = client.sweep(_chain(seed=3), _axis(), metric="sharpness")
+    assert reply["n_variants"] == 7 and reply["shape"] == [7]
+    snap = client.wait_sweep(reply["sweep_id"], timeout=300)
+    assert snap["state"] == "done", snap
+
+    # exactly ONE compile per plugin: 4 processing steps in the chain
+    # (correction, ring removal, sino filter, FBP), each compiled once
+    # as the batched program — zero retrace across the 7 variants
+    st = cache.stats()
+    n_steps = snap["variants"][0]["n_plugins"]
+    assert st["misses"] == n_steps == 4, st
+    # ...and the gang path ran it (scheduler stats)
+    assert client.stats()["gangs_run"] >= 1
+
+    stacked = client.sweep_result(reply["sweep_id"])
+    assert stacked.shape[0] == 7
+    # bit-identical to 7 independently submitted solo jobs (same
+    # service; submitted one-at-a-time so each runs the solo path)
+    for k, cutoff in enumerate(CUTOFFS):
+        pl = _chain(seed=3)
+        for e in pl.entries:
+            if e.cls.name == "sinogram_filter":
+                e.params["cutoff"] = cutoff
+        jid = client.submit(pl)
+        assert client.wait(jid, timeout=300)["state"] == "done"
+        np.testing.assert_array_equal(stacked[k], client.result(jid))
+
+    # metric scored per variant, best surfaced
+    best = snap["best_variant"]
+    assert best["index"] in range(7)
+    assert set(best["values"]) == {"sinogram_filter.cutoff"}
+    scores = [v["score"] for v in snap["variants"]]
+    assert best["score"] == max(scores)       # sharpness: higher wins
+
+
+def test_sweep_two_param_grid_result_layout(gang_service):
+    """A 2x2 grid stacks as (2, 2, *variant_shape), variants in C
+    order."""
+    svc, client, _, mesh = gang_service
+    reply = client.sweep(
+        _chain(seed=1),
+        [_axis([0.5, 1.0]),
+         {"plugin": "ring_removal", "param": "strength",
+          "values": [0.0, 1.0]}])
+    snap = client.wait_sweep(reply["sweep_id"], timeout=300)
+    assert snap["state"] == "done", snap
+    stacked = client.sweep_result(reply["sweep_id"])
+    assert stacked.shape[:2] == (2, 2)
+    for k, v in enumerate(snap["variants"]):
+        i, j = divmod(k, 2)
+        got = client.result(v["job_id"])
+        np.testing.assert_array_equal(stacked[i, j], got)
+    # grid corner sanity: (cutoff=1.0, strength=1.0) == plain chain
+    np.testing.assert_array_equal(stacked[1, 1], _solo_ref(mesh, 1))
+
+
+# ====================================================== workers_remote
+def test_sweep_remote_gang_worker_bit_identical(tmp_path):
+    """The same acceptance path through the broker: one gang worker
+    (max_batch=7, sharded) leases the whole sweep, runs it through
+    run_plugin_batch — one compile per plugin in ITS cache — and the
+    stacked result is bit-identical to solo references."""
+    svc = PipelineService(workers_remote=True, lease_ttl=15.0)
+    host, port = svc.serve(port=0)
+    client = PipelineClient(f"http://{host}:{port}", timeout=60.0)
+    mesh = _mesh1()
+    cache = CompileCache()
+    try:
+        reply = client.sweep(_chain(seed=5), _axis(), metric="sharpness")
+        w = PipelineWorker(
+            client.base_url, worker_id="gang-w", max_batch=8,
+            poll=0.01, heartbeat=1.0,
+            transport_factory=lambda d: ShardedTransport(
+                mesh, donate=False, compile_cache=cache))
+        w.register()
+        assert w.run_once() is True
+        snap = client.wait_sweep(reply["sweep_id"], timeout=120)
+        assert snap["state"] == "done", snap
+        assert w.jobs_done == 7
+        assert cache.stats()["misses"] == 4   # one compile per plugin
+        stacked = client.sweep_result(reply["sweep_id"])
+        assert stacked.shape[0] == 7
+        for k, cutoff in enumerate(CUTOFFS):
+            np.testing.assert_array_equal(
+                stacked[k], _solo_ref(mesh, 5, cutoff=cutoff))
+        assert snap["best_variant"] is not None
+    finally:
+        svc.stop()
+
+
+def test_no_sweeps_worker_never_leases_variants():
+    """sweep-aware capability filtering: a worker registered with
+    sweeps=False leases plain jobs but never sweep variants."""
+    svc = PipelineService(workers_remote=True, lease_ttl=5.0)
+    host, port = svc.serve(port=0)
+    client = PipelineClient(f"http://{host}:{port}")
+    try:
+        client.register_worker(worker_id="plain-w", sweeps=False)
+        client.sweep(_chain(seed=1), _axis([0.5, 1.0]))
+        assert client.lease("plain-w", max_jobs=4) == []
+        jid = client.submit(_chain(seed=2))
+        assert [d["job_id"] for d in client.lease("plain-w")] == [jid]
+        # an unrestricted worker drains the sweep (as ONE gang lease)
+        client.register_worker(worker_id="full-w", max_batch=4)
+        got = client.lease("full-w", max_jobs=4)
+        assert len(got) == 2
+    finally:
+        svc.stop()
+
+
+# ======================================================== error contract
+@pytest.fixture
+def idle_service():
+    """Service whose scheduler is stopped — jobs stay queued."""
+    svc = PipelineService(n_workers=1, max_pending=8,
+                          max_sweep_variants=16)
+    host, port = svc.serve(port=0)
+    svc.scheduler.shutdown()
+    client = PipelineClient(f"http://{host}:{port}")
+    try:
+        yield svc, client
+    finally:
+        svc.stop()
+
+
+def test_sweep_validation_is_400(idle_service):
+    _, client = idle_service
+    cases = [
+        ({"plugin": "sinogram_filter", "param": "kind",
+          "values": ["shepp", "hann"]}, "not sweepable"),
+        ({"plugin": "fbp_recon", "param": "warp", "values": [1]},
+         "no parameter"),
+        ({"plugin": "ghost_plugin", "param": "x", "values": [1]},
+         "matches 0 entries"),
+        ({"plugin_index": 99, "param": "cutoff", "values": [1]},
+         "plugin_index"),
+        ({"plugin": "sinogram_filter", "param": "cutoff", "values": []},
+         "non-empty"),
+        ([_axis([0.5]), _axis([0.6])], "distinct"),
+        ([{"plugin": "sinogram_filter", "param": "cutoff",
+           "values": [0.1 * i]} for i in range(3)], "at most 2"),
+    ]
+    for sweep, needle in cases:
+        with pytest.raises(ServiceError) as ei:
+            client.sweep(_chain(), sweep)
+        assert ei.value.status == 400, sweep
+        assert needle in ei.value.message, (sweep, ei.value.message)
+    with pytest.raises(ServiceError) as ei:
+        client.sweep(_chain(), _axis([0.5]), metric="vibes")
+    assert ei.value.status == 400
+    assert "vibes" in ei.value.message
+    # grid too wide for max_sweep_variants=16
+    with pytest.raises(ServiceError) as ei:
+        client.sweep(_chain(), [_axis([0.1] * 5),
+                                {"plugin": "ring_removal",
+                                 "param": "strength",
+                                 "values": [0.1] * 5}])
+    assert ei.value.status == 400
+    assert "max_variants" in ei.value.message
+
+
+def test_sweep_atomic_admission_is_429(idle_service):
+    """A sweep that would overflow max_pending is rejected WHOLE —
+    no variant sneaks in."""
+    svc, client = idle_service                # max_pending=8
+    client.submit(_chain(seed=0))
+    client.submit(_chain(seed=1))
+    before = len(client.jobs())
+    with pytest.raises(ServiceError) as ei:
+        client.sweep(_chain(seed=2), _axis())  # 7 variants, 2+7 > 8
+    assert ei.value.status == 429
+    assert len(client.jobs()) == before       # nothing admitted
+    assert svc.queue.pending() == 2
+
+
+def test_sweep_lifecycle_404_409(idle_service):
+    svc, client = idle_service
+    for call in (lambda: client.sweep_status("ghost"),
+                 lambda: client.sweep_result("ghost"),
+                 lambda: client.cancel_sweep("ghost")):
+        with pytest.raises(ServiceError) as ei:
+            call()
+        assert ei.value.status == 404
+    reply = client.sweep(_chain(seed=3), _axis([0.5, 1.0]),
+                         sweep_id="tune-1")
+    assert reply["sweep_id"] == "tune-1"
+    assert reply["job_ids"] == ["tune-1/v000", "tune-1/v001"]
+    # result before done is 409 (names the blocking states)
+    with pytest.raises(ServiceError) as ei:
+        client.sweep_result("tune-1")
+    assert ei.value.status == 409
+    # duplicate active sweep id is 409
+    with pytest.raises(ServiceError) as ei:
+        client.sweep(_chain(seed=4), _axis([0.5]), sweep_id="tune-1")
+    assert ei.value.status == 409
+
+
+def test_sweep_cancel_cancels_all_variants(idle_service):
+    svc, client = idle_service
+    reply = client.sweep(_chain(seed=1), _axis([0.4, 0.7, 1.0]))
+    out = client.cancel_sweep(reply["sweep_id"])
+    assert sorted(out["cancelled"]) == sorted(reply["job_ids"])
+    snap = client.sweep_status(reply["sweep_id"])
+    assert snap["state"] == "cancelled" and snap["all_terminal"]
+    assert {v["state"] for v in snap["variants"]} == {"cancelled"}
+    assert any(s["sweep_id"] == reply["sweep_id"]
+               for s in client.sweeps())
+    # a second cancel is a no-op, not an error
+    out2 = client.cancel_sweep(reply["sweep_id"])
+    assert out2["cancelled"] == []
+
+
+# ================================================= spool GC (satellite)
+def test_broker_spool_gc_on_history_eviction():
+    """Uploaded .npy results die with their job: when max_history
+    evicts a terminal job, its result spool directory is deleted."""
+    svc = PipelineService(workers_remote=True, lease_ttl=15.0,
+                          max_history=1)
+    host, port = svc.serve(port=0)
+    client = PipelineClient(f"http://{host}:{port}")
+    try:
+        w = PipelineWorker(client.base_url, worker_id="w0", poll=0.01)
+        w.register()
+        ids = []
+        for s in range(3):
+            jid = client.submit(_chain(seed=s))
+            ids.append(jid)
+            assert w.run_once() is True
+            assert client.status(jid)["state"] == "done"
+        spool = lambda jid: os.path.join(          # noqa: E731
+            svc.broker.results_dir, jid.replace(os.sep, "_"))
+        assert os.path.exists(spool(ids[-1]))
+        # pruning runs at submit: this pushes the 2 oldest out
+        jid = client.submit(_chain(seed=9))
+        assert w.run_once() is True
+        assert not os.path.exists(spool(ids[0])), "spool leaked"
+        assert not os.path.exists(spool(ids[1])), "spool leaked"
+        # the freshest result is still retained and streamable
+        np.testing.assert_array_equal(
+            client.result(jid),
+            np.asarray(PluginRunner(_chain(seed=9)).run()[
+                "recon"].materialise()))
+        with pytest.raises(ServiceError) as ei:
+            client.result(ids[0])
+        assert ei.value.status == 404
+    finally:
+        svc.stop()

@@ -214,8 +214,13 @@ def test_registry_spec_is_jsonable_introspection():
     loader = reg["synthetic_tomo_loader"]
     assert loader["params"]["seed"]["data_param"] is True
     assert loader["params"]["n_det"] == {"default": 64,
-                                         "data_param": False}
+                                         "data_param": False,
+                                         "sweepable": False}
     assert loader["n_in_datasets"] == 0
     recon = reg["fbp_recon"]
     assert recon["params"]["use_pallas"]["default"] is True
     assert recon["n_out_datasets"] == 1
+    # tunable params surface as sweepable (the sweep admission check)
+    assert reg["sinogram_filter"]["params"]["cutoff"]["sweepable"] is True
+    assert reg["ring_removal"]["params"]["strength"]["sweepable"] is True
+    assert reg["paganin_filter"]["params"]["tau"]["sweepable"] is True
