@@ -1,0 +1,229 @@
+"""Sustained-load proof for the service layer: an OPEN-LOOP harness.
+
+Closed-loop benchmarks (submit, wait, submit...) let a slow server set
+its own pace and hide queueing collapse.  This harness submits a mixed
+stream of solo jobs and parameter sweeps at a FIXED arrival rate
+against a broker-mode service with N worker subprocesses, regardless
+of how the backlog looks — then reports what the paper's service story
+must sustain:
+
+* throughput (completed jobs/s over the busy interval),
+* client-observed end-to-end latency p50/p99 (``finished_at -
+  submitted_at`` from job snapshots — includes queueing),
+* the queue-depth time series sampled from ``GET /stats`` (the
+  open-loop tell: a stable system plateaus, an overloaded one grows
+  without bound),
+* lease expiries + requeues (zero under healthy load),
+
+and writes ``BENCH_service.json``.  It also asserts that ``/metrics``
+exposes every catalogued metric name — exiting nonzero on a miss, so
+CI catches a metric that silently fell off the exposition.
+
+Standalone:   PYTHONPATH=src python benchmarks/bench_load.py
+CI smoke:     PYTHONPATH=src python benchmarks/bench_load.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+import time
+import urllib.request
+
+from repro.obs import catalogue_names, prometheus_name
+from repro.service import PipelineClient, PipelineService
+from repro.service.worker import spawn_local_workers
+from repro.tomo import standard_chain
+
+
+def _spec(seed: int, *, n_det: int, n_angles: int):
+    return standard_chain(n_det=n_det, n_angles=n_angles, n_rows=1,
+                          use_pallas=False, seed=seed)
+
+
+class _StatsSampler(threading.Thread):
+    """Poll ``GET /stats`` on a fixed period; keep (t, queue depth,
+    active leases) samples."""
+
+    def __init__(self, client: PipelineClient, period: float = 0.2):
+        super().__init__(daemon=True)
+        self.client, self.period = client, period
+        self.samples: list[dict] = []
+        self._halt = threading.Event()
+
+    def run(self):
+        t0 = time.time()
+        while not self._halt.is_set():
+            try:
+                st = self.client.stats()
+                self.samples.append({
+                    "t": round(time.time() - t0, 3),
+                    "queue_depth": st["queue"]["depth"],
+                    "oldest_pending_age":
+                        st["queue"]["oldest_pending_age"],
+                    "active_leases": st.get("active_leases", 0)})
+            except Exception:
+                pass                       # server mid-shutdown: stop soon
+            self._halt.wait(self.period)
+
+    def stop(self):
+        self._halt.set()
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    """Nearest-rank on a pre-sorted list (same rule as obs.Histogram)."""
+    if not sorted_vals:
+        return float("nan")
+    idx = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[idx]
+
+
+def check_metrics_complete(url: str) -> list[str]:
+    """Every catalogued metric must appear on ``/metrics``.  Returns
+    the missing names (CI fails on any)."""
+    with urllib.request.urlopen(f"{url}/metrics", timeout=30) as resp:
+        text = resp.read().decode("utf-8")
+    return [n for n in catalogue_names()
+            if prometheus_name(n) not in text]
+
+
+def run_load(*, n_jobs: int, rate: float, n_workers: int,
+             sweep_every: int, sweep_points: int, n_det: int,
+             n_angles: int, lease_ttl: float = 10.0) -> dict:
+    svc = PipelineService(workers_remote=True, lease_ttl=lease_ttl,
+                          sweep_interval=0.2)
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    client = PipelineClient(url, timeout=60.0)
+    workers = spawn_local_workers(url, n_workers, transport="inmemory",
+                                  poll=0.05, heartbeat=1.0)
+    sampler = _StatsSampler(client)
+    try:
+        # workers online before the clock starts
+        deadline = time.time() + 60
+        while len(client.workers()) < n_workers:
+            assert time.time() < deadline, "workers never registered"
+            time.sleep(0.05)
+        sampler.start()
+
+        # -- open loop: fixed arrival times, submit on schedule even
+        # if the backlog grows ------------------------------------------
+        job_ids: list[str] = []
+        sweep_ids: list[str] = []
+        late = 0
+        t0 = time.time()
+        for i in range(n_jobs):
+            due = t0 + i / rate
+            lag = due - time.time()
+            if lag > 0:
+                time.sleep(lag)
+            else:
+                late += 1
+            if sweep_every and i % sweep_every == sweep_every - 1:
+                reply = client.sweep(
+                    _spec(i, n_det=n_det, n_angles=n_angles),
+                    {"plugin": "sinogram_filter", "param": "cutoff",
+                     "values": [0.5 + 0.4 * k / max(1, sweep_points - 1)
+                                for k in range(sweep_points)]})
+                sweep_ids.append(reply["sweep_id"])
+                job_ids.extend(reply["job_ids"])
+            else:
+                job_ids.append(client.submit(
+                    _spec(i, n_det=n_det, n_angles=n_angles),
+                    priority=i % 3))
+        submit_wall = time.time() - t0
+
+        # -- drain: wait for every submission ----------------------------
+        snaps = [client.wait(j, timeout=600) for j in job_ids]
+        bad = [s for s in snaps if s["state"] != "done"]
+        assert not bad, f"{len(bad)} jobs not done, first: {bad[0]}"
+        sampler.stop()
+        sampler.join(timeout=5)
+
+        lats = sorted(s["finished_at"] - s["submitted_at"]
+                      for s in snaps)
+        busy = max(s["finished_at"] for s in snaps) \
+            - min(s["submitted_at"] for s in snaps)
+        st = client.stats()
+        depths = [s["queue_depth"] for s in sampler.samples] or [0]
+        return {
+            "config": {"n_submissions": n_jobs, "arrival_rate": rate,
+                       "n_workers": n_workers,
+                       "sweep_every": sweep_every,
+                       "sweep_points": sweep_points,
+                       "n_det": n_det, "n_angles": n_angles},
+            "n_jobs_completed": len(snaps),
+            "n_sweeps": len(sweep_ids),
+            "late_submissions": late,
+            "submit_wall_s": round(submit_wall, 3),
+            "busy_wall_s": round(busy, 3),
+            "throughput_jobs_per_s": round(len(snaps) / busy, 3),
+            "latency_p50_s": round(_percentile(lats, 0.5), 4),
+            "latency_p99_s": round(_percentile(lats, 0.99), 4),
+            "latency_max_s": round(lats[-1], 4),
+            "queue_depth_max": max(depths),
+            "queue_depth_final": depths[-1],
+            "queue_depth_series": sampler.samples[:500],
+            "leases_expired": st["leases_expired"],
+            "jobs_requeued": st["jobs_requeued"],
+            "server_metrics": {
+                k: v for k, v in st["metrics"].items()
+                if k.startswith(("job.latency", "plugin.wall"))},
+            "metrics_missing": check_metrics_complete(url),
+        }
+    finally:
+        sampler.stop()
+        for p in workers:
+            if p.poll() is None:
+                p.kill()
+        for p in workers:
+            p.wait(timeout=10)
+        svc.stop()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI config (seconds, 2 workers)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="number of submissions (solo jobs + sweeps)")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="arrival rate, submissions/s")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker subprocesses")
+    ap.add_argument("--sweep-every", type=int, default=4,
+                    help="every Kth submission is a sweep (0: none)")
+    ap.add_argument("--sweep-points", type=int, default=3,
+                    help="variants per sweep")
+    ap.add_argument("--out", default="BENCH_service.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg = dict(n_jobs=args.jobs or 8, rate=args.rate or 4.0,
+                   n_workers=args.workers or 2, n_det=16, n_angles=8)
+    else:
+        cfg = dict(n_jobs=args.jobs or 40, rate=args.rate or 2.0,
+                   n_workers=args.workers or 4, n_det=48, n_angles=48)
+    result = run_load(sweep_every=args.sweep_every,
+                      sweep_points=args.sweep_points, **cfg)
+
+    with open(args.out, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"{result['n_jobs_completed']} jobs "
+          f"({result['n_sweeps']} sweeps) @ "
+          f"{result['throughput_jobs_per_s']} jobs/s — "
+          f"p50 {result['latency_p50_s']}s, "
+          f"p99 {result['latency_p99_s']}s, "
+          f"queue depth max {result['queue_depth_max']}, "
+          f"{result['leases_expired']} lease expiries "
+          f"-> {args.out}")
+    if result["metrics_missing"]:
+        print("MISSING from /metrics: "
+              f"{result['metrics_missing']}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,18 @@
 """Per-plugin profiler — the MPI-profiler analogue (paper §IV.B, Fig 9).
 
 Savu ships a profiler that visualises, per MPI process, the time each
-processing step took.  Here every plugin execution records wall time per
-phase (setup / pre / process / post), the participating device count,
-and — when the sharded transport provides a compiled artifact — the HLO
-FLOPs and bytes from ``cost_analysis()``.  ``report()`` renders the
-Fig-9-style ASCII bar chart; ``save()`` emits JSON for the benchmark
-harness.
+processing step took.  Since the telemetry layer landed
+(``repro.obs``), the profiler is a thin *view* over a
+:class:`~repro.obs.trace.Trace` rather than a parallel event system:
+every ``timer()`` records a ``plugin.<name>.<phase>`` span (epoch
+timestamps, so spans from different processes align on one timeline),
+and the classic API — ``record``/``totals``/``report``/``save`` — keeps
+working on top of it.  A :class:`PluginRunner` handed a profiler whose
+trace is the job's trace therefore feeds the distributed timeline at
+``GET /jobs/{id}/trace`` for free.
+
+``report()`` renders the Fig-9-style ASCII bar chart; ``save()`` emits
+the historical event-list JSON for the benchmark harness.
 """
 from __future__ import annotations
 
@@ -15,9 +21,14 @@ import json
 import time
 from typing import Any
 
+from ..obs.trace import Span, Trace
+
 
 @dataclasses.dataclass
 class Event:
+    """Legacy per-phase event view (kept for API compatibility); the
+    authoritative record is the underlying :class:`Span`."""
+
     plugin: str
     phase: str          # 'setup' | 'pre' | 'process' | 'post' | 'io'
     start: float
@@ -32,16 +43,51 @@ class Event:
         return self.end - self.start
 
 
+def _span_to_event(s: Span) -> Event:
+    a = dict(s.attrs)
+    plugin = a.pop("plugin", None)
+    phase = a.pop("phase", None)
+    if plugin is None or phase is None:
+        # span name is "plugin.<name>.<phase>"; plugin names may
+        # themselves contain dots only via fused "a+b" labels, which
+        # don't — split from the ends
+        parts = s.name.split(".")
+        plugin = plugin or ".".join(parts[1:-1]) or s.name
+        phase = phase or (parts[-1] if len(parts) > 1 else "")
+    return Event(plugin, phase, s.start,
+                 s.end if s.end is not None else s.start,
+                 devices=a.pop("devices", 1), flops=a.pop("flops", None),
+                 bytes=a.pop("bytes", None), extra=a)
+
+
 class Profiler:
-    def __init__(self):
-        self.events: list[Event] = []
-        self._t0 = time.perf_counter()
+    """Record plugin-phase timings as spans on a trace.
+
+    Args:
+        trace: the trace spans land on — pass the JOB's trace to make
+            plugin timings part of its cross-process timeline; default
+            a private one (classic in-process profiling).
+        worker_id: stamped on every recorded span (multi-process
+            attribution in merged traces).
+    """
+
+    def __init__(self, trace: Trace | None = None,
+                 worker_id: str | None = None):
+        self.trace = trace if trace is not None else Trace()
+        self.worker_id = worker_id
+        self._t0 = time.time()
 
     # ------------------------------------------------------------------
     def record(self, plugin: str, phase: str, start: float, end: float,
                devices: int = 1, flops=None, bytes=None, **extra) -> None:
-        self.events.append(Event(plugin, phase, start, end, devices,
-                                 flops, bytes, extra))
+        attrs: dict[str, Any] = {"plugin": plugin, "phase": phase,
+                                 "devices": devices, **extra}
+        if flops is not None:
+            attrs["flops"] = flops
+        if bytes is not None:
+            attrs["bytes"] = bytes
+        self.trace.record(f"plugin.{plugin}.{phase}", start, end,
+                          worker_id=self.worker_id, attrs=attrs)
 
     class _Timer:
         def __init__(self, prof, plugin, phase, devices, extra):
@@ -49,19 +95,31 @@ class Profiler:
             self.devices, self.extra = devices, extra
 
         def __enter__(self):
-            self.start = time.perf_counter()
+            self.span = self.prof.trace.begin(
+                f"plugin.{self.plugin}.{self.phase}",
+                worker_id=self.prof.worker_id,
+                attrs={"plugin": self.plugin, "phase": self.phase,
+                       "devices": self.devices, **self.extra})
             return self
 
-        def __exit__(self, *exc):
-            self.prof.record(self.plugin, self.phase, self.start,
-                             time.perf_counter(), self.devices,
-                             **self.extra)
+        def __exit__(self, exc_type, *exc):
+            if exc_type is not None:
+                self.span.attrs["error"] = exc_type.__name__
+            self.prof.trace.finish(self.span)
             return False
 
     def timer(self, plugin: str, phase: str, devices: int = 1, **extra):
+        """Context manager timing one plugin phase (epoch clock)."""
         return Profiler._Timer(self, plugin, phase, devices, extra)
 
     # ------------------------------------------------------------------
+    @property
+    def events(self) -> list[Event]:
+        """The plugin-phase spans as legacy :class:`Event` records
+        (computed view; ordered by start time)."""
+        return [_span_to_event(s) for s in self.trace.spans()
+                if s.name.startswith("plugin.")]
+
     def totals(self) -> dict[str, float]:
         out: dict[str, float] = {}
         for e in self.events:
@@ -70,7 +128,10 @@ class Profiler:
 
     def report(self, width: int = 50) -> str:
         """Fig-9-style per-plugin bar chart."""
-        totals = self.totals()
+        events = self.events
+        totals: dict[str, float] = {}
+        for e in events:
+            totals[e.plugin] = totals.get(e.plugin, 0.0) + e.wall
         if not totals:
             return "(no events)"
         tmax = max(totals.values()) or 1.0
@@ -79,7 +140,7 @@ class Profiler:
             bar = "#" * max(1, int(width * t / tmax))
             lines.append(f"{name:<32} {t:9.4f}  {bar}")
         phases: dict[str, float] = {}
-        for e in self.events:
+        for e in events:
             phases[e.phase] = phases.get(e.phase, 0.0) + e.wall
         lines.append("")
         lines.append("per-phase: " + "  ".join(
@@ -96,6 +157,9 @@ class Profiler:
         p = Profiler()
         with open(path) as fh:
             for d in json.load(fh):
-                extra = d.pop("extra", {})
-                p.events.append(Event(**d, extra=extra))
+                extra = d.pop("extra", {}) or {}
+                p.record(d["plugin"], d["phase"], d["start"], d["end"],
+                         devices=d.get("devices", 1),
+                         flops=d.get("flops"), bytes=d.get("bytes"),
+                         **extra)
         return p

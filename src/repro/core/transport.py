@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from ..obs.trace import current_trace
 from .chunking import DEFAULT_CACHE_BYTES, optimise_chunks
 from .dataset import DataSet
 from .patterns import Pattern
@@ -92,7 +93,15 @@ class LocalCompileCache:
             return fn
         except KeyError:
             self.misses += 1
+            t0 = time.time()
             fn = self._entries[key] = builder()
+            tr = current_trace()
+            if tr is not None:
+                # an actual build (not a hit) becomes a ``compile`` span
+                # on whichever job is executing on this thread
+                tr.record("compile", t0, time.time(),
+                          attrs={"kind": key[0] if isinstance(key, tuple)
+                                 and key else "plugin"})
             return fn
 
     def stats(self) -> dict[str, Any]:
@@ -144,11 +153,17 @@ class ShardedTransport(Transport):
     name = "sharded"
 
     def __init__(self, mesh: Mesh, donate: bool = True,
-                 compile_cache=None):
+                 compile_cache=None, cost_analysis: bool = False):
         self.mesh = mesh
         self.donate = donate
         self.compile_cache = (compile_cache if compile_cache is not None
                               else LocalCompileCache())
+        #: when True, :meth:`plugin_cost` AOT-lowers each distinct
+        #: plugin step once and serves its HLO cost analysis (FLOPs /
+        #: bytes accessed) — off by default: the extra compile is not
+        #: free and only observability consumers want it
+        self.cost_analysis = cost_analysis
+        self._costs: dict = {}
 
     def allocate(self, ds: DataSet, now: Pattern, next_: Pattern | None
                  ) -> None:
@@ -395,6 +410,32 @@ class ShardedTransport(Transport):
         for j, p in enumerate(plugins):
             for pd, o in zip(p.out_data, outs):
                 pd.dataset.backing = o[j]
+
+    def plugin_cost(self, plugin: BasePlugin) -> dict[str, float] | None:
+        """HLO cost analysis for one plugin step: ``{"flops", "bytes"}``
+        from the AOT-compiled program, or None (disabled, or the jax
+        build doesn't expose ``cost_analysis``).  Cached per plugin key
+        — the extra lower+compile happens once per distinct step; the
+        profiler attaches the numbers to ``process`` spans so
+        ``/metrics`` can report per-plugin FLOPs."""
+        if not self.cost_analysis:
+            return None
+        key = ("cost", self._plugin_key(plugin))
+        if key in self._costs:
+            return self._costs[key]
+        cost: dict[str, float] | None
+        try:
+            with self.mesh:
+                ca = self.compile_plugin(plugin, lower_only=True) \
+                    .compile().cost_analysis()
+            if isinstance(ca, (list, tuple)):    # older jax: per-device
+                ca = ca[0] if ca else {}
+            cost = {"flops": float(ca.get("flops", 0.0)),
+                    "bytes": float(ca.get("bytes accessed", 0.0))}
+        except Exception:            # noqa: BLE001 — telemetry only
+            cost = None
+        self._costs[key] = cost
+        return cost
 
     def stats(self) -> dict[str, Any]:
         return {"compile_cache": self.compile_cache.stats()}

@@ -414,8 +414,19 @@ def _client_parser() -> argparse.ArgumentParser:
                    help="write the npy here (default: <job_id>.npy)")
     cx = sub.add_parser("cancel", help="DELETE a queued job")
     cx.add_argument("job_id")
+    tr = sub.add_parser(
+        "trace", help="GET a job's cross-process span timeline",
+        description="Print the job's distributed trace "
+                    "(docs/observability.md) — by default as an ASCII "
+                    "gantt over every span the broker/scheduler and "
+                    "workers recorded.")
+    tr.add_argument("job_id")
+    tr.add_argument("--json", action="store_true",
+                    help="print the raw span list instead of the gantt")
     sub.add_parser("jobs", help="GET every job's snapshot")
     sub.add_parser("stats", help="GET scheduler + compile-cache stats")
+    sub.add_parser("metrics",
+                   help="GET the Prometheus text exposition (/metrics)")
     sub.add_parser("plugins", help="GET the wire-format plugin registry")
     return ap
 
@@ -523,10 +534,17 @@ def _client_main(argv: list[str]) -> None:
             print(f"{out}: shape={arr.shape} dtype={arr.dtype}")
         elif args.action == "cancel":
             print(json.dumps(client.cancel(args.job_id), indent=2))
+        elif args.action == "trace":
+            if args.json:
+                print(json.dumps(client.trace(args.job_id), indent=2))
+            else:
+                print(client.trace(args.job_id, text=True), end="")
         elif args.action == "jobs":
             print(json.dumps(client.jobs(), indent=2))
         elif args.action == "stats":
             print(json.dumps(client.stats(), indent=2))
+        elif args.action == "metrics":
+            print(client.metrics(), end="")
         elif args.action == "plugins":
             print(json.dumps(client.plugins(), indent=2))
     except ServiceError as e:

@@ -1,0 +1,15 @@
+# Telemetry layer: distributed job tracing + metrics registry
+# (docs/observability.md).  Deliberately dependency-free — core and
+# service both import obs, never the other way round.
+from .metrics import (CATALOGUE, QUANTILES, Counter, Gauge, Histogram,
+                      MetricsRegistry, catalogue_names, prometheus_name,
+                      register_catalogue)
+from .trace import (Span, Trace, current_trace, new_span_id, new_trace_id,
+                    render_gantt, use_trace)
+
+__all__ = [
+    "Span", "Trace", "current_trace", "use_trace", "new_trace_id",
+    "new_span_id", "render_gantt", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "register_catalogue", "catalogue_names",
+    "prometheus_name", "CATALOGUE", "QUANTILES",
+]

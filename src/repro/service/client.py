@@ -125,6 +125,23 @@ class PipelineClient:
         """Scheduler + compile-cache counters (``GET /stats``)."""
         return self._request("GET", "/stats")
 
+    def trace(self, job_id: str, text: bool = False) -> dict[str, Any] | str:
+        """A job's cross-process span timeline
+        (``GET /jobs/{id}/trace``): ``{"job_id", "trace_id",
+        "spans": [...]}`` — or, with ``text=True``, the ASCII gantt
+        rendering (``?format=text``).  Raises ServiceError(404) for an
+        unknown/pruned job.  See ``docs/observability.md``."""
+        path = f"/jobs/{quote(job_id, safe='')}/trace"
+        if text:
+            return self._request("GET", path + "?format=text",
+                                 raw=True).decode()
+        return self._request("GET", path)
+
+    def metrics(self) -> str:
+        """The Prometheus text exposition (``GET /metrics``) — the same
+        numbers as ``stats()["metrics"]``, scrape-ready."""
+        return self._request("GET", "/metrics", raw=True).decode()
+
     def plugins(self) -> dict[str, Any]:
         """The wire-format plugin registry (``GET /plugins``)."""
         return self._request("GET", "/plugins")

@@ -23,6 +23,8 @@ import threading
 import time
 from typing import Any, Callable
 
+from ..obs.trace import current_trace
+
 
 class CompileCache:
     """Process-level compiled-plugin cache (paper §I: "the same
@@ -72,9 +74,18 @@ class CompileCache:
             ev.wait()                    # someone else is compiling this key
         try:
             t0 = time.perf_counter()
+            t0_epoch = time.time()
             fn = builder()
+            dt = time.perf_counter() - t0
+            tr = current_trace()
+            if tr is not None:
+                # actual builds (never hits) show up as ``compile``
+                # spans on whichever job triggered them
+                tr.record("compile", t0_epoch, t0_epoch + dt,
+                          attrs={"kind": key[0] if isinstance(key, tuple)
+                                 and key else "plugin"})
             with self._lock:
-                self.build_s += time.perf_counter() - t0
+                self.build_s += dt
                 self._entries[key] = fn
                 if (self.max_entries is not None
                         and len(self._entries) > self.max_entries):

@@ -18,6 +18,7 @@ from typing import Any
 from ..core.framework import PluginRunner
 from ..core.plugin import _is_jsonable
 from ..core.process_list import ProcessList
+from ..obs.trace import Trace, new_trace_id
 
 
 class JobState(str, enum.Enum):
@@ -106,10 +107,23 @@ class Job:
     #: dataset name -> server-readable .npy path, filled by remote
     #: workers (upload spool or shared-fs hand-off)
     remote_results: dict[str, str] = dataclasses.field(default_factory=dict)
+    # -- telemetry (docs/observability.md) ------------------------------
+    #: trace identity, assigned at submission (callers may supply one to
+    #: correlate with an external tracing system)
+    trace_id: str = ""
+    #: the merged cross-process span timeline (``GET /jobs/{id}/trace``)
+    trace: Trace | None = None
+    #: last requeue time (lease expiry) — queue.wait spans for attempt
+    #: >1 measure from here, not from submission
+    requeued_at: float | None = None
 
     def __post_init__(self):
         if not self.chain_sig:
             self.chain_sig = chain_signature(self.process_list)
+        if not self.trace_id:
+            self.trace_id = new_trace_id()
+        if self.trace is None:
+            self.trace = Trace(self.trace_id)
 
     # ------------------------------------------------------------------
     @property
@@ -144,6 +158,7 @@ class Job:
                 "started_at": self.started_at,
                 "finished_at": self.finished_at, "wall": self.wall,
                 "error": self.error,
+                "trace_id": self.trace_id,
                 "worker_id": self.worker_id, "attempt": self.attempt,
                 "metadata": {k: v for k, v in self.metadata.items()
                              if _is_jsonable(v)}}

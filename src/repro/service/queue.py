@@ -89,7 +89,8 @@ class JobQueue:
     def submit(self, process_list: ProcessList, *, priority: int = 0,
                job_id: str | None = None, block: bool = False,
                timeout: float | None = None,
-               metadata: dict[str, Any] | None = None) -> Job:
+               metadata: dict[str, Any] | None = None,
+               trace_id: str | None = None) -> Job:
         """Admit one process list as a :class:`Job`.
 
         Args:
@@ -102,6 +103,8 @@ class JobQueue:
                 raising.
             timeout: cap on the ``block=True`` wait, in seconds.
             metadata: free-form annotations carried on the job.
+            trace_id: explicit telemetry trace id (correlate with an
+                external tracer); default a fresh one per job.
 
         Returns: the QUEUED job.
         Raises:
@@ -140,7 +143,8 @@ class JobQueue:
                         self._capacity.wait(remaining)
                         check_id()
                 job = Job(job_id, process_list, priority=priority, seq=seq,
-                          metadata=dict(metadata or {}))
+                          metadata=dict(metadata or {}),
+                          trace_id=trace_id or "")
                 self._jobs[job_id] = job
                 heapq.heappush(self._heap, (-priority, seq, job))
                 self._not_empty.notify()
@@ -317,6 +321,7 @@ class JobQueue:
             if job.state.terminal() or job.state is JobState.QUEUED:
                 return False
             job.state = JobState.QUEUED
+            job.requeued_at = time.time()
             heapq.heappush(self._heap, (-job.priority, job.seq, job))
             self._not_empty.notify()
             return True
@@ -357,6 +362,31 @@ class JobQueue:
         """Number of non-terminal jobs (what admission control counts)."""
         with self._lock:
             return self._pending_locked()
+
+    def queue_info(self) -> dict[str, Any]:
+        """Starvation visibility (``GET /stats`` ``queue`` block): depth
+        of still-QUEUED jobs, per-priority breakdown, and the oldest
+        queued job's id + age since submission — the number that grows
+        when the service is overloaded or a job is unmatchable."""
+        now = time.time()
+        with self._lock:
+            queued = [j for j in self._jobs.values()
+                      if j.state is JobState.QUEUED]
+            by_priority: dict[str, int] = {}
+            for j in queued:
+                key = str(j.priority)
+                by_priority[key] = by_priority.get(key, 0) + 1
+            oldest = min(queued, key=lambda j: j.submitted_at,
+                         default=None)
+            return {
+                "depth": len(queued),
+                "by_priority": by_priority,
+                "oldest_pending_job": (None if oldest is None
+                                       else oldest.job_id),
+                "oldest_pending_age": (None if oldest is None else
+                                       round(now - oldest.submitted_at,
+                                             6)),
+            }
 
     def snapshot(self) -> list[dict[str, Any]]:
         """Every retained job's ``Job.snapshot()``, submission-ordered

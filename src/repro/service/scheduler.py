@@ -35,11 +35,50 @@ from typing import Any, Callable
 
 from ..core.framework import PluginRunner
 from ..core.plugin import _is_jsonable
+from ..core.profiler import Profiler
 from ..core.transport import InMemoryTransport, Transport
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import use_trace
 from .checkpoint import CheckpointStore
 from .job import Job, JobState
 from .queue import JobQueue
 from .wire import WireError, chain_plugin_names, to_spec
+
+
+def _observe_terminal(metrics: MetricsRegistry | None, job: Job) -> None:
+    """Fold one terminal job into the registry: outcome counter,
+    end-to-end latency, and per-plugin process wall from its trace."""
+    if metrics is None:
+        return
+    if job.state is JobState.DONE:
+        metrics.counter("jobs.completed").inc()
+    elif job.state is JobState.FAILED:
+        metrics.counter("jobs.failed").inc()
+    elif job.state is JobState.CANCELLED:
+        metrics.counter("jobs.cancelled").inc()
+    if job.finished_at is not None:
+        metrics.histogram("job.latency.e2e").observe(
+            job.finished_at - job.submitted_at)
+
+
+def _observe_plugin_spans(metrics: MetricsRegistry | None,
+                          spans) -> None:
+    """Feed ``process``-phase plugin spans into the plugin-wall
+    histograms (the aggregate plus one per plugin name).  Callers pass
+    only spans seen for the FIRST time (a fresh run, or the newly-merged
+    slice of a heartbeat) so nothing double-counts."""
+    if metrics is None:
+        return
+    for s in spans:
+        if not s.name.startswith("plugin.") or s.end is None:
+            continue
+        if s.attrs.get("phase") != "process":
+            continue
+        metrics.histogram("plugin.wall").observe(s.wall)
+        plugin = s.attrs.get("plugin") or s.name
+        metrics.histogram(f"plugin.wall.{plugin}").observe(s.wall)
+        if s.attrs.get("flops"):
+            metrics.gauge(f"plugin.flops.{plugin}").set(s.attrs["flops"])
 
 
 class PipelineScheduler:
@@ -54,7 +93,8 @@ class PipelineScheduler:
                  batch_identical: bool = False,
                  batch_max: int = 4,
                  fuse: bool = False,
-                 compile_cache=None):
+                 compile_cache=None,
+                 metrics: MetricsRegistry | None = None):
         """Args:
             queue: the admission queue workers pull from.
             transport_factory: Job -> Transport for each dispatch
@@ -69,6 +109,8 @@ class PipelineScheduler:
             fuse: compile consecutive linear plugins as one jit.
             compile_cache: held only for ``stats()`` reporting — wire
                 the SAME object into the transports the factory builds.
+            metrics: telemetry registry (``repro.obs``) to record job
+                outcomes/latencies into; None disables.
         """
         self.queue = queue
         self.transport_factory = (transport_factory
@@ -79,6 +121,7 @@ class PipelineScheduler:
         self.batch_max = max(2, batch_max)
         self.fuse = fuse
         self.compile_cache = compile_cache   # held for stats reporting
+        self.metrics = metrics
         self._threads: list[threading.Thread] = []
         self._stop = threading.Event()
         self._lock = threading.Lock()
@@ -132,6 +175,7 @@ class PipelineScheduler:
             out["wall"] = time.time() - self._started_at
         if self.compile_cache is not None:
             out["compile_cache"] = self.compile_cache.stats()
+        out["queue"] = self.queue.queue_info()
         return out
 
     # -- worker loop ----------------------------------------------------
@@ -155,6 +199,17 @@ class PipelineScheduler:
         job.metadata["traceback"] = traceback.format_exc()
         job.state = JobState.FAILED
 
+    def _dispatched(self, job: Job) -> None:
+        """Telemetry at dispatch: the queue.wait span (from submission,
+        or from the last requeue) and the queue-latency histogram."""
+        now = job.started_at or time.time()
+        waited_from = job.requeued_at or job.submitted_at
+        job.trace.record("queue.wait", waited_from, now,
+                         attrs={"priority": job.priority})
+        if self.metrics is not None:
+            self.metrics.histogram("job.latency.queue").observe(
+                now - waited_from)
+
     def _drive(self, job: Job, runner: PluginRunner) -> None:
         """Step a PREPARED runner to completion (status + checkpoints)."""
         job.plugin_index = runner.current_step
@@ -162,7 +217,8 @@ class PipelineScheduler:
         while runner.step():
             job.plugin_index = runner.current_step
             if self.checkpoints is not None:
-                self.checkpoints.save(job.job_id, runner)
+                with job.trace.span("checkpoint.save"):
+                    self.checkpoints.save(job.job_id, runner)
         runner.finalise()
         job.state = JobState.DONE
         if self.checkpoints is not None:
@@ -171,17 +227,21 @@ class PipelineScheduler:
     def _run_job(self, job: Job) -> None:
         job.started_at = time.time()
         job.state = JobState.CHECKING
+        self._dispatched(job)
         try:
-            runner = PluginRunner(job.process_list,
-                                  self.transport_factory(job),
-                                  fuse=self.fuse)
-            job.runner = runner
-            runner.prepare()
-            if self.checkpoints is not None:
-                job.resumed_from = self.checkpoints.restore(job.job_id,
-                                                            runner)
-            job.n_plugins = runner.n_steps
-            self._drive(job, runner)
+            with use_trace(job.trace):
+                runner = PluginRunner(job.process_list,
+                                      self.transport_factory(job),
+                                      profiler=Profiler(trace=job.trace),
+                                      fuse=self.fuse)
+                job.runner = runner
+                runner.prepare()
+                if self.checkpoints is not None:
+                    with job.trace.span("checkpoint.restore"):
+                        job.resumed_from = self.checkpoints.restore(
+                            job.job_id, runner)
+                job.n_plugins = runner.n_steps
+                self._drive(job, runner)
         except Exception as e:
             self._fail(job, e)
         finally:
@@ -205,13 +265,17 @@ class PipelineScheduler:
         for job in jobs:
             job.started_at = time.time()
             job.state = JobState.CHECKING
+            self._dispatched(job)
             try:
-                r = PluginRunner(job.process_list, transport, fuse=self.fuse)
+                r = PluginRunner(job.process_list, transport,
+                                 profiler=Profiler(trace=job.trace),
+                                 fuse=self.fuse)
                 job.runner = r
                 r.prepare()
                 if self.checkpoints is not None:
-                    job.resumed_from = self.checkpoints.restore(job.job_id,
-                                                                r)
+                    with job.trace.span("checkpoint.restore"):
+                        job.resumed_from = self.checkpoints.restore(
+                            job.job_id, r)
                 job.n_plugins = r.n_steps
                 if job.resumed_from:
                     resumed.append(job)
@@ -246,6 +310,7 @@ class PipelineScheduler:
             can_batch = hasattr(transport, "run_plugin_batch")
             for _ in range(runners[0].n_steps):
                 groups = [r.begin_step() for r in runners]
+                t0 = time.time()
                 if can_batch and len(groups[0]) == 1:
                     try:
                         transport.run_plugin_batch([g[0] for g in groups])
@@ -258,11 +323,18 @@ class PipelineScheduler:
                             transport.run_fused(g)
                         else:
                             transport.run_plugin(g[0])
-                for job, r in zip(jobs, runners):
+                t1 = time.time()
+                for job, r, g in zip(jobs, runners, groups):
+                    # the batched call is one compiled program over the
+                    # whole gang — each member's trace gets the shared
+                    # wall, tagged with the gang size
+                    r.profiler.record(g[0].name, "process", t0, t1,
+                                      gang=len(jobs))
                     r.complete_step()
                     job.plugin_index = r.current_step
                     if self.checkpoints is not None:
-                        self.checkpoints.save(job.job_id, r)
+                        with job.trace.span("checkpoint.save"):
+                            self.checkpoints.save(job.job_id, r)
             for job, r in zip(jobs, runners):
                 r.finalise()
                 job.state = JobState.DONE
@@ -290,6 +362,12 @@ class PipelineScheduler:
                     self.jobs_done += 1
                 elif job.state is JobState.FAILED:
                     self.jobs_failed += 1
+        for job in jobs:
+            # in-process runs record every span exactly once, and
+            # _finish sees each job exactly once — safe to fold the
+            # whole trace into the plugin-wall histograms here
+            _observe_terminal(self.metrics, job)
+            _observe_plugin_spans(self.metrics, job.trace.spans())
         self.queue.notify_terminal()
 
 
@@ -351,6 +429,8 @@ class WorkerInfo:
 class _Lease:
     worker_id: str
     expires_at: float
+    #: when the lease was granted — start of the job's ``lease`` span
+    granted_at: float = 0.0
 
 
 class WorkerBroker:
@@ -383,7 +463,8 @@ class WorkerBroker:
 
     def __init__(self, queue: JobQueue, *, lease_ttl: float = 15.0,
                  sweep_interval: float | None = None,
-                 results_dir: str | None = None):
+                 results_dir: str | None = None,
+                 metrics: MetricsRegistry | None = None):
         """Args:
             queue: the admission queue leases are fed from.
             lease_ttl: seconds a lease survives without a heartbeat.
@@ -392,8 +473,11 @@ class WorkerBroker:
             results_dir: spool for worker results (uploads land here;
                 shared-fs workers write into it).  Default: a fresh
                 temp directory.
+            metrics: telemetry registry (``repro.obs``) to record job
+                outcomes/latencies into; None disables.
         """
         self.queue = queue
+        self.metrics = metrics
         self.lease_ttl = lease_ttl
         self.sweep_interval = (sweep_interval if sweep_interval is not None
                                else min(1.0, lease_ttl / 4))
@@ -564,6 +648,7 @@ class WorkerBroker:
                 with self._lock:
                     self.jobs_failed += 1
                     self._required.pop(job.job_id, None)
+                _observe_terminal(self.metrics, job)
                 self.queue.notify_terminal()
                 continue
             with self._lock:
@@ -571,12 +656,22 @@ class WorkerBroker:
                 job.attempt += 1
                 job.started_at = job.started_at or now
                 self._leases[job.job_id] = _Lease(
-                    worker_id, now + self.lease_ttl)
+                    worker_id, now + self.lease_ttl, granted_at=now)
                 w.leases_granted += 1
                 w.active.add(job.job_id)
+            # the broker records the queue-side spans; the worker adds
+            # the execution spans via heartbeats (one merged timeline)
+            waited_from = job.requeued_at or job.submitted_at
+            job.trace.record("queue.wait", waited_from, now,
+                             attrs={"priority": job.priority,
+                                    "attempt": job.attempt})
+            if self.metrics is not None:
+                self.metrics.histogram("job.latency.queue").observe(
+                    now - waited_from)
             out.append({
                 "job_id": job.job_id, "process_list": spec,
                 "priority": job.priority, "attempt": job.attempt,
+                "trace_id": job.trace_id,
                 "metadata": {k: v for k, v in job.metadata.items()
                              if _is_jsonable(v)},
                 "lease_ttl": self.lease_ttl})
@@ -606,6 +701,13 @@ class WorkerBroker:
         body = body or {}
         job = self.queue.job(job_id)
         now = time.time()
+        # fold piggybacked spans into the job's trace FIRST, whatever
+        # the verdict — a worker about to be told "lost" still carries
+        # real history from its attempt (span-id dedup makes redelivery
+        # idempotent), and the killed-worker spans the resume timeline
+        # needs arrive exactly this way
+        new_spans = job.trace.merge(body.get("spans") or [])
+        _observe_plugin_spans(self.metrics, new_spans)
         with self._lock:
             lease = self._leases.get(job_id)
             if lease is None or lease.worker_id != worker_id:
@@ -618,14 +720,17 @@ class WorkerBroker:
                 # requeue NOW so the job lands on a live worker (the
                 # requeue may CANCEL a cancel-flagged job — terminal —
                 # so fall through to notify_terminal below)
+                self._end_lease_locked(job, lease, "lost", now)
                 self._drop_lease_locked(job_id, worker_id)
                 self._requeue_locked(job)
                 verdict = {"verdict": "lost"}
             elif job.cancel_requested or job.state is JobState.CANCELLED:
+                self._end_lease_locked(job, lease, "cancelled", now)
                 self._drop_lease_locked(job_id, worker_id)
                 if not job.state.terminal():
                     job.state = JobState.CANCELLED
                     job.finished_at = now
+                    _observe_terminal(self.metrics, job)
                 verdict = {"verdict": "cancelled"}
             else:
                 lease.expires_at = now + self.lease_ttl
@@ -709,6 +814,11 @@ class WorkerBroker:
         if state not in ("done", "failed"):
             raise WireError(f'complete state must be "done" or "failed", '
                             f'got {state!r}')
+        # keep the worker's final span flush even if the lease check
+        # below raises LeaseLost — a late completion is void as an
+        # OUTCOME, but its spans are real history on the timeline
+        new_spans = job.trace.merge(body.get("spans") or [])
+        _observe_plugin_spans(self.metrics, new_spans)
         results = body.get("results") or {}
         if not isinstance(results, dict):
             raise WireError("results must be an object")
@@ -734,6 +844,7 @@ class WorkerBroker:
                     now > lease.expires_at:
                 raise LeaseLost(f"worker {worker_id!r} no longer holds "
                                 f"the lease on job {job_id!r}")
+            self._end_lease_locked(job, lease, state, now)
             self._drop_lease_locked(job_id, worker_id)
             w = self._workers.get(worker_id)
             job.remote_results.update(accepted)
@@ -754,6 +865,7 @@ class WorkerBroker:
                     w.jobs_failed += 1
             job.finished_at = now
             self._required.pop(job_id, None)
+        _observe_terminal(self.metrics, job)
         self.queue.notify_terminal()
         return {"job_id": job_id, "state": job.state.value}
 
@@ -776,6 +888,16 @@ class WorkerBroker:
             return True
 
     # -- expiry ---------------------------------------------------------
+    def _end_lease_locked(self, job: Job, lease: _Lease, outcome: str,
+                          now: float) -> None:
+        """Record the closing ``lease`` span: one per attempt, covering
+        grant → end, tagged with the holding worker and how it ended
+        (``done``/``failed``/``cancelled``/``lost``/``expired``)."""
+        job.trace.record("lease", lease.granted_at or job.submitted_at,
+                         now, worker_id=lease.worker_id,
+                         attrs={"outcome": outcome,
+                                "attempt": job.attempt})
+
     def _drop_lease_locked(self, job_id: str, worker_id: str) -> None:
         self._leases.pop(job_id, None)
         w = self._workers.get(worker_id)
@@ -784,12 +906,17 @@ class WorkerBroker:
 
     def _requeue_locked(self, job: Job) -> None:
         self.leases_expired += 1
+        if self.metrics is not None:
+            self.metrics.counter("lease.expired").inc()
         if job.cancel_requested and not job.state.terminal():
             job.state = JobState.CANCELLED
             job.finished_at = time.time()
+            _observe_terminal(self.metrics, job)
             return
         if self.queue.requeue(job):
             self.jobs_requeued += 1
+            if self.metrics is not None:
+                self.metrics.counter("jobs.requeued").inc()
 
     def _expire_locked_sweep(self) -> None:
         """Requeue every job whose lease expired (dead worker), and
@@ -806,6 +933,7 @@ class WorkerBroker:
                     job = self.queue.job(jid)
                 except KeyError:
                     continue
+                self._end_lease_locked(job, ls, "expired", now)
                 if not job.state.terminal():
                     self._requeue_locked(job)
             for jid in list(self._required):
@@ -822,11 +950,22 @@ class WorkerBroker:
             self._expire_locked_sweep()
 
     # -- stats ----------------------------------------------------------
+    def n_active_leases(self) -> int:
+        """Currently-held lease count (the ``leases.active`` gauge)."""
+        with self._lock:
+            return len(self._leases)
+
+    def n_workers(self) -> int:
+        """Registered worker count (``workers.registered`` gauge)."""
+        with self._lock:
+            return len(self._workers)
+
     def stats(self) -> dict[str, Any]:
         """Broker counters + per-worker stats (``GET /stats`` in broker
         mode): ``jobs_done``/``jobs_failed``/``jobs_requeued``/
-        ``leases_expired``, active lease count, and one entry per
-        registered worker under ``workers``."""
+        ``leases_expired``, active lease count, queue-age info under
+        ``queue``, and one entry per registered worker under
+        ``workers``."""
         with self._lock:
             out: dict[str, Any] = {
                 "mode": "broker",
@@ -839,6 +978,7 @@ class WorkerBroker:
                             for wid, w in self._workers.items()},
             }
         out["pending"] = self.queue.pending()
+        out["queue"] = self.queue.queue_info()
         if self._started_at is not None:
             out["wall"] = time.time() - self._started_at
         return out

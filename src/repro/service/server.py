@@ -26,7 +26,12 @@ Endpoints (JSON unless noted; see ``docs/service.md``):
 ``GET /sweeps/{id}/result`` the stacked ``.npy`` — parameter axes as
                             the new leading dimension(s)
 ``DELETE /sweeps/{id}``     cancel every live variant
-``GET /stats``              scheduler + compile-cache counters
+``GET /jobs/{id}/trace``    the job's cross-process span timeline
+                            (``?format=text`` renders an ASCII gantt;
+                            ``docs/observability.md``)
+``GET /metrics``            Prometheus text exposition of the metrics
+                            registry (also JSON under ``/stats``)
+``GET /stats``              scheduler + compile-cache + metrics counters
 ``GET /plugins``            the wire-format plugin registry
 ``GET /healthz``            liveness probe
 ==========================  ==========================================
@@ -52,16 +57,20 @@ import numpy as np
 
 from ..core.process_list import ProcessListError
 from ..core.transport import ChunkedFile, Transport
+from ..obs.metrics import MetricsRegistry, register_catalogue
+from ..obs.trace import render_gantt
 from .checkpoint import CheckpointStore
 from .compile_cache import CompileCache
 from .job import Job, JobState
 from .queue import JobQueue, QueueFull
-from .scheduler import LeaseLost, PipelineScheduler, WorkerBroker
+from .scheduler import LeaseLost, PipelineScheduler, WorkerBroker, \
+    _observe_terminal
 from .sweep import SweepError, SweepGroup, SweepManager
 from .wire import WireError, from_spec, registry_spec
 
 _JOB_RE = re.compile(r"^/jobs/([^/]+)$")
 _RESULT_RE = re.compile(r"^/jobs/([^/]+)/result$")
+_TRACE_RE = re.compile(r"^/jobs/([^/]+)/trace$")
 _PROGRESS_RE = re.compile(r"^/jobs/([^/]+)/progress$")
 _COMPLETE_RE = re.compile(r"^/jobs/([^/]+)/complete$")
 _SWEEP_RE = re.compile(r"^/sweeps/([^/]+)$")
@@ -109,29 +118,55 @@ class PipelineService:
                               else CompileCache())
         self.queue = JobQueue(max_pending=max_pending,
                               max_history=max_history)
+        # one registry per service (docs/observability.md); the full
+        # catalogue is pre-registered so /metrics is complete from the
+        # first scrape
+        self.metrics = MetricsRegistry()
+        register_catalogue(self.metrics)
         self.scheduler: PipelineScheduler | None = None
         self.broker: WorkerBroker | None = None
         if workers_remote:
             self.broker = WorkerBroker(
                 self.queue, lease_ttl=lease_ttl,
-                sweep_interval=sweep_interval, results_dir=results_dir)
+                sweep_interval=sweep_interval, results_dir=results_dir,
+                metrics=self.metrics)
         else:
             self.scheduler = PipelineScheduler(
                 self.queue, transport_factory=transport_factory,
                 n_workers=n_workers, checkpoints=checkpoints,
                 batch_identical=batch_identical, batch_max=batch_max,
-                fuse=fuse, compile_cache=self.compile_cache)
+                fuse=fuse, compile_cache=self.compile_cache,
+                metrics=self.metrics)
         self.sweeps = SweepManager(self.queue, fetch=self._variant_array,
                                    max_variants=max_sweep_variants)
+        self._wire_gauges()
         self._httpd: ThreadingHTTPServer | None = None
         self._http_thread: threading.Thread | None = None
+
+    def _wire_gauges(self) -> None:
+        """Bind the callback gauges: these read live state at scrape
+        time rather than being pushed on every event."""
+        m = self.metrics
+        m.gauge("queue.depth").set_function(self.queue.pending)
+        m.gauge("queue.oldest_age_s").set_function(
+            lambda: self.queue.queue_info()["oldest_pending_age"] or 0.0)
+        m.gauge("compile.cache.hits").set_function(
+            lambda: self.compile_cache.hits)
+        m.gauge("compile.cache.misses").set_function(
+            lambda: self.compile_cache.misses)
+        broker = self.broker
+        m.gauge("leases.active").set_function(
+            broker.n_active_leases if broker is not None else lambda: 0)
+        m.gauge("workers.registered").set_function(
+            broker.n_workers if broker is not None else lambda: 0)
 
     # -- service operations (HTTP-independent) -------------------------
     def submit_envelope(self, envelope: dict[str, Any]) -> Job:
         """Admit one submission envelope::
 
             {"process_list": <spec v1>,   # required
-             "priority": 0, "job_id": null, "metadata": {}}
+             "priority": 0, "job_id": null, "metadata": {},
+             "trace_id": null}            # correlate with external traces
 
         Deserialises the spec (:func:`~repro.service.wire.from_spec`),
         runs the pre-flight ``ProcessList.check()`` so structurally
@@ -157,10 +192,16 @@ class PipelineService:
         metadata = envelope.get("metadata") or {}
         if not isinstance(metadata, dict):
             raise WireError("metadata must be an object")
+        trace_id = envelope.get("trace_id")
+        if trace_id is not None and not isinstance(trace_id, str):
+            raise WireError(f"trace_id must be a string, got "
+                            f"{trace_id!r}")
         pl = from_spec(envelope["process_list"])
         pl.check()
-        return self.queue.submit(pl, priority=priority, job_id=job_id,
-                                 metadata=metadata)
+        job = self.queue.submit(pl, priority=priority, job_id=job_id,
+                                metadata=metadata, trace_id=trace_id)
+        self.metrics.counter("jobs.submitted").inc()
+        return job
 
     def cancel(self, job_id: str) -> dict[str, Any]:
         """Cancel ``job_id`` if still queued — or, in broker mode, flag
@@ -173,7 +214,11 @@ class PipelineService:
         job = self.queue.job(job_id)
         out = {"job_id": job_id, "cancelled": cancelled,
                "state": job.state.value}
-        if not cancelled and self.broker is not None \
+        if cancelled:
+            # queue-side cancel is the one terminal transition neither
+            # scheduler nor broker sees — observe it here
+            _observe_terminal(self.metrics, job)
+        elif self.broker is not None \
                 and self.broker.request_cancel(job_id):
             out.update(cancelled=True, pending=True)
         return out
@@ -184,7 +229,9 @@ class PipelineService:
         ``sweep`` grid block, expanded into variant jobs submitted
         atomically so the gang path batches them.  See
         :meth:`SweepManager.submit` for the error contract."""
-        return self.sweeps.submit(envelope)
+        group = self.sweeps.submit(envelope)
+        self.metrics.counter("jobs.submitted").inc(group.n_variants)
+        return group
 
     def cancel_sweep(self, sweep_id: str) -> dict[str, Any]:
         """Cancel every live variant of ``sweep_id``
@@ -206,10 +253,12 @@ class PipelineService:
 
     def stats(self) -> dict[str, Any]:
         """Scheduler (or broker) counters + compile-cache hit rates +
-        sweep-group counters (``GET /stats``)."""
+        sweep-group counters + the metrics-registry snapshot
+        (``GET /stats``)."""
         out = (self.broker.stats() if self.broker is not None
                else self.scheduler.stats())
         out["sweeps"] = self.sweeps.stats()
+        out["metrics"] = self.metrics.snapshot()
         return out
 
     def result_dataset(self, job_id: str, dataset: str | None = None):
@@ -357,6 +406,15 @@ class _PipelineHandler(BaseHTTPRequestHandler):
     def _error(self, code: int, message: str, **extra) -> None:
         self._json(code, {"error": message, **extra})
 
+    def _text(self, code: int, text: str,
+              content_type: str = "text/plain; charset=utf-8") -> None:
+        body = text.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
     def _read_body(self) -> Any:
         length = int(self.headers.get("Content-Length") or 0)
         raw = self.rfile.read(length) if length else b""
@@ -385,6 +443,9 @@ class _PipelineHandler(BaseHTTPRequestHandler):
                                     "pending": svc.queue.pending()})
         if path == "/stats":
             return self._json(200, svc.stats())
+        if path == "/metrics":
+            return self._text(200, svc.metrics.render_prometheus(),
+                              content_type=MetricsRegistry.CONTENT_TYPE)
         if path == "/plugins":
             return self._json(200, registry_spec())
         if path == "/jobs":
@@ -406,6 +467,18 @@ class _PipelineHandler(BaseHTTPRequestHandler):
             if svc.broker is None:
                 return self._error(409, "not serving in broker mode")
             return self._json(200, svc.broker.stats()["workers"])
+        m = _TRACE_RE.match(path)
+        if m:
+            job_id = unquote(m.group(1))
+            try:
+                job = svc.queue.job(job_id)
+            except KeyError:
+                return self._error(404, f"unknown job {job_id!r}")
+            if (query.get("format") or [None])[0] == "text":
+                return self._text(
+                    200, render_gantt(job.trace.spans()) + "\n")
+            return self._json(200, {"job_id": job_id,
+                                    **job.trace.to_wire()})
         m = _JOB_RE.match(path)
         if m:
             job_id = unquote(m.group(1))

@@ -49,8 +49,10 @@ from typing import Any, Callable
 import numpy as np
 
 from ..core.framework import PluginRunner
+from ..core.profiler import Profiler
 from ..core.transport import ChunkedFileTransport, InMemoryTransport, \
     Transport
+from ..obs.trace import Trace, use_trace
 from .checkpoint import CheckpointStore
 from .client import PipelineClient, ServiceError
 from .compile_cache import CompileCache
@@ -102,11 +104,20 @@ class _Heartbeat(threading.Thread):
                     self.dropped.add(jid)
             if self.job_id is None:       # gang mode: pending-only
                 continue
+            # piggyback any finished-but-unshipped spans: mid-plugin
+            # heartbeats are the ONLY channel that gets a slow (or
+            # about-to-die) worker's history to the broker in time
+            body = dict(self.worker._progress_fields)
+            tr = self.worker._trace
+            shipped = tr.take_unshipped() if tr is not None else []
+            if shipped:
+                body["spans"] = [s.to_wire() for s in shipped]
             try:
                 out = self.worker.client.progress(
-                    self.job_id, self.worker.worker_id,
-                    **dict(self.worker._progress_fields))
+                    self.job_id, self.worker.worker_id, **body)
             except (ServiceError, OSError):
+                if shipped:
+                    tr.unship(shipped)
                 continue                  # transient server hiccup
             if out.get("verdict") != "ok":
                 self.abort = out.get("verdict", "lost")
@@ -177,6 +188,9 @@ class PipelineWorker:
         self.jobs_failed = 0
         self._registered = False
         self._progress_fields: dict[str, Any] = {}
+        #: the active (solo) job's trace — heartbeats ship its finished
+        #: spans to the broker (docs/observability.md)
+        self._trace: Trace | None = None
 
     # -- registration ---------------------------------------------------
     def register(self) -> str:
@@ -258,12 +272,17 @@ class PipelineWorker:
         except Exception as e:           # noqa: BLE001 — report upstream
             self.jobs_failed += 1
             try:
-                self.client.complete(job_id, self.worker_id, "failed",
-                                     error=f"{type(e).__name__}: {e}")
+                tr = self._trace
+                self.client.complete(
+                    job_id, self.worker_id, "failed",
+                    error=f"{type(e).__name__}: {e}",
+                    spans=[s.to_wire() for s in tr.take_unshipped()]
+                    if tr is not None else [])
             except (ServiceError, OSError):
                 pass                     # lease lost: nothing to report
         finally:
             hb.stop()
+            self._trace = None
         return hb.dropped
 
     def _check(self, job_id: str, **fields: Any) -> None:
@@ -272,8 +291,20 @@ class PipelineWorker:
         # this dict concurrently, and a dict is never mutated once
         # published (no resize-during-copy race)
         self._progress_fields = {**self._progress_fields, **fields}
-        out = self.client.progress(job_id, self.worker_id,
-                                   **self._progress_fields)
+        # spans ride along transiently — NOT in _progress_fields, which
+        # the heartbeat thread re-posts verbatim (the broker dedups on
+        # span_id anyway, this just keeps payloads lean)
+        body = dict(self._progress_fields)
+        tr = self._trace
+        shipped = tr.take_unshipped() if tr is not None else []
+        if shipped:
+            body["spans"] = [s.to_wire() for s in shipped]
+        try:
+            out = self.client.progress(job_id, self.worker_id, **body)
+        except (ServiceError, OSError):
+            if shipped:
+                tr.unship(shipped)       # retry on the next heartbeat
+            raise
         verdict = out.get("verdict")
         if verdict != "ok":
             raise _Abandon(verdict or "lost")
@@ -281,6 +312,12 @@ class PipelineWorker:
     def _execute(self, desc: dict[str, Any], hb: _Heartbeat) -> None:
         job_id = desc["job_id"]
         self._progress_fields = {}
+        # adopt the broker's trace id so this attempt's spans land on
+        # the same cross-process timeline as the queue/lease spans (and
+        # any earlier attempt's) — docs/observability.md
+        trace = Trace(desc.get("trace_id") or None,
+                      worker_id=self.worker_id)
+        self._trace = trace
         # cheap lease confirm BEFORE any expensive prepare/restore — a
         # batch-mate whose lease expired while it waited abandons here
         self._check(job_id)
@@ -288,48 +325,73 @@ class PipelineWorker:
         # after prepare: a slow first prepare must not eat the TTL of
         # every lease in the batch
         hb.start()
-        pl = from_spec(desc["process_list"])
-        runner = PluginRunner(pl, self.transport_factory(desc))
-        runner.prepare()
-        resumed = 0
-        if self.checkpoints is not None:
-            resumed = self.checkpoints.restore(job_id, runner)
-        self._check(job_id, plugin_index=runner.current_step,
-                    n_plugins=runner.n_steps, resumed_from=resumed,
-                    **({"checkpoint": self.checkpoints.root}
-                       if self.checkpoints else {}))
-        while True:
-            if hb.abort:
-                raise _Abandon(hb.abort)
-            if not runner.step():
-                break
+        with use_trace(trace), \
+                trace.span("attempt", attempt=desc.get("attempt")):
+            pl = from_spec(desc["process_list"])
+            runner = PluginRunner(pl, self.transport_factory(desc),
+                                  profiler=Profiler(
+                                      trace=trace,
+                                      worker_id=self.worker_id))
+            runner.prepare()
+            resumed = 0
             if self.checkpoints is not None:
-                self.checkpoints.save(job_id, runner)
-            self._check(job_id, plugin_index=runner.current_step)
-        runner.finalise()
-        # the heartbeat keeps renewing through hand-over + complete: a
-        # result upload slower than lease_ttl must not lose the lease
-        # (hb is stopped by _run_leased's finally)
-        results = self._hand_over(job_id, runner)
+                with trace.span("checkpoint.restore"):
+                    resumed = self.checkpoints.restore(job_id, runner)
+            self._check(job_id, plugin_index=runner.current_step,
+                        n_plugins=runner.n_steps, resumed_from=resumed,
+                        **({"checkpoint": self.checkpoints.root}
+                           if self.checkpoints else {}))
+            while True:
+                if hb.abort:
+                    raise _Abandon(hb.abort)
+                if not runner.step():
+                    break
+                if self.checkpoints is not None:
+                    with trace.span("checkpoint.save"):
+                        self.checkpoints.save(job_id, runner)
+                self._check(job_id, plugin_index=runner.current_step)
+            runner.finalise()
+            # the heartbeat keeps renewing through hand-over + complete:
+            # a result upload slower than lease_ttl must not lose the
+            # lease (hb is stopped by _run_leased's finally)
+            with trace.span("result.upload"):
+                results = self._hand_over(job_id, runner)
         self.client.complete(job_id, self.worker_id, "done",
                              results=results,
                              plugin_index=runner.current_step,
-                             n_plugins=runner.n_steps)
+                             n_plugins=runner.n_steps,
+                             spans=[s.to_wire()
+                                    for s in trace.take_unshipped()])
         self.jobs_done += 1
         if self.checkpoints is not None:
             self.checkpoints.clear(job_id)
 
     # -- gang execution ---------------------------------------------------
-    def _verdict(self, job_id: str, **fields: Any) -> str:
-        """One per-job progress post; returns the broker's verdict."""
-        out = self.client.progress(job_id, self.worker_id, **fields)
+    def _verdict(self, job_id: str, trace: Trace | None = None,
+                 **fields: Any) -> str:
+        """One per-job progress post (shipping ``trace``'s unshipped
+        spans when given); returns the broker's verdict."""
+        shipped = trace.take_unshipped() if trace is not None else []
+        if shipped:
+            fields = {**fields,
+                      "spans": [s.to_wire() for s in shipped]}
+        try:
+            out = self.client.progress(job_id, self.worker_id, **fields)
+        except (ServiceError, OSError):
+            if shipped:
+                trace.unship(shipped)    # retry on the next post
+            raise
         return out.get("verdict", "lost")
 
-    def _fail_remote(self, job_id: str, exc: Exception) -> None:
+    def _fail_remote(self, job_id: str, exc: Exception,
+                     trace: Trace | None = None) -> None:
         self.jobs_failed += 1
         try:
-            self.client.complete(job_id, self.worker_id, "failed",
-                                 error=f"{type(exc).__name__}: {exc}")
+            self.client.complete(
+                job_id, self.worker_id, "failed",
+                error=f"{type(exc).__name__}: {exc}",
+                spans=[s.to_wire() for s in trace.take_unshipped()]
+                if trace is not None else [])
         except (ServiceError, OSError):
             pass                         # lease lost: nothing to report
 
@@ -358,6 +420,13 @@ class PipelineWorker:
                         pending=tuple(ids) + tuple(pending))
         dropped = set()
         live: list[tuple[dict[str, Any], PluginRunner]] = []
+        # per-job traces: gang members interleave on this thread, and
+        # the per-(trace, thread) parent stacks keep each job's span
+        # links straight
+        traces: dict[str, Trace] = {
+            d["job_id"]: Trace(d.get("trace_id") or None,
+                               worker_id=self.worker_id)
+            for d in descs}
         try:
             hb.start()
             solo: list[dict[str, Any]] = []
@@ -370,14 +439,18 @@ class PipelineWorker:
                     # solo path does the actual restore
                     solo.append(d)
                     continue
+                tr = traces[jid]
                 try:
                     if self._verdict(jid) != "ok":
                         dropped.add(jid)
                         continue
                     runner = PluginRunner(from_spec(d["process_list"]),
-                                          transport)
+                                          transport,
+                                          profiler=Profiler(
+                                              trace=tr,
+                                              worker_id=self.worker_id))
                     runner.prepare()
-                    if self._verdict(jid, plugin_index=0,
+                    if self._verdict(jid, trace=tr, plugin_index=0,
                                      n_plugins=runner.n_steps,
                                      **({"checkpoint": self.checkpoints.root}
                                         if self.checkpoints else {})) != "ok":
@@ -387,7 +460,7 @@ class PipelineWorker:
                     dropped.add(jid)
                     continue
                 except Exception as e:   # noqa: BLE001 — report upstream
-                    self._fail_remote(jid, e)
+                    self._fail_remote(jid, e, trace=tr)
                     continue
                 live.append((d, runner))
             # lockstep: one batched compiled call per plugin step
@@ -398,6 +471,7 @@ class PipelineWorker:
                     break
                 try:
                     groups = [r.begin_step() for _, r in live]
+                    t0 = time.time()
                     if len(live) > 1 and len(groups[0]) == 1:
                         try:
                             transport.run_plugin_batch(
@@ -411,7 +485,12 @@ class PipelineWorker:
                                 transport.run_fused(g)
                             else:
                                 transport.run_plugin(g[0])
-                    for _, r in live:
+                    t1 = time.time()
+                    for (_, r), g in zip(live, groups):
+                        # one compiled call over the gang: every
+                        # member's trace gets the shared wall
+                        r.profiler.record(g[0].name, "process", t0, t1,
+                                          gang=len(live))
                         r.complete_step()
                 except Exception as e:   # noqa: BLE001 — fails the gang
                     exc = e
@@ -425,7 +504,7 @@ class PipelineWorker:
                     if self.checkpoints is not None:
                         self.checkpoints.save(jid, r)
                     try:
-                        v = self._verdict(jid,
+                        v = self._verdict(jid, trace=traces.get(jid),
                                           plugin_index=r.current_step)
                     except (ServiceError, OSError):
                         v = "ok"        # transient; hb catches real loss
@@ -436,17 +515,22 @@ class PipelineWorker:
                 live = keep
             if exc is not None:
                 for d, _ in live:
-                    self._fail_remote(d["job_id"], exc)
+                    self._fail_remote(d["job_id"], exc,
+                                      trace=traces.get(d["job_id"]))
                 live = []
             for d, r in live:
                 jid = d["job_id"]
+                tr = traces[jid]
                 try:
                     r.finalise()
-                    results = self._hand_over(jid, r)
+                    with tr.span("result.upload"):
+                        results = self._hand_over(jid, r)
                     self.client.complete(jid, self.worker_id, "done",
                                          results=results,
                                          plugin_index=r.current_step,
-                                         n_plugins=r.n_steps)
+                                         n_plugins=r.n_steps,
+                                         spans=[s.to_wire() for s in
+                                                tr.take_unshipped()])
                     self.jobs_done += 1
                     if self.checkpoints is not None:
                         self.checkpoints.clear(jid)

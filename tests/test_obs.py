@@ -1,0 +1,267 @@
+"""Unit tests for the telemetry substrate (``repro.obs``): the trace
+model (span identity, parent links, merge dedup, the shipping protocol),
+the metrics registry (counters/gauges/reservoir histograms and the
+Prometheus exposition), and the span-backed Profiler's back-compat
+surface.  Quantile math gets a hypothesis property test when hypothesis
+is installed."""
+import math
+import threading
+import time
+
+import pytest
+
+from repro.core.profiler import Profiler
+from repro.obs import (CATALOGUE, Counter, Gauge, Histogram,
+                       MetricsRegistry, Span, Trace, catalogue_names,
+                       current_trace, prometheus_name, register_catalogue,
+                       render_gantt, use_trace)
+
+
+# ============================================================== tracing
+def test_span_wire_roundtrip():
+    s = Span("plugin.fbp.process", 10.0, 11.5, worker_id="w0",
+             parent_id="abc", attrs={"phase": "process", "gang": 2})
+    back = Span.from_wire(s.to_wire())
+    assert back.name == s.name and back.span_id == s.span_id
+    assert back.start == 10.0 and back.end == 11.5
+    assert back.worker_id == "w0" and back.parent_id == "abc"
+    assert back.attrs == s.attrs
+
+
+def test_span_context_manager_nests_parent_links():
+    tr = Trace("t1", worker_id="w0")
+    with tr.span("attempt", attempt=1) as outer:
+        with tr.span("plugin.fbp.process") as inner:
+            pass
+    assert inner.parent_id == outer.span_id
+    assert outer.parent_id is None
+    assert outer.end is not None and inner.end is not None
+    assert all(s.worker_id == "w0" for s in tr.spans())
+
+
+def test_span_error_attr_on_exception():
+    tr = Trace()
+    with pytest.raises(RuntimeError):
+        with tr.span("attempt"):
+            raise RuntimeError("boom")
+    (s,) = tr.spans()
+    assert s.attrs["error"] == "RuntimeError" and s.end is not None
+
+
+def test_record_defaults_parent_to_open_span():
+    tr = Trace()
+    with tr.span("plugin.fbp.process") as p:
+        tr.record("compile", time.time() - 1, time.time())
+    compile_span = [s for s in tr.spans() if s.name == "compile"][0]
+    assert compile_span.parent_id == p.span_id
+
+
+def test_merge_dedups_on_span_id_and_returns_only_new():
+    tr = Trace("job-1")
+    wire = [Span("lease", 1.0, 2.0, span_id="aaa").to_wire(),
+            Span("plugin.x.process", 1.2, 1.8, span_id="bbb").to_wire()]
+    first = tr.merge(wire)
+    assert [s.span_id for s in first] == ["aaa", "bbb"]
+    # a redelivered heartbeat adds nothing
+    assert tr.merge(wire) == []
+    assert len(tr) == 2
+    # malformed entries are skipped, not fatal
+    assert tr.merge([{"nonsense": True}, None]) == []
+
+
+def test_ship_unship_protocol():
+    tr = Trace()
+    tr.record("a", 1.0, 2.0)
+    open_span = tr.begin("b")                # unfinished: never shipped
+    batch = tr.take_unshipped()
+    assert [s.name for s in batch] == ["a"]
+    assert tr.take_unshipped() == []         # marked shipped
+    tr.unship(batch)                         # failed send: retry later
+    assert [s.name for s in tr.take_unshipped()] == ["a"]
+    tr.finish(open_span)
+    assert [s.name for s in tr.take_unshipped()] == ["b"]
+
+
+def test_per_thread_parent_stacks_keep_traces_straight():
+    tr = Trace()
+    seen = {}
+
+    def worker(tag):
+        with tr.span(f"outer.{tag}") as o, tr.span(f"inner.{tag}") as i:
+            seen[tag] = (o.span_id, i.parent_id)
+
+    ts = [threading.Thread(target=worker, args=(t,)) for t in "ab"]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    for tag in "ab":
+        outer_id, inner_parent = seen[tag]
+        assert inner_parent == outer_id
+
+
+def test_current_trace_contextvar():
+    assert current_trace() is None
+    tr = Trace()
+    with use_trace(tr):
+        assert current_trace() is tr
+    assert current_trace() is None
+
+
+def test_render_gantt_layout():
+    spans = [Span("queue.wait", 0.0, 1.0),
+             Span("plugin.fbp.process", 1.0, 3.0, worker_id="w1")]
+    out = render_gantt(spans, width=40)
+    lines = out.splitlines()
+    assert "timeline" in lines[0] and "3.000s total" in lines[0]
+    assert lines[1].startswith("queue.wait")
+    assert "w1" in lines[2] and "#" in lines[2]
+    assert render_gantt([]) == "(no spans)"
+
+
+# ======================================================= profiler bridge
+def test_profiler_is_span_backed():
+    tr = Trace("job-9", worker_id="w3")
+    prof = Profiler(trace=tr)
+    prof.record("fbp", "process", 1.0, 3.0, devices=2, flops=1e9)
+    with prof.timer("fbp", "post", 1):
+        pass
+    names = [s.name for s in tr.spans()]
+    assert "plugin.fbp.process" in names and "plugin.fbp.post" in names
+    evs = prof.events
+    assert {e.phase for e in evs} == {"process", "post"}
+    proc = [e for e in evs if e.phase == "process"][0]
+    assert proc.devices == 2 and proc.flops == 1e9 and proc.wall == 2.0
+    assert "profile" in prof.report()
+
+
+def test_profiler_default_trace_standalone():
+    prof = Profiler()                        # no trace given: owns one
+    prof.record("x", "process", 0.0, 1.0)
+    assert len(prof.events) == 1
+    tot = prof.totals()
+    assert tot["x"] == pytest.approx(1.0)
+
+
+# ============================================================== metrics
+def test_counter_monotonic():
+    c = Counter("jobs.completed")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_callback_and_error_isolation():
+    g = Gauge("queue.depth", fn=lambda: 7)
+    assert g.value == 7.0
+    g2 = Gauge("bad")
+    g2.set(3)
+    assert g2.value == 3.0
+    g2.set_function(lambda: 1 / 0)           # scrape must not raise
+    assert math.isnan(g2.value)
+
+
+def test_histogram_exact_count_sum_and_quantiles():
+    h = Histogram("lat", reservoir_size=100)
+    for v in range(100):
+        h.observe(v)
+    assert h.count == 100 and h.sum == pytest.approx(4950.0)
+    assert h.quantile(0.0) == 0
+    assert h.quantile(1.0) == 99
+    assert h.quantile(0.5) == 50
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    assert Histogram("empty").quantile(0.5) is None
+
+
+def test_histogram_reservoir_bounds_memory():
+    h = Histogram("lat", reservoir_size=64, seed=1)
+    for v in range(10_000):
+        h.observe(float(v))
+    assert len(h._reservoir) == 64
+    assert h.count == 10_000
+    # the sample stays representative: median of U[0, 10k) within 25%
+    assert 2_500 <= h.quantile(0.5) <= 7_500
+
+
+def test_histogram_quantile_properties_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.floats(allow_nan=False, allow_infinity=False,
+                              width=32),
+                    min_size=1, max_size=200),
+           st.floats(min_value=0.0, max_value=1.0))
+    def prop(values, q):
+        h = Histogram("x", reservoir_size=1000)
+        for v in values:
+            h.observe(v)
+        got = h.quantile(q)
+        # every quantile is an actual observation, bracketed by min/max,
+        # and monotone in q
+        assert got in [float(v) for v in values]
+        assert min(values) <= got <= max(values)
+        assert h.quantile(0.0) == min(values)
+        assert h.quantile(1.0) == max(values)
+        qs = [h.quantile(x) for x in (0.0, 0.25, 0.5, 0.75, 1.0)]
+        assert qs == sorted(qs)
+
+    prop()
+
+
+def test_registry_get_or_create_and_kind_conflict():
+    reg = MetricsRegistry()
+    c1 = reg.counter("jobs.completed")
+    assert reg.counter("jobs.completed") is c1
+    with pytest.raises(ValueError):
+        reg.gauge("jobs.completed")
+    reg.histogram("job.latency.e2e").observe(1.0)
+    snap = reg.snapshot()
+    assert snap["jobs.completed"] == 0
+    assert snap["job.latency.e2e"]["count"] == 1
+    assert snap["job.latency.e2e"]["p50"] == 1.0
+
+
+def test_prometheus_rendering_format():
+    reg = MetricsRegistry()
+    reg.counter("jobs.completed", help="done jobs").inc(3)
+    reg.gauge("queue.depth").set(2)
+    h = reg.histogram("job.latency.e2e")
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    text = reg.render_prometheus()
+    assert "# HELP jobs_completed done jobs" in text
+    assert "# TYPE jobs_completed counter" in text
+    assert "jobs_completed 3" in text
+    assert "queue_depth 2" in text
+    assert "# TYPE job_latency_e2e summary" in text
+    assert 'job_latency_e2e{quantile="0.5"} 0.2' in text
+    assert "job_latency_e2e_count 3" in text
+    assert text.endswith("\n")
+    # every line is a comment or `name[{labels}] value`
+    for line in text.strip().splitlines():
+        if line.startswith("#"):
+            continue
+        name, _, value = line.rpartition(" ")
+        assert name and not name[0].isdigit()
+        float(value)
+
+
+def test_prometheus_name_sanitisation():
+    assert prometheus_name("job.latency.e2e") == "job_latency_e2e"
+    assert prometheus_name("plugin.wall.fbp-recon") == "plugin_wall_fbp_recon"
+    assert prometheus_name("9lives") == "_9lives"
+
+
+def test_catalogue_registers_every_name():
+    reg = MetricsRegistry()
+    register_catalogue(reg)
+    assert set(catalogue_names()) <= set(reg.names())
+    assert len(CATALOGUE) == len(set(catalogue_names()))
+    text = reg.render_prometheus()
+    for name in catalogue_names():
+        assert prometheus_name(name) in text
+    register_catalogue(reg)                  # idempotent
