@@ -182,6 +182,66 @@ def run_load(*, n_jobs: int, rate: float, n_workers: int,
         svc.stop()
 
 
+def run_stream(*, n_det: int, n_angles: int, chunk: int = 6,
+               rate: float = 8.0) -> dict:
+    """Streaming-acquisition smoke (docs/streaming.md): one v2
+    streaming job on a scheduler-mode service, frames POSTed at a fixed
+    chunk rate, and after each chunk the time until ``GET
+    /jobs/{id}/preview`` covers the new watermark — the
+    ingest-to-preview latency a beamline operator would see."""
+    from repro.service import ServiceError, to_spec
+
+    svc = PipelineService(n_workers=1)
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    client = PipelineClient(url, timeout=60.0)
+    try:
+        pl = _spec(0, n_det=n_det, n_angles=n_angles)
+        entry = pl.entries[0]
+        loader = entry.cls(**entry.params,
+                           in_datasets=list(entry.in_datasets),
+                           out_datasets=list(entry.out_datasets))
+        frames = loader.load()[0].materialise()
+        jid = client.submit({**to_spec(pl), "version": 2,
+                             "streaming": True})
+        lags: list[float] = []
+        t0 = time.time()
+        for i, lo in enumerate(range(0, frames.shape[0], chunk)):
+            due = t0 + i / rate
+            if due - time.time() > 0:
+                time.sleep(due - time.time())
+            out = client.ingest(jid, frames[lo:lo + chunk], lo)
+            fed_at, watermark = time.time(), out["watermark"]
+            # poll until the preview has folded this chunk in
+            while True:
+                try:
+                    _, cut = client.preview(jid)
+                    if cut >= watermark:
+                        break
+                except ServiceError as e:
+                    if e.status != 409:          # 409: not started yet
+                        raise
+                assert time.time() - fed_at < 60, "preview never caught up"
+                time.sleep(0.01)
+            lags.append(time.time() - fed_at)
+        client.eof(jid)
+        snap = client.wait(jid, timeout=120)
+        assert snap["state"] == "done", snap
+        lags.sort()
+        return {
+            "config": {"n_det": n_det, "n_angles": n_angles,
+                       "chunk": chunk, "rate": rate},
+            "n_chunks": len(lags),
+            "stream_wall_s": round(snap["finished_at"]
+                                   - snap["submitted_at"], 3),
+            "ingest_to_preview_p50_s": round(_percentile(lags, 0.5), 4),
+            "ingest_to_preview_p99_s": round(_percentile(lags, 0.99), 4),
+            "metrics_missing": check_metrics_complete(url),
+        }
+    finally:
+        svc.stop()
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -207,6 +267,8 @@ def main(argv=None) -> int:
                    n_workers=args.workers or 4, n_det=48, n_angles=48)
     result = run_load(sweep_every=args.sweep_every,
                       sweep_points=args.sweep_points, **cfg)
+    result["streaming"] = run_stream(n_det=cfg["n_det"],
+                                     n_angles=cfg["n_angles"])
 
     with open(args.out, "w") as fh:
         json.dump(result, fh, indent=2)
@@ -218,9 +280,14 @@ def main(argv=None) -> int:
           f"queue depth max {result['queue_depth_max']}, "
           f"{result['leases_expired']} lease expiries "
           f"-> {args.out}")
-    if result["metrics_missing"]:
-        print("MISSING from /metrics: "
-              f"{result['metrics_missing']}", file=sys.stderr)
+    sm = result["streaming"]
+    print(f"streaming: {sm['n_chunks']} chunks, ingest-to-preview "
+          f"p50 {sm['ingest_to_preview_p50_s']}s, "
+          f"p99 {sm['ingest_to_preview_p99_s']}s")
+    missing = sorted(set(result["metrics_missing"])
+                     | set(sm["metrics_missing"]))
+    if missing:
+        print(f"MISSING from /metrics: {missing}", file=sys.stderr)
         return 1
     return 0
 

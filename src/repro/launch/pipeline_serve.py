@@ -32,6 +32,17 @@ Three modes:
           sweep --demo-chain --param sinogram_filter.cutoff=0.4:1.0:7 \\
           --metric sharpness --wait --out sweep.npy
 
+  and live streaming acquisition (``docs/streaming.md``) — submit a
+  v2 streaming job, feed frames as they "arrive", peek at the partial
+  reconstruction before EOF::
+
+      PYTHONPATH=src python -m repro.launch.pipeline_serve client \\
+          submit --demo-chain --streaming --job-id scan0
+      PYTHONPATH=src python -m repro.launch.pipeline_serve client \\
+          ingest scan0 --synthetic --chunk 8 --rate 4
+      PYTHONPATH=src python -m repro.launch.pipeline_serve client \\
+          preview scan0 --out live.npy
+
 * **multi-host demo** — ``--workers-remote N`` runs the broker and N
   detached worker *subprocesses* pulling jobs from it over HTTP (one
   queue, many worker processes — see ``docs/worker-protocol.md``)::
@@ -155,6 +166,14 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="broker mode: workers write results straight "
                          "into the broker's results_dir instead of "
                          "uploading over HTTP")
+    ap.add_argument("--token", default=None,
+                    help="--serve: require this bearer token on every "
+                         "mutating request (Authorization: Bearer ...); "
+                         "spawned workers get it automatically")
+    ap.add_argument("--trace-spool", default=None, metavar="DIR",
+                    help="--serve: spool evicted terminal-job traces "
+                         "to this directory (bounded ring; "
+                         "docs/observability.md)")
     return ap
 
 
@@ -180,14 +199,15 @@ def _serve_main(args) -> None:
     if args.workers_remote is not None:       # broker mode
         service = PipelineService(
             workers_remote=True, max_pending=args.max_pending,
-            max_history=args.max_history, lease_ttl=args.lease_ttl)
+            max_history=args.max_history, lease_ttl=args.lease_ttl,
+            token=args.token, trace_spool=args.trace_spool)
         host, port = service.serve(host=args.host, port=args.serve,
                                    block=False)
         workers = spawn_local_workers(
             f"http://{host}:{port}", args.workers_remote,
             transport=args.transport,
             checkpoint_dir=args.checkpoint_dir,
-            shared_fs=args.shared_fs)
+            shared_fs=args.shared_fs, token=args.token)
         print(f"pipeline broker listening on http://{host}:{port}  "
               f"({len(workers)} local worker processes, lease_ttl="
               f"{args.lease_ttl}s; attach more with `python -m "
@@ -202,7 +222,8 @@ def _serve_main(args) -> None:
             n_workers=args.workers, max_pending=args.max_pending,
             max_history=args.max_history, checkpoints=checkpoints,
             batch_identical=args.batch, batch_max=args.batch_max,
-            fuse=args.fuse, compile_cache=cache)
+            fuse=args.fuse, compile_cache=cache,
+            token=args.token, trace_spool=args.trace_spool)
         host, port = service.serve(host=args.host, port=args.serve,
                                    block=False)
         print(f"pipeline service listening on http://{host}:{port}  "
@@ -341,6 +362,8 @@ def _client_parser() -> argparse.ArgumentParser:
         description="Talk to a running pipeline service over HTTP.")
     ap.add_argument("--url", default="http://127.0.0.1:8973",
                     help="service base URL")
+    ap.add_argument("--token", default=None,
+                    help="bearer token for a token-armed service")
     sub = ap.add_subparsers(dest="action", required=True)
 
     s = sub.add_parser("submit", help="POST a process list")
@@ -349,6 +372,10 @@ def _client_parser() -> argparse.ArgumentParser:
     s.add_argument("--demo-chain", action="store_true",
                    help="submit the standard synthetic chain instead of "
                         "a spec file")
+    s.add_argument("--streaming", action="store_true",
+                   help="submit as a v2 STREAMING job: the loader's "
+                        "frames arrive over `client ingest`, not from "
+                        "the spec (docs/streaming.md)")
     s.add_argument("--n-det", type=int, default=48)
     s.add_argument("--n-angles", type=int, default=48)
     s.add_argument("--n-rows", type=int, default=2)
@@ -357,6 +384,41 @@ def _client_parser() -> argparse.ArgumentParser:
     s.add_argument("--job-id", default=None)
     s.add_argument("--wait", action="store_true",
                    help="poll until the job is terminal")
+
+    ing = sub.add_parser(
+        "ingest", help="stream frames into a streaming job "
+                       "(docs/streaming.md)",
+        description="POST frame slabs to a v2 streaming job in arrival "
+                    "order, optionally rate-limited, then mark EOF.")
+    ing.add_argument("job_id")
+    ing.add_argument("--npy", metavar="FILE", default=None,
+                     help=".npy frame stack (axis 0 = arrival axis)")
+    ing.add_argument("--synthetic", action="store_true",
+                     help="generate the standard synthetic scan's raw "
+                          "frames (must match the submitted chain's "
+                          "--n-det/--n-angles/--n-rows/--seed)")
+    ing.add_argument("--n-det", type=int, default=48)
+    ing.add_argument("--n-angles", type=int, default=48)
+    ing.add_argument("--n-rows", type=int, default=2)
+    ing.add_argument("--seed", type=int, default=0)
+    ing.add_argument("--chunk", type=int, default=8,
+                     help="frames per POST")
+    ing.add_argument("--rate", type=float, default=0.0, metavar="HZ",
+                     help="chunk posts per second (0 = full speed)")
+    ing.add_argument("--start", type=int, default=0,
+                     help="index of the first frame being sent (resume "
+                          "an interrupted feed from the watermark)")
+    ing.add_argument("--eof", action=argparse.BooleanOptionalAction,
+                     default=True,
+                     help="post EOF after the last chunk (--no-eof to "
+                          "keep the stream open)")
+
+    pv = sub.add_parser(
+        "preview", help="download the current partial reconstruction")
+    pv.add_argument("job_id")
+    pv.add_argument("--out", metavar="FILE", default=None,
+                    help="write the npy here (default: "
+                         "<job_id>-preview.npy)")
 
     sw = sub.add_parser(
         "sweep", help="POST a parameter sweep (docs/sweeps.md)",
@@ -466,9 +528,39 @@ def _parse_sweep_axis(s: str) -> dict:
     return axis
 
 
+def _ingest_main(client: PipelineClient, args) -> None:
+    """Feed a frame stack into a streaming job chunk by chunk."""
+    if args.npy:
+        frames = np.load(args.npy)
+    elif args.synthetic:
+        # materialise exactly what the submitted chain's loader
+        # declares, so the streamed run is bit-identical to batch
+        pl = standard_chain(n_det=args.n_det, n_angles=args.n_angles,
+                            n_rows=args.n_rows, seed=args.seed)
+        entry = pl.entries[0]
+        loader = entry.cls(**entry.params,
+                           in_datasets=list(entry.in_datasets),
+                           out_datasets=list(entry.out_datasets))
+        frames = np.asarray(loader.load()[0].materialise())
+    else:
+        raise SystemExit("ingest needs --npy FILE or --synthetic")
+    start = args.start
+    for lo in range(0, frames.shape[0], args.chunk):
+        chunk = frames[lo:lo + args.chunk]
+        reply = client.ingest(args.job_id, chunk, start)
+        start = reply["watermark"]
+        print(f"  fed frames [{reply['start']}, "
+              f"{reply['start'] + reply['count']}) -> watermark "
+              f"{start}", flush=True)
+        if args.rate > 0:
+            time.sleep(1.0 / args.rate)
+    if args.eof:
+        print(json.dumps(client.eof(args.job_id), indent=2))
+
+
 def _client_main(argv: list[str]) -> None:
     args = _client_parser().parse_args(argv)
-    client = PipelineClient(args.url)
+    client = PipelineClient(args.url, token=args.token)
     try:
         if args.action == "sweep":
             if args.spec:
@@ -517,11 +609,21 @@ def _client_main(argv: list[str]) -> None:
                     n_rows=args.n_rows, seed=args.seed))
             else:
                 raise SystemExit("submit needs --spec FILE or --demo-chain")
+            if args.streaming:
+                spec = {**spec, "version": 2, "streaming": True}
             job_id = client.submit(spec, priority=args.priority,
                                    job_id=args.job_id)
             print(job_id)
             if args.wait:
                 print(json.dumps(client.wait(job_id), indent=2))
+        elif args.action == "ingest":
+            _ingest_main(client, args)
+        elif args.action == "preview":
+            arr, cut = client.preview(args.job_id)
+            out = args.out or f"{args.job_id}-preview.npy"
+            np.save(out, arr)
+            print(f"{out}: shape={arr.shape} dtype={arr.dtype} "
+                  f"(first {cut} frames folded in)")
         elif args.action == "status":
             print(json.dumps(client.status(args.job_id), indent=2))
         elif args.action == "wait":

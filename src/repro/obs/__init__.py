@@ -4,11 +4,12 @@
 from .metrics import (CATALOGUE, QUANTILES, Counter, Gauge, Histogram,
                       MetricsRegistry, catalogue_names, prometheus_name,
                       register_catalogue)
-from .trace import (Span, Trace, current_trace, new_span_id, new_trace_id,
-                    render_gantt, use_trace)
+from .trace import (Span, Trace, TraceSpool, current_trace, new_span_id,
+                    new_trace_id, render_gantt, use_trace)
 
 __all__ = [
-    "Span", "Trace", "current_trace", "use_trace", "new_trace_id",
+    "Span", "Trace", "TraceSpool", "current_trace", "use_trace",
+    "new_trace_id",
     "new_span_id", "render_gantt", "Counter", "Gauge", "Histogram",
     "MetricsRegistry", "register_catalogue", "catalogue_names",
     "prometheus_name", "CATALOGUE", "QUANTILES",

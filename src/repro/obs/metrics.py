@@ -287,6 +287,15 @@ CATALOGUE: tuple[tuple[str, str, str], ...] = (
      "submit-to-dispatch queue wait, seconds"),
     ("plugin.wall", "histogram",
      "per-plugin-step wall time across all jobs, seconds"),
+    # -- streaming acquisition (docs/streaming.md) ----------------------
+    ("stream.frames.ingested", "counter",
+     "frames accepted over POST /jobs/{id}/frames"),
+    ("jobs.parked", "counter",
+     "streaming-job leases ended early for frame starvation (parked)"),
+    ("stream.ingest_lag_s", "histogram",
+     "frame arrival to executor consumption lag, seconds"),
+    ("stream.window_latency_s", "histogram",
+     "wall time of one arrival-driven pump over new frames, seconds"),
 )
 
 

@@ -32,6 +32,9 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import dataclasses
+import hashlib
+import json
+import os
 import threading
 import time
 import uuid
@@ -261,6 +264,85 @@ def use_trace(trace: Trace | None):
         yield trace
     finally:
         _current.reset(token)
+
+
+# -- retention ----------------------------------------------------------
+class TraceSpool:
+    """Bounded on-disk ring of terminal-job traces.
+
+    ``max_history`` pruning evicts a terminal :class:`~..service.job.Job`
+    — and with it the in-RAM trace.  The service registers a queue evict
+    hook that spools the trace here first, so ``GET /jobs/{id}/trace``
+    keeps answering for jobs whose results are long gone.  One JSON file
+    per job (filename = sha1 of the job id, so arbitrary ids stay
+    filesystem-safe), written atomically (tmp + rename); past
+    ``max_traces`` the oldest files (mtime) are deleted — a ring, not a
+    leak.
+    """
+
+    def __init__(self, root: str, max_traces: int = 256):
+        """Args:
+            root: spool directory (created if missing).
+            max_traces: retained trace files; oldest-by-mtime beyond
+                this are evicted at each :meth:`put`.
+        """
+        if max_traces < 1:
+            raise ValueError(f"max_traces must be >= 1, got {max_traces}")
+        self.root = root
+        self.max_traces = max_traces
+        self._lock = threading.Lock()
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, job_id: str) -> str:
+        digest = hashlib.sha1(job_id.encode()).hexdigest()
+        return os.path.join(self.root, f"{digest}.trace.json")
+
+    def put(self, job_id: str, trace: Trace | None) -> None:
+        """Spool one job's trace (overwrites any earlier spool of the
+        same id), then evict past ``max_traces``.  A None/empty trace is
+        spooled too — "this job existed" beats a 404."""
+        payload = {"job_id": job_id,
+                   **(trace.to_wire() if trace is not None
+                      else {"trace_id": "", "spans": []})}
+        path = self._path(job_id)
+        tmp = path + ".tmp"
+        with self._lock:
+            with open(tmp, "w") as fh:
+                json.dump(payload, fh)
+            os.replace(tmp, path)
+            self._evict_locked()
+
+    def get(self, job_id: str) -> dict[str, Any] | None:
+        """The spooled wire payload (``{"job_id", "trace_id", "spans"}``)
+        or None — absent and corrupt both read as "not spooled"."""
+        try:
+            with open(self._path(job_id)) as fh:
+                return json.load(fh)
+        except (FileNotFoundError, json.JSONDecodeError, OSError):
+            return None
+
+    def _evict_locked(self) -> None:
+        try:
+            files = [os.path.join(self.root, f)
+                     for f in os.listdir(self.root)
+                     if f.endswith(".trace.json")]
+        except OSError:
+            return
+        if len(files) <= self.max_traces:
+            return
+        files.sort(key=lambda p: (os.path.getmtime(p), p))
+        for p in files[:len(files) - self.max_traces]:
+            try:
+                os.remove(p)
+            except OSError:
+                pass                      # raced with another evictor
+
+    def __len__(self) -> int:
+        try:
+            return sum(1 for f in os.listdir(self.root)
+                       if f.endswith(".trace.json"))
+        except OSError:
+            return 0
 
 
 # -- rendering ----------------------------------------------------------

@@ -166,6 +166,14 @@ class CheckpointStore:
             "required": sorted(required),
             "datasets": entries,
         }
+        stream = runner.stream_state()
+        if stream is not None:
+            # streaming job (docs/streaming.md): persist the ingest
+            # watermark so a resume re-fetches frames from where this
+            # worker stopped.  Window cursors are NOT persisted — the
+            # restored runner recomputes the windowed head from the
+            # saved prefix (deterministic per-frame kernels).
+            manifest["stream"] = stream
         tmp = self._manifest_path(job_id) + ".tmp"
         with open(tmp, "w") as fh:
             json.dump(manifest, fh, indent=2)
@@ -237,6 +245,7 @@ class CheckpointStore:
                 and prev.get("produced_by") == ds.produced_by
                 and prev.get("shape") == list(ds.shape)
                 and prev.get("dtype") == str(np.dtype(ds.dtype))
+                and ds.available_extent is None
                 and os.path.exists(path)):
             entry.update(file=prev["file"], format="chunked",
                          layout=list(prev["layout"]), chunks_written=[])
@@ -286,7 +295,11 @@ class CheckpointStore:
                 or man.get("step_labels") != runner.step_labels()):
             return 0
         step = int(man["completed_steps"])
-        if not 0 < step <= runner.n_steps:
+        stream = man.get("stream")
+        # a streaming checkpoint at step 0 still carries real state (the
+        # ingested frame prefix + watermark) and is worth restoring
+        lo = 0 if stream is not None else 1
+        if not lo <= step <= runner.n_steps:
             return 0
         entries = {e["name"]: e for e in man["datasets"]}
         required = runner.required_live_names(step)
@@ -296,6 +309,12 @@ class CheckpointStore:
                 f"checkpoint for job {job_id!r} at step {step} is missing "
                 f"required dataset(s) {missing}; a resume would read "
                 f"garbage — clear the checkpoint to restart from scratch")
+        if stream is not None:
+            # BEFORE skip_to/entry loading: enabling streaming swaps the
+            # loader thunk for zeros, which would clobber loaded data if
+            # done after
+            runner.enable_streaming(dataset=stream["dataset"],
+                                    axis=stream["axis"])
         runner.skip_to(step)
         d = self._dir(job_id)
         for name, ent in entries.items():
@@ -310,6 +329,8 @@ class CheckpointStore:
                 raise CheckpointError(
                     f"checkpoint for job {job_id!r}: required dataset "
                     f"{name!r} is unreadable ({e})") from e
+        if stream is not None:
+            runner.restore_stream_state(stream)
         return step
 
     def _load_entry(self, d: str, ent: dict, ds: DataSet) -> None:

@@ -46,32 +46,41 @@ class ServiceError(RuntimeError):
 
 
 class PipelineClient:
-    def __init__(self, base_url: str, timeout: float = 30.0):
+    def __init__(self, base_url: str, timeout: float = 30.0,
+                 token: str | None = None):
         """Args:
             base_url: e.g. ``http://127.0.0.1:8973`` (no trailing slash
                 needed).
             timeout: per-request socket timeout in seconds.
+            token: shared secret for a token-armed server — sent as
+                ``Authorization: Bearer <token>`` on every request
+                (mutating verbs are 401 without it).
         """
         self.base_url = base_url.rstrip("/")
         self.timeout = timeout
+        self.token = token
 
     # -- transport ------------------------------------------------------
     def _request(self, method: str, path: str,
                  body: dict | None = None, raw: bool = False,
                  raw_body: bytes | None = None,
-                 headers: dict[str, str] | None = None) -> Any:
+                 headers: dict[str, str] | None = None,
+                 with_headers: bool = False) -> Any:
         if raw_body is not None:
             data = raw_body
             hdrs = {"Content-Type": "application/octet-stream"}
         else:
             data = None if body is None else json.dumps(body).encode()
             hdrs = {"Content-Type": "application/json"} if data else {}
+        if self.token is not None:
+            hdrs["Authorization"] = f"Bearer {self.token}"
         hdrs.update(headers or {})
         req = urllib.request.Request(
             self.base_url + path, data=data, method=method, headers=hdrs)
         try:
             with urllib.request.urlopen(req, timeout=self.timeout) as resp:
                 payload = resp.read()
+                resp_headers = dict(resp.headers)
         except urllib.error.HTTPError as e:
             detail = e.read()
             try:
@@ -79,7 +88,8 @@ class PipelineClient:
             except (json.JSONDecodeError, KeyError, TypeError):
                 message = detail.decode(errors="replace") or e.reason
             raise ServiceError(e.code, message) from None
-        return payload if raw else json.loads(payload)
+        out = payload if raw else json.loads(payload)
+        return (out, resp_headers) if with_headers else out
 
     # -- endpoints ------------------------------------------------------
     def submit(self, process_list: ProcessList | dict | list, *,
@@ -176,6 +186,62 @@ class PipelineClient:
         payload = self._request(
             "GET", f"/jobs/{quote(job_id, safe='')}/result{q}", raw=True)
         return np.load(io.BytesIO(payload))
+
+    # -- streaming acquisition (docs/streaming.md) -----------------------
+    def ingest(self, job_id: str, frames: np.ndarray,
+               start: int) -> dict[str, Any]:
+        """Feed one contiguous frame chunk to a streaming job
+        (``POST /jobs/{id}/frames``; frames on axis 0, raw ``.npy`` on
+        the wire).  ``start`` must equal the current watermark.
+
+        Returns: ``{"start", "count", "watermark"}``.
+        Raises:
+            ServiceError: 404 unknown job; 409 not a streaming job,
+                out-of-order/duplicate chunk, after EOF, or terminal.
+        """
+        buf = io.BytesIO()
+        np.save(buf, np.ascontiguousarray(frames))
+        return self._request(
+            "POST", f"/jobs/{quote(job_id, safe='')}/frames",
+            raw_body=buf.getvalue(),
+            headers={"X-Start-Frame": str(int(start))})
+
+    def eof(self, job_id: str) -> dict[str, Any]:
+        """Declare end of acquisition (``POST /jobs/{id}/eof``).
+        Raises ServiceError 409 on a second EOF or a non-streaming
+        job."""
+        return self._request(
+            "POST", f"/jobs/{quote(job_id, safe='')}/eof", body={})
+
+    def preview(self, job_id: str) -> tuple[np.ndarray, int]:
+        """The partial reconstruction over the frames ingested so far
+        (``GET /jobs/{id}/preview``) as ``(array, frames_covered)``.
+        Raises ServiceError 409 while no preview can be produced yet."""
+        payload, hdrs = self._request(
+            "GET", f"/jobs/{quote(job_id, safe='')}/preview",
+            raw=True, with_headers=True)
+        return (np.load(io.BytesIO(payload)),
+                int(hdrs.get("X-Watermark", 0)))
+
+    def fetch_frames(self, job_id: str, start: int = 0,
+                     max_frames: int | None = None
+                     ) -> tuple[np.ndarray | None, int, bool, int]:
+        """Pull buffered frames from ``start`` on
+        (``GET /jobs/{id}/frames``) — how a broker-mode worker consumes
+        the stream.  Returns ``(frames | None, start, eof, watermark)``;
+        frames is None when nothing at-or-after ``start`` has arrived."""
+        q = f"?start={int(start)}"
+        if max_frames is not None:
+            q += f"&max={int(max_frames)}"
+        payload, hdrs = self._request(
+            "GET", f"/jobs/{quote(job_id, safe='')}/frames{q}",
+            raw=True, with_headers=True)
+        eof = hdrs.get("X-EOF") == "1"
+        watermark = int(hdrs.get("X-Watermark", 0))
+        if not payload or hdrs.get("X-Count") == "0":
+            return None, int(start), eof, watermark
+        return (np.load(io.BytesIO(payload)),
+                int(hdrs.get("X-Start", start)), eof, watermark)
 
     # -- parameter sweeps (docs/sweeps.md) -------------------------------
     def sweep(self, process_list: ProcessList | dict | list,

@@ -9,11 +9,15 @@ checkpoint store validate against.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import enum
 import json
+import threading
 import time
 from typing import Any
+
+import numpy as np
 
 from ..core.framework import PluginRunner
 from ..core.plugin import _is_jsonable
@@ -66,6 +70,71 @@ def chain_signature(process_list: ProcessList) -> tuple:
     return tuple(sig)
 
 
+class StreamState:
+    """Server-side frame buffer for one streaming job (docs/streaming.md).
+
+    The HTTP front end appends contiguous frame chunks under ``lock``
+    and notifies ``cond``; consumers (the scheduler's driver thread, or
+    a broker-mode worker polling ``GET /jobs/{id}/frames``) read any
+    suffix with :meth:`fetch`.  Chunks are retained until the job is
+    terminal so a lease expiry + checkpoint-resume on another worker can
+    re-fetch from its restored watermark.  ``exec_lock`` serialises the
+    in-process runner's pump loop against on-demand previews."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.cond = threading.Condition(self.lock)
+        #: serialises runner execution vs. preview (scheduler mode)
+        self.exec_lock = threading.Lock()
+        self.watermark = 0            # frames accepted so far
+        self.eof = False
+        self._starts: list[int] = []  # chunk start frames (sorted)
+        self._chunks: list[np.ndarray] = []
+        self._arrived: list[float] = []   # per-chunk ingest time (epoch)
+
+    def append(self, frames: np.ndarray, start: int) -> int:
+        """Accept a contiguous chunk; the caller validates ordering and
+        holds ``lock``.  Returns the new watermark."""
+        self._starts.append(start)
+        self._chunks.append(frames)
+        self._arrived.append(time.time())
+        self.watermark = start + frames.shape[0]
+        return self.watermark
+
+    def fetch(self, start: int, max_frames: int | None = None
+              ) -> tuple[np.ndarray | None, int]:
+        """Frames from ``start`` (up to ``max_frames``), or (None,
+        start) when nothing new has arrived.  Caller holds ``lock``."""
+        if start >= self.watermark:
+            return None, start
+        i = bisect.bisect_right(self._starts, start) - 1
+        pieces: list[np.ndarray] = []
+        got = 0
+        want = (self.watermark - start if max_frames is None
+                else min(max_frames, self.watermark - start))
+        while i < len(self._chunks) and got < want:
+            c, s = self._chunks[i], self._starts[i]
+            lo = max(0, start + got - s)
+            hi = min(c.shape[0], lo + (want - got))
+            pieces.append(c[lo:hi])
+            got += hi - lo
+            i += 1
+        return np.concatenate(pieces, axis=0), start
+
+    def arrival_time(self, frame: int) -> float | None:
+        """Ingest timestamp of the chunk containing ``frame`` — the
+        broker derives ingest lag (arrival -> consumption) from it."""
+        if not self._starts or frame >= self.watermark:
+            return None
+        i = bisect.bisect_right(self._starts, frame) - 1
+        return self._arrived[i] if i >= 0 else None
+
+    def drop_buffers(self) -> None:
+        """Release retained chunks (job terminal)."""
+        with self.lock:
+            self._starts, self._chunks, self._arrived = [], [], []
+
+
 @dataclasses.dataclass
 class Job:
     """One submitted process list, tracked from admission to completion.
@@ -116,6 +185,17 @@ class Job:
     #: last requeue time (lease expiry) — queue.wait spans for attempt
     #: >1 measure from here, not from submission
     requeued_at: float | None = None
+    # -- streaming (docs/streaming.md) ----------------------------------
+    #: spec had ``"streaming": true``: the loader dataset is fed over
+    #: POST /jobs/{id}/frames instead of being complete at step 0
+    streaming: bool = False
+    #: server-side frame buffer (set at submission for streaming jobs)
+    stream: StreamState | None = None
+    #: highest frame index the executor reported consuming (broker: via
+    #: the heartbeat's ``ingest_watermark``; scheduler: set directly)
+    frames_consumed: int = 0
+    #: frames covered by the newest uploaded preview (broker mode)
+    preview_watermark: int = 0
 
     def __post_init__(self):
         if not self.chain_sig:
@@ -124,6 +204,21 @@ class Job:
             self.trace_id = new_trace_id()
         if self.trace is None:
             self.trace = Trace(self.trace_id)
+        if not self.streaming and getattr(self.process_list, "streaming",
+                                          False):
+            self.streaming = True
+        if self.streaming and self.stream is None:
+            self.stream = StreamState()
+
+    def stream_ready(self) -> bool:
+        """Queue-eligibility gate: a streaming job may only be
+        dispatched/leased while it has work — unconsumed frames or the
+        EOF marker.  While starved of frames it parks in the queue
+        without burning a lease (docs/streaming.md)."""
+        if not self.streaming:
+            return True
+        st = self.stream
+        return st.eof or st.watermark > self.frames_consumed
 
     # ------------------------------------------------------------------
     @property
@@ -149,7 +244,7 @@ class Job:
         failure ``error`` if any, the broker-mode ``worker_id`` /
         ``attempt`` (attempt >1 = requeued after a lease expiry), and
         the JSON-able subset of ``metadata``."""
-        return {"job_id": self.job_id, "state": self.state.value,
+        snap = {"job_id": self.job_id, "state": self.state.value,
                 "status": self.status, "priority": self.priority,
                 "plugin_index": self.plugin_index,
                 "n_plugins": self.n_plugins,
@@ -162,3 +257,10 @@ class Job:
                 "worker_id": self.worker_id, "attempt": self.attempt,
                 "metadata": {k: v for k, v in self.metadata.items()
                              if _is_jsonable(v)}}
+        if self.streaming:
+            snap["streaming"] = True
+            snap["ingest_watermark"] = self.stream.watermark
+            snap["frames_consumed"] = self.frames_consumed
+            snap["eof"] = self.stream.eof
+            snap["preview_watermark"] = self.preview_watermark
+        return snap

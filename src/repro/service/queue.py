@@ -220,24 +220,19 @@ class JobQueue:
     # -- dispatch -------------------------------------------------------
     def _pop_locked(self, predicate: Callable[[Job], bool] | None = None
                     ) -> Job | None:
-        if predicate is None:
-            while self._heap:
-                _, _, job = heapq.heappop(self._heap)
-                if job.state is JobState.QUEUED:  # skip cancelled entries
-                    job.state = JobState.CHECKING  # dispatched: uncancellable
-                    return job
-            return None
-        # Capability-filtered pop: scan the FULL dispatch order
-        # (-priority, seq) and take the first matching queued job,
-        # leaving non-matching QUEUED jobs exactly where they are.  This
-        # is the starvation-safe shape: an unmatchable high-priority
-        # head never shadows a matchable lower-priority job (we keep
-        # scanning past it), and because skipped entries are not
-        # popped/re-pushed their position — and FIFO fairness — is
-        # preserved for the worker that CAN run them.  Terminal
-        # tombstones (cancelled while queued) are discarded as the scan
-        # passes them; only the heappop path above would otherwise ever
-        # reap them, and a broker only uses this path.
+        # Eligibility-filtered pop: scan the FULL dispatch order
+        # (-priority, seq) and take the first eligible queued job —
+        # matching the capability ``predicate`` AND, for streaming jobs,
+        # with work available (:meth:`Job.stream_ready`: a frame-starved
+        # streaming job keeps its queue position without burning a
+        # dispatch slot or lease until frames/EOF arrive and ``kick()``
+        # re-wakes the waiters).  Non-eligible QUEUED jobs are left
+        # exactly where they are: an unmatchable high-priority head
+        # never shadows a matchable lower-priority job (we keep scanning
+        # past it), and because skipped entries are not popped/re-pushed
+        # their position — and FIFO fairness — is preserved for the
+        # worker that CAN run them.  Terminal tombstones (cancelled
+        # while queued) are discarded as the scan passes them.
         taken = None
         dead: list[tuple] = []
         for entry in sorted(self._heap, key=lambda e: (e[0], e[1])):
@@ -245,7 +240,8 @@ class JobQueue:
             if job.state is not JobState.QUEUED:
                 dead.append(entry)
                 continue
-            if predicate(job):
+            if job.stream_ready() and (predicate is None
+                                       or predicate(job)):
                 job.state = JobState.CHECKING
                 taken = entry
                 break
@@ -256,6 +252,14 @@ class JobQueue:
             self._heap = [e for e in self._heap if id(e) not in drop]
             heapq.heapify(self._heap)
         return None if taken is None else taken[2]
+
+    def kick(self) -> None:
+        """Wake every blocked :meth:`get`/:meth:`get_batch` caller so it
+        re-evaluates job eligibility — called by the ingest endpoints
+        when frames or EOF arrive for a parked streaming job (its
+        ``stream_ready()`` may just have flipped to True)."""
+        with self._lock:
+            self._not_empty.notify_all()
 
     def get(self, timeout: float | None = None,
             predicate: Callable[[Job], bool] | None = None) -> Job | None:
@@ -289,10 +293,15 @@ class JobQueue:
         heap-array order — so gang members join by priority then FIFO
         and a truncated gang takes the jobs whose turn it actually is.
         ``predicate`` restricts both the head and the gang members to
-        jobs a capability-filtered worker can run (lease path)."""
+        jobs a capability-filtered worker can run (lease path).
+        Streaming jobs never gang — their pace is set by frame arrival,
+        not by the compiled step loop — so a streaming head pops solo
+        and streaming members are skipped."""
         head = self.get(timeout, predicate)
         if head is None:
             return []
+        if head.streaming:
+            return [head]
         match = match or (lambda a, b: a.chain_sig == b.chain_sig)
         batch = [head]
         with self._lock:
@@ -300,7 +309,8 @@ class JobQueue:
                 if len(batch) >= max_jobs:
                     break
                 job = entry[2]
-                if job.state is JobState.QUEUED and match(head, job) \
+                if job.state is JobState.QUEUED and not job.streaming \
+                        and match(head, job) \
                         and (predicate is None or predicate(job)):
                     job.state = JobState.CHECKING
                     batch.append(job)

@@ -48,6 +48,10 @@ from .wire import WireError, chain_plugin_names, to_spec
 def _observe_terminal(metrics: MetricsRegistry | None, job: Job) -> None:
     """Fold one terminal job into the registry: outcome counter,
     end-to-end latency, and per-plugin process wall from its trace."""
+    if job.stream is not None:
+        # every terminal path funnels through here — the retained frame
+        # chunks (kept for lease-expiry refetch) are no longer needed
+        job.stream.drop_buffers()
     if metrics is None:
         return
     if job.state is JobState.DONE:
@@ -241,11 +245,66 @@ class PipelineScheduler:
                         job.resumed_from = self.checkpoints.restore(
                             job.job_id, runner)
                 job.n_plugins = runner.n_steps
-                self._drive(job, runner)
+                if job.streaming:
+                    self._drive_stream(job, runner)
+                else:
+                    self._drive(job, runner)
         except Exception as e:
             self._fail(job, e)
         finally:
             self._finish([job])
+
+    def _drive_stream(self, job: Job, runner: PluginRunner) -> None:
+        """Arrival-driven execution (docs/streaming.md): feed frames
+        from the job's server-side buffer as they land, pump the runner
+        over each new slab, checkpoint after progress, finish once every
+        group has completed.  ``stream.exec_lock`` serialises runner
+        access against on-demand previews."""
+        st = job.stream
+        # idempotent — a checkpoint restore may already have enabled it
+        # (and restored the ingested prefix + watermark)
+        runner.enable_streaming()
+        state = runner.stream_state()
+        total, fed = state["total"], state["ingested"]
+        job.frames_consumed = fed
+        job.plugin_index = runner.current_step
+        job.state = JobState.RUNNING
+        while runner.current_step < runner.n_steps:
+            with st.lock:
+                chunk, _ = st.fetch(fed)
+                eof = st.eof
+                arrived = (st.arrival_time(fed) if chunk is not None
+                           else None)
+            if chunk is None:
+                if eof and fed < total:
+                    raise RuntimeError(
+                        f"stream ended at frame {fed} but the loader "
+                        f"declares {total} frames")
+                with st.cond:       # starved: wait for ingest/EOF
+                    if st.watermark <= fed and not st.eof:
+                        st.cond.wait(timeout=0.25)
+                continue
+            with st.exec_lock:
+                fed = runner.feed(chunk, fed)
+                if eof and fed == total:
+                    runner.mark_eof()
+                t0 = time.time()
+                runner.pump()
+            if self.metrics is not None:
+                self.metrics.histogram("stream.window_latency_s") \
+                    .observe(time.time() - t0)
+                if arrived is not None:
+                    self.metrics.histogram("stream.ingest_lag_s") \
+                        .observe(max(0.0, time.time() - arrived))
+            job.frames_consumed = fed
+            job.plugin_index = runner.current_step
+            if self.checkpoints is not None:
+                with job.trace.span("checkpoint.save"):
+                    self.checkpoints.save(job.job_id, runner)
+        runner.finalise()
+        job.state = JobState.DONE
+        if self.checkpoints is not None:
+            self.checkpoints.clear(job.job_id)
 
     # -- gang execution -------------------------------------------------
     def _run_gang(self, jobs: list[Job]) -> None:
@@ -747,9 +806,42 @@ class WorkerBroker:
                                            body["resumed_from"])
                 if isinstance(body.get("checkpoint"), str):
                     job.metadata["checkpoint"] = body["checkpoint"]
+                if isinstance(body.get("ingest_watermark"), int) and \
+                        job.stream is not None:
+                    self._fold_ingest_locked(job,
+                                             body["ingest_watermark"], now)
+                if isinstance(body.get("preview_watermark"), int):
+                    job.preview_watermark = max(job.preview_watermark,
+                                                body["preview_watermark"])
+                if body.get("park") and job.streaming:
+                    # starved streaming worker: hand the job back to the
+                    # queue (a checkpoint was just reported) so the
+                    # worker slot frees up instead of burning the lease
+                    # polling.  stream_ready() keeps it unleasable until
+                    # frames or EOF arrive.
+                    self._end_lease_locked(job, lease, "parked", now)
+                    self._drop_lease_locked(job_id, worker_id)
+                    if self.metrics is not None:
+                        self.metrics.counter("jobs.parked").inc()
+                    self.queue.requeue(job)
+                    return {"verdict": "parked"}
                 return {"verdict": "ok", "lease_ttl": self.lease_ttl}
         self.queue.notify_terminal()
         return verdict
+
+    def _fold_ingest_locked(self, job: Job, watermark: int,
+                            now: float) -> None:
+        """Heartbeat carried the worker's consumption watermark: advance
+        ``frames_consumed`` (monotone) and derive the ingest-lag sample
+        (newest consumed frame's arrival -> this heartbeat)."""
+        prev = job.frames_consumed
+        job.frames_consumed = max(prev, watermark)
+        if self.metrics is not None and watermark > prev:
+            with job.stream.lock:
+                arrived = job.stream.arrival_time(watermark - 1)
+            if arrived is not None:
+                self.metrics.histogram("stream.ingest_lag_s").observe(
+                    max(0.0, now - arrived))
 
     # -- results --------------------------------------------------------
     def _spool_dir(self, job_id: str) -> str:

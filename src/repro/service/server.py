@@ -29,6 +29,14 @@ Endpoints (JSON unless noted; see ``docs/service.md``):
 ``GET /jobs/{id}/trace``    the job's cross-process span timeline
                             (``?format=text`` renders an ASCII gantt;
                             ``docs/observability.md``)
+``POST /jobs/{id}/frames``  streaming ingest: one raw ``.npy`` chunk +
+                            ``X-Start-Frame`` header (409 on
+                            out-of-order/duplicate; docs/streaming.md)
+``POST /jobs/{id}/eof``     end of acquisition for a streaming job
+``GET /jobs/{id}/frames``   buffered frames from ``?start=`` on — how
+                            broker-mode workers pull the stream
+``GET /jobs/{id}/preview``  partial reconstruction over the frames
+                            ingested so far (before EOF)
 ``GET /metrics``            Prometheus text exposition of the metrics
                             registry (also JSON under ``/stats``)
 ``GET /stats``              scheduler + compile-cache + metrics counters
@@ -44,6 +52,7 @@ materialised before the write.
 """
 from __future__ import annotations
 
+import hmac
 import io
 import json
 import os
@@ -58,7 +67,7 @@ import numpy as np
 from ..core.process_list import ProcessListError
 from ..core.transport import ChunkedFile, Transport
 from ..obs.metrics import MetricsRegistry, register_catalogue
-from ..obs.trace import render_gantt
+from ..obs.trace import Span, TraceSpool, render_gantt
 from .checkpoint import CheckpointStore
 from .compile_cache import CompileCache
 from .job import Job, JobState
@@ -70,6 +79,9 @@ from .wire import WireError, from_spec, registry_spec
 
 _JOB_RE = re.compile(r"^/jobs/([^/]+)$")
 _RESULT_RE = re.compile(r"^/jobs/([^/]+)/result$")
+_FRAMES_RE = re.compile(r"^/jobs/([^/]+)/frames$")
+_EOF_RE = re.compile(r"^/jobs/([^/]+)/eof$")
+_PREVIEW_RE = re.compile(r"^/jobs/([^/]+)/preview$")
 _TRACE_RE = re.compile(r"^/jobs/([^/]+)/trace$")
 _PROGRESS_RE = re.compile(r"^/jobs/([^/]+)/progress$")
 _COMPLETE_RE = re.compile(r"^/jobs/([^/]+)/complete$")
@@ -101,10 +113,20 @@ class PipelineService:
                  lease_ttl: float = 15.0,
                  sweep_interval: float | None = None,
                  results_dir: str | None = None,
-                 max_sweep_variants: int = 64):
+                 max_sweep_variants: int = 64,
+                 token: str | None = None,
+                 trace_spool: TraceSpool | str | None = None):
         """Args mirror :class:`PipelineScheduler`; ``max_pending``
         bounds admission (HTTP 429 past it) and ``max_history`` bounds
         retained terminal jobs (a pruned job's result is gone — 404).
+
+        ``token`` (satellite: auth hardening) arms shared-secret bearer
+        auth: every MUTATING verb (POST/PUT/DELETE — including the
+        worker protocol and frame ingest) is rejected 401 unless it
+        carries ``Authorization: Bearer <token>``; reads stay open.
+        ``trace_spool`` (a :class:`TraceSpool` or a directory path)
+        retains terminal-job traces past ``max_history`` eviction —
+        ``GET /jobs/{id}/trace`` falls back to it.
 
         ``workers_remote=True`` is **broker mode**: instead of
         in-process scheduler threads, detached :class:`PipelineWorker`
@@ -139,6 +161,17 @@ class PipelineService:
                 metrics=self.metrics)
         self.sweeps = SweepManager(self.queue, fetch=self._variant_array,
                                    max_variants=max_sweep_variants)
+        self.token = token
+        self.trace_spool = (TraceSpool(trace_spool)
+                            if isinstance(trace_spool, str) else trace_spool)
+        if self.trace_spool is not None:
+            spool = self.trace_spool
+            self.queue.add_evict_hook(
+                lambda job: spool.put(job.job_id, job.trace))
+        # eviction backstop: a terminal streaming job's retained frame
+        # chunks must not outlive the job record
+        self.queue.add_evict_hook(
+            lambda job: job.stream.drop_buffers() if job.stream else None)
         self._wire_gauges()
         self._httpd: ThreadingHTTPServer | None = None
         self._http_thread: threading.Thread | None = None
@@ -222,6 +255,103 @@ class PipelineService:
                 and self.broker.request_cancel(job_id):
             out.update(cancelled=True, pending=True)
         return out
+
+    # -- streaming ingest (docs/streaming.md) ---------------------------
+    def _streaming_job(self, job_id: str) -> Job:
+        """The job, checked to be a live streaming one.  Raises KeyError
+        (404) if unknown, RuntimeError (409) otherwise."""
+        job = self.queue.job(job_id)
+        if not job.streaming:
+            raise RuntimeError(f"job {job_id!r} is not a streaming job "
+                               f'(submit with spec v2 "streaming": true)')
+        return job
+
+    def ingest_frames(self, job_id: str, frames: np.ndarray,
+                      start: int) -> dict[str, Any]:
+        """Accept one contiguous frame chunk (``POST /jobs/{id}/frames``).
+
+        ``start`` must equal the current ingest watermark — out-of-order
+        and duplicate chunks are rejected (RuntimeError → HTTP 409) so
+        the on-disk prefix is always exact.  Wakes the queue (a parked
+        streaming job becomes leasable again) and any in-process driver
+        waiting on the stream condition."""
+        job = self._streaming_job(job_id)
+        if job.state.terminal():
+            raise RuntimeError(f"job {job_id!r} is {job.state.value}; "
+                               f"ingest is closed")
+        frames = np.ascontiguousarray(frames)
+        if frames.ndim < 1 or frames.shape[0] == 0:
+            raise RuntimeError("frames chunk must have >= 1 frame on "
+                               "axis 0")
+        st = job.stream
+        with st.lock:
+            if st.eof:
+                raise RuntimeError(f"job {job_id!r} already got EOF; no "
+                                   f"more frames accepted")
+            if start != st.watermark:
+                raise RuntimeError(
+                    f"out-of-order ingest for job {job_id!r}: chunk "
+                    f"starts at frame {start} but the watermark is "
+                    f"{st.watermark} (duplicate or gap)")
+            watermark = st.append(frames, start)
+            st.cond.notify_all()
+        self.queue.kick()
+        self.metrics.counter("stream.frames.ingested").inc(
+            int(frames.shape[0]))
+        return {"job_id": job_id, "start": int(start),
+                "count": int(frames.shape[0]), "watermark": watermark}
+
+    def mark_eof(self, job_id: str) -> dict[str, Any]:
+        """End of acquisition (``POST /jobs/{id}/eof``): no more frames
+        will arrive.  A second EOF on a live stream is a protocol error
+        (409), like a duplicate chunk — but EOF on a stream that already
+        ran to completion succeeds: the loader declares its total frame
+        count, so a fast executor can finish the moment the last frame
+        lands, racing ahead of the producer's EOF."""
+        job = self._streaming_job(job_id)
+        st = job.stream
+        if job.state is JobState.DONE:
+            with st.lock:
+                st.eof = True
+                return {"job_id": job_id, "eof": True,
+                        "watermark": st.watermark}
+        if job.state.terminal():
+            raise RuntimeError(f"job {job_id!r} is {job.state.value}; "
+                               f"ingest is closed")
+        with st.lock:
+            if st.eof:
+                raise RuntimeError(f"job {job_id!r} already got EOF")
+            st.eof = True
+            watermark = st.watermark
+            st.cond.notify_all()
+        self.queue.kick()
+        return {"job_id": job_id, "eof": True, "watermark": watermark}
+
+    def preview(self, job_id: str) -> tuple[np.ndarray, int]:
+        """Partial reconstruction over the frames ingested so far
+        (``GET /jobs/{id}/preview``) — ``(array, frames_covered)``.
+
+        Scheduler mode computes it on demand from the live runner
+        (serialised against the pump loop by ``stream.exec_lock``);
+        broker mode serves the newest preview the worker uploaded.
+        Raises RuntimeError/ValueError (→ 409) while no preview can be
+        produced yet."""
+        job = self._streaming_job(job_id)
+        if self.broker is not None:
+            path = job.remote_results.get("__preview__")
+            if path is None or not os.path.exists(path):
+                raise RuntimeError(
+                    "no preview available yet (the worker has not "
+                    "uploaded one)")
+            return np.load(path), job.preview_watermark
+        runner = job.runner
+        if runner is None or not runner.streaming:
+            raise RuntimeError(
+                "no preview available yet (the job has not started)")
+        with job.stream.exec_lock:
+            arr, cut = runner.preview()
+        job.preview_watermark = max(job.preview_watermark, cut)
+        return arr, cut
 
     # -- parameter sweeps (docs/sweeps.md) ------------------------------
     def submit_sweep(self, envelope: dict[str, Any]) -> SweepGroup:
@@ -311,7 +441,11 @@ class PipelineService:
         if job.state is not JobState.DONE:
             raise RuntimeError(f"job {job_id!r} is {job.status!r}, "
                                f"not done")
-        name = dataset or next(iter(job.remote_results))
+        # dunder names (the streaming "__preview__" upload) are service
+        # plumbing, never a default result
+        name = dataset or next(
+            (k for k in job.remote_results if not k.startswith("__")),
+            next(iter(job.remote_results)))
         path = job.remote_results.get(name)
         if path is None or not os.path.exists(path):
             raise KeyError(
@@ -433,6 +567,38 @@ class _PipelineHandler(BaseHTTPRequestHandler):
         if length:
             self.rfile.read(length)
 
+    def _authorised(self) -> bool:
+        """Shared-secret bearer check for mutating verbs.  No token
+        configured = open service (the pre-auth behaviour)."""
+        token = self.service.token
+        if token is None:
+            return True
+        got = self.headers.get("Authorization") or ""
+        return hmac.compare_digest(got, f"Bearer {token}")
+
+    def _reject_unauthorised(self) -> bool:
+        if self._authorised():
+            return False
+        self._drain_body()
+        self._error(401, "missing or invalid bearer token "
+                         "(Authorization: Bearer <token>)")
+        return True
+
+    def _send_array(self, arr: np.ndarray,
+                    extra: dict[str, str] | None = None) -> None:
+        """One in-RAM array as ``.npy`` bytes (previews, frame fetches —
+        small by construction, unlike full results)."""
+        buf = io.BytesIO()
+        np.save(buf, np.ascontiguousarray(arr))
+        body = buf.getvalue()
+        self.send_response(200)
+        self.send_header("Content-Type", "application/x-npy")
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in (extra or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(body)
+
     # -- verbs ----------------------------------------------------------
     def do_GET(self) -> None:
         url = urlparse(self.path)
@@ -470,15 +636,44 @@ class _PipelineHandler(BaseHTTPRequestHandler):
         m = _TRACE_RE.match(path)
         if m:
             job_id = unquote(m.group(1))
+            as_text = (query.get("format") or [None])[0] == "text"
             try:
                 job = svc.queue.job(job_id)
             except KeyError:
-                return self._error(404, f"unknown job {job_id!r}")
-            if (query.get("format") or [None])[0] == "text":
+                # evicted by max_history?  the trace spool keeps the
+                # timeline after the job record is gone
+                rec = (svc.trace_spool.get(job_id)
+                       if svc.trace_spool is not None else None)
+                if rec is None:
+                    return self._error(404, f"unknown job {job_id!r}")
+                if as_text:
+                    spans = []
+                    for d in rec.get("spans", ()):
+                        try:
+                            spans.append(Span.from_wire(d))
+                        except (KeyError, TypeError, ValueError):
+                            continue
+                    return self._text(200, render_gantt(spans) + "\n")
+                return self._json(200, rec)
+            if as_text:
                 return self._text(
                     200, render_gantt(job.trace.spans()) + "\n")
             return self._json(200, {"job_id": job_id,
                                     **job.trace.to_wire()})
+        m = _PREVIEW_RE.match(path)
+        if m:
+            job_id = unquote(m.group(1))
+            try:
+                arr, covered = svc.preview(job_id)
+            except KeyError:
+                return self._error(404, f"unknown job {job_id!r}")
+            except (RuntimeError, ValueError) as e:
+                return self._error(409, str(e))
+            return self._send_array(arr,
+                                    extra={"X-Watermark": str(covered)})
+        m = _FRAMES_RE.match(path)
+        if m:
+            return self._fetch_frames(unquote(m.group(1)), query)
         m = _JOB_RE.match(path)
         if m:
             job_id = unquote(m.group(1))
@@ -493,7 +688,22 @@ class _PipelineHandler(BaseHTTPRequestHandler):
         self._error(404, f"no route for GET {path}")
 
     def do_POST(self) -> None:
+        if self._reject_unauthorised():
+            return
         path = urlparse(self.path).path.rstrip("/")
+        m = _FRAMES_RE.match(path)
+        if m:
+            return self._ingest_frames(unquote(m.group(1)))
+        m = _EOF_RE.match(path)
+        if m:
+            job_id = unquote(m.group(1))
+            self._drain_body()            # EOF needs no body
+            try:
+                return self._json(200, self.service.mark_eof(job_id))
+            except KeyError:
+                return self._error(404, f"unknown job {job_id!r}")
+            except RuntimeError as e:
+                return self._error(409, str(e))
         if path == "/jobs":
             return self._submit()
         if path == "/sweeps":
@@ -549,6 +759,68 @@ class _PipelineHandler(BaseHTTPRequestHandler):
             "axes": [a.spec() for a in group.axes],
             "job_ids": [j.job_id for j in group.jobs]})
 
+    # -- streaming ingest (docs/streaming.md) ---------------------------
+    def _ingest_frames(self, job_id: str) -> None:
+        """POST /jobs/{id}/frames: raw ``.npy`` body + ``X-Start-Frame``
+        header → appended to the job's stream buffer."""
+        try:
+            start = int(self.headers.get("X-Start-Frame", ""))
+        except (TypeError, ValueError):
+            self._drain_body()
+            return self._error(
+                400, "POST frames needs an integer X-Start-Frame header")
+        length = int(self.headers.get("Content-Length") or 0)
+        payload = self.rfile.read(length) if length else b""
+        if not payload:
+            return self._error(
+                400, "empty frames body (raw .npy bytes expected)")
+        try:
+            frames = np.load(io.BytesIO(payload), allow_pickle=False)
+        except ValueError as e:
+            return self._error(400, f"frames body is not a valid .npy: "
+                                    f"{e}")
+        try:
+            out = self.service.ingest_frames(job_id, frames, start)
+        except KeyError:
+            return self._error(404, f"unknown job {job_id!r}")
+        except RuntimeError as e:
+            return self._error(409, str(e))
+        self._json(200, out)
+
+    def _fetch_frames(self, job_id: str, query: dict) -> None:
+        """GET /jobs/{id}/frames?start=&max=: how a broker-mode worker
+        pulls the buffered stream.  204 (with ``X-EOF``/``X-Watermark``
+        headers) when nothing at-or-after ``start`` has arrived yet."""
+        svc = self.service
+        try:
+            job = svc.queue.job(job_id)
+        except KeyError:
+            return self._error(404, f"unknown job {job_id!r}")
+        if not job.streaming:
+            return self._error(409, f"job {job_id!r} is not a "
+                                    f"streaming job")
+        try:
+            start = int((query.get("start") or ["0"])[0])
+            raw_max = (query.get("max") or [None])[0]
+            max_frames = None if raw_max is None else int(raw_max)
+        except ValueError:
+            return self._error(400, "start/max must be integers")
+        st = job.stream
+        with st.lock:
+            arr, _ = st.fetch(start, max_frames)
+            eof, watermark = st.eof, st.watermark
+        headers = {"X-Start": str(start),
+                   "X-EOF": "1" if eof else "0",
+                   "X-Watermark": str(watermark)}
+        if arr is None:
+            self.send_response(204)
+            for k, v in {**headers, "X-Count": "0"}.items():
+                self.send_header(k, v)
+            self.end_headers()
+            return
+        self._send_array(arr, extra={**headers,
+                                     "X-Count": str(arr.shape[0])})
+
     # -- worker-pull protocol (broker mode) -----------------------------
     @staticmethod
     def _worker_of(body: Any) -> str:
@@ -595,6 +867,8 @@ class _PipelineHandler(BaseHTTPRequestHandler):
     def do_PUT(self) -> None:
         """Result upload from a leased worker: raw ``.npy`` bytes to
         ``/jobs/{id}/result?dataset=name`` with ``X-Worker-Id``."""
+        if self._reject_unauthorised():
+            return
         url = urlparse(self.path)
         m = _RESULT_RE.match(url.path.rstrip("/"))
         if not m:
@@ -629,6 +903,8 @@ class _PipelineHandler(BaseHTTPRequestHandler):
                          "bytes": len(payload)})
 
     def do_DELETE(self) -> None:
+        if self._reject_unauthorised():
+            return
         self._drain_body()              # DELETEs may carry a body
         path = urlparse(self.path).path.rstrip("/")
         m = _SWEEP_RE.match(path)

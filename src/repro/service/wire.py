@@ -35,6 +35,11 @@ from ..core.plugin import BasePlugin, _is_jsonable
 from ..core.process_list import PluginEntry, ProcessList
 
 WIRE_VERSION = 1
+#: spec v2 = v1 plus the top-level ``"streaming": true`` flag (the
+#: loader dataset is fed frame-by-frame via POST /jobs/{id}/frames
+#: instead of being complete at step 0 — docs/streaming.md)
+WIRE_VERSION_STREAMING = 2
+_ACCEPTED_VERSIONS = (WIRE_VERSION, WIRE_VERSION_STREAMING)
 
 #: wire name -> plugin class.  Seeded with the tomography chain below;
 #: extend with :func:`register_plugin`.
@@ -127,9 +132,14 @@ def from_spec(spec: dict[str, Any]) -> ProcessList:
         raise WireError(f"spec must be a JSON object, got "
                         f"{type(spec).__name__}")
     version = spec.get("version", WIRE_VERSION)
-    if version != WIRE_VERSION:
-        raise WireError(f"unsupported spec version {version!r} "
-                        f"(this server speaks v{WIRE_VERSION})")
+    if version not in _ACCEPTED_VERSIONS:
+        raise WireError(
+            f"unsupported spec version {version!r} (this server speaks "
+            f"v{'/v'.join(str(v) for v in _ACCEPTED_VERSIONS)})")
+    streaming = bool(spec.get("streaming", False))
+    if streaming and version < WIRE_VERSION_STREAMING:
+        raise WireError('"streaming": true requires spec version >= '
+                        f"{WIRE_VERSION_STREAMING}")
     entries_spec = spec.get("plugins")
     if not isinstance(entries_spec, list) or not entries_spec:
         raise WireError('spec needs a non-empty "plugins" list')
@@ -165,6 +175,12 @@ def from_spec(spec: dict[str, Any]) -> ProcessList:
                                      "in_datasets"),
                out_datasets=_str_list(e.get("out_datasets", ()), where,
                                       "out_datasets"))
+    if streaming:
+        # dynamic attribute: ProcessList stays a plain dataclass and the
+        # flag is deliberately NOT part of chain_signature — a streamed
+        # chain shares compiled programs and checkpoints with its batch
+        # twin (the final outputs are bit-identical)
+        pl.streaming = True
     return pl
 
 
@@ -208,6 +224,9 @@ def to_spec(process_list: ProcessList | Iterable[PluginEntry]
         if e.out_datasets:
             entry["out_datasets"] = list(e.out_datasets)
         out.append(entry)
+    if getattr(process_list, "streaming", False):
+        return {"version": WIRE_VERSION_STREAMING, "streaming": True,
+                "plugins": out}
     return {"version": WIRE_VERSION, "plugins": out}
 
 

@@ -153,6 +153,10 @@ class PipelineWorker:
             once registered.
         worker_id: explicit id (handy for tests/ops); default assigned
             by the broker.
+        token: bearer token for a token-armed broker (sent on every
+            request; mutating calls are 401 without it).
+        preview_interval: minimum seconds between preview uploads while
+            executing a streaming job (0 disables previews).
     """
 
     def __init__(self, base_url: str, *,
@@ -167,8 +171,12 @@ class PipelineWorker:
                  poll: float = 0.5,
                  heartbeat: float | None = None,
                  worker_id: str | None = None,
-                 timeout: float = 60.0):
-        self.client = PipelineClient(base_url, timeout=timeout)
+                 timeout: float = 60.0,
+                 token: str | None = None,
+                 preview_interval: float = 0.5):
+        self.client = PipelineClient(base_url, timeout=timeout,
+                                     token=token)
+        self.preview_interval = preview_interval
         self.transport_factory = (transport_factory
                                   or (lambda desc: InMemoryTransport()))
         self.checkpoints = (CheckpointStore(checkpoint_dir)
@@ -341,15 +349,18 @@ class PipelineWorker:
                         n_plugins=runner.n_steps, resumed_from=resumed,
                         **({"checkpoint": self.checkpoints.root}
                            if self.checkpoints else {}))
-            while True:
-                if hb.abort:
-                    raise _Abandon(hb.abort)
-                if not runner.step():
-                    break
-                if self.checkpoints is not None:
-                    with trace.span("checkpoint.save"):
-                        self.checkpoints.save(job_id, runner)
-                self._check(job_id, plugin_index=runner.current_step)
+            if getattr(pl, "streaming", False):
+                self._stream_steps(job_id, runner, hb, trace)
+            else:
+                while True:
+                    if hb.abort:
+                        raise _Abandon(hb.abort)
+                    if not runner.step():
+                        break
+                    if self.checkpoints is not None:
+                        with trace.span("checkpoint.save"):
+                            self.checkpoints.save(job_id, runner)
+                    self._check(job_id, plugin_index=runner.current_step)
             runner.finalise()
             # the heartbeat keeps renewing through hand-over + complete:
             # a result upload slower than lease_ttl must not lose the
@@ -365,6 +376,93 @@ class PipelineWorker:
         self.jobs_done += 1
         if self.checkpoints is not None:
             self.checkpoints.clear(job_id)
+
+    # -- streaming --------------------------------------------------------
+    def _stream_steps(self, job_id: str, runner: PluginRunner,
+                      hb: _Heartbeat, trace: Trace) -> None:
+        """Arrival-driven execution of a streaming job
+        (docs/streaming.md): fetch newly-ingested frames from the
+        broker, feed them to the runner, pump whatever became runnable,
+        and ship rate-limited previews.  A starved stream does not hold
+        a lease hostage: with checkpoints enabled the worker saves and
+        asks to be PARKED — the broker ends the lease without burning
+        an attempt and requeues the job, freeing this worker until
+        more frames land."""
+        runner.enable_streaming()        # idempotent after restore
+        state = runner.stream_state()
+        total = state["total"]
+        fed = state["ingested"]
+        eof_marked = state["eof"]
+        last_preview = 0.0
+        while runner.current_step < runner.n_steps:
+            if hb.abort:
+                raise _Abandon(hb.abort)
+            try:
+                frames, start, eof, _ = self.client.fetch_frames(
+                    job_id, start=fed)
+            except (ServiceError, OSError):
+                time.sleep(min(self.poll, 0.25))
+                continue                 # transient broker hiccup
+            if frames is None and not eof:
+                # starved.  Checkpoint + park so the broker can hand the
+                # lease to nobody (the queue holds the job until frames
+                # arrive); without checkpoints parking would restart the
+                # job from scratch on re-lease, so hold on and wait.
+                if self.checkpoints is not None:
+                    with trace.span("checkpoint.save"):
+                        self.checkpoints.save(job_id, runner)
+                    try:
+                        out = self.client.progress(
+                            job_id, self.worker_id,
+                            ingest_watermark=fed, park=True)
+                    except (ServiceError, OSError):
+                        time.sleep(min(self.poll, 0.25))
+                        continue
+                    if out.get("verdict") != "ok":
+                        raise _Abandon(out.get("verdict", "parked"))
+                time.sleep(min(self.poll, 0.25))
+                continue
+            if frames is None and eof and fed < total:
+                raise RuntimeError(
+                    f"stream ended at frame {fed} but the loader "
+                    f"declares {total} frames")
+            if frames is not None:
+                fed = runner.feed(frames, int(start))
+            if eof and fed == total and not eof_marked:
+                runner.mark_eof()
+                eof_marked = True
+            did = runner.pump()
+            if frames is None and not did and \
+                    runner.current_step < runner.n_steps:
+                raise RuntimeError("streaming job stalled after EOF: "
+                                   "no step is runnable")
+            if self.checkpoints is not None:
+                with trace.span("checkpoint.save"):
+                    self.checkpoints.save(job_id, runner)
+            self._check(job_id, plugin_index=runner.current_step,
+                        ingest_watermark=fed)
+            if self.preview_interval > 0 and \
+                    time.time() - last_preview >= self.preview_interval:
+                last_preview = time.time()
+                self._ship_preview(job_id, runner)
+
+    def _ship_preview(self, job_id: str, runner: PluginRunner) -> None:
+        """Best-effort upload of the partial reconstruction as the
+        ``__preview__`` result, then report its watermark.  Failures are
+        swallowed — previews are advisory, the stream must not die for
+        one."""
+        try:
+            arr, cut = runner.preview()
+        except ValueError:
+            return                       # nothing reconstructed yet
+        buf = io.BytesIO()
+        np.save(buf, np.ascontiguousarray(arr))
+        try:
+            self.client.upload_result(job_id, self.worker_id,
+                                      "__preview__", buf.getvalue())
+            self._check(job_id, preview_watermark=int(cut))
+        except (ServiceError, OSError):
+            pass
 
     # -- gang execution ---------------------------------------------------
     def _verdict(self, job_id: str, trace: Trace | None = None,
@@ -593,6 +691,7 @@ def spawn_local_workers(url: str, n: int, *, transport: str = "inmemory",
                         imports: tuple[str, ...] = (),
                         worker_ids: list[str] | None = None,
                         pythonpath_extra: tuple[str, ...] = (),
+                        token: str | None = None,
                         stdout: Any = None) -> list:
     """Spawn ``n`` worker subprocesses against a broker URL — the
     ``pipeline_serve --workers-remote N`` demo, benchmarks and tests all
@@ -628,6 +727,8 @@ def spawn_local_workers(url: str, n: int, *, transport: str = "inmemory",
             cmd += ["--max-batch", str(max_batch)]
         for mod in imports:
             cmd += ["--import", mod]
+        if token is not None:
+            cmd += ["--token", token]
         procs.append(subprocess.Popen(cmd, env=env, stdout=stdout,
                                       stderr=stdout))
     return procs
@@ -682,6 +783,12 @@ def main(argv: list[str] | None = None) -> None:
                     default=[], metavar="MODULE",
                     help="import MODULE before serving (register extra "
                          "wire plugins; repeatable)")
+    ap.add_argument("--token", default=None,
+                    help="bearer token for a token-armed broker "
+                         "(mutating requests are 401 without it)")
+    ap.add_argument("--preview-interval", type=float, default=0.5,
+                    help="minimum seconds between preview uploads on "
+                         "streaming jobs (0 disables previews)")
     args = ap.parse_args(argv)
     for mod in args.imports:
         importlib.import_module(mod)
@@ -695,7 +802,8 @@ def main(argv: list[str] | None = None) -> None:
                                              donate=args.max_batch == 1),
         checkpoint_dir=args.checkpoint_dir, shared_fs=args.shared_fs,
         worker_id=args.worker_id, max_batch=args.max_batch,
-        sweeps=args.sweeps, poll=args.poll, heartbeat=args.heartbeat)
+        sweeps=args.sweeps, poll=args.poll, heartbeat=args.heartbeat,
+        token=args.token, preview_interval=args.preview_interval)
     wid = worker.register()
     print(f"worker {wid} serving {args.url} "
           f"(transport={args.transport}, plugins={len(worker.plugins)}"

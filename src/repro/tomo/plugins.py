@@ -205,7 +205,11 @@ class FBPRecon(BaseRecon):
         out_size = self.params["out_size"] or n_det
         self._out_size = out_size
         geom: ParallelGeometry = din.metadata["geometry"]
-        self._angles = jnp.asarray(geom.angles.astype(np.float32))
+        # slice to the input's angle count so a streaming preview (an
+        # angle-prefix of the full scan) reconstructs from exactly the
+        # acquired angles
+        self._angles = jnp.asarray(
+            geom.angles.astype(np.float32)[:n_angles])
         self._mu = float(din.metadata.get("mu", 1.0))
         dout = DataSet(self.out_dataset_names[0],
                        (n_rows, out_size, out_size), np.float32,

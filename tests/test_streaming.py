@@ -1,0 +1,427 @@
+"""Streaming acquisition (docs/streaming.md): arrival-driven chunk
+execution end-to-end.
+
+Framework layer: a runner fed random-size frame slabs through
+``enable_streaming``/``feed``/``pump`` must produce a reconstruction
+BIT-IDENTICAL to the batch run of the same chain, with partial previews
+available mid-stream and out-of-order feeds rejected.
+
+Service layer (scheduler mode): the HTTP ingest contract — frames over
+``POST /jobs/{id}/frames``, EOF, preview-before-EOF, 409 on
+out-of-order/duplicate/after-EOF ingest, 401 without the bearer token
+when the service is token-armed.
+
+Broker mode: a streaming job survives a worker SIGKILL mid-stream (the
+retained frame buffers + the checkpoint's ingest watermark let the next
+owner refetch and continue), and a starved stream PARKS its lease
+instead of burning it.
+
+Plus the satellites that ride along: the TraceSpool ring (terminal-job
+traces survive history eviction) and the PluginRunner.run() error path
+closing the transport instead of leaking chunk-file handles.
+"""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+import slow_plugins  # noqa: F401 — registers slow_identity server-side
+from repro.core import ChunkedFileTransport, PluginRunner
+from repro.core.patterns import PROJECTION
+from repro.core.plugin import BaseFilter
+from repro.core.process_list import ProcessList
+from repro.service import (PipelineClient, PipelineService, PipelineWorker,
+                           ServiceError, from_spec)
+from repro.service.worker import spawn_local_workers
+from repro.tomo.plugins import HDF5LikeSaver, SyntheticTomoLoader
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def _spec(seed=0, n_det=16, n_angles=24, streaming=True, delay=0.0):
+    """A small loader → window → barrier → saver chain; ``delay`` > 0
+    inserts the slow (windowed) identity so a worker can be killed
+    mid-pump deterministically."""
+    plugins = [
+        {"plugin": "synthetic_tomo_loader",
+         "params": {"n_det": n_det, "n_angles": n_angles, "n_rows": 1,
+                    "seed": seed},
+         "out_datasets": ["tomo"]},
+        {"plugin": "dark_flat_correction",
+         "params": {"use_pallas": False},
+         "in_datasets": ["tomo"], "out_datasets": ["tomo"]},
+    ]
+    if delay:
+        plugins.append({"plugin": "slow_identity",
+                        "params": {"delay": delay},
+                        "in_datasets": ["tomo"], "out_datasets": ["tomo"]})
+    plugins += [
+        {"plugin": "fbp_recon", "params": {"use_pallas": False},
+         "in_datasets": ["tomo"], "out_datasets": ["recon"]},
+        {"plugin": "hdf5_saver", "in_datasets": ["recon"]},
+    ]
+    spec = {"version": 1, "plugins": plugins}
+    if streaming:
+        spec = {**spec, "version": 2, "streaming": True}
+    return spec
+
+
+def _reference(spec) -> np.ndarray:
+    """The batch run of the same chain (the loader materialises its
+    own frames)."""
+    batch = {k: v for k, v in spec.items() if k != "streaming"}
+    ref = PluginRunner(from_spec({**batch, "version": 1})).run()
+    return np.asarray(ref["recon"].materialise())
+
+
+def _frames(spec) -> np.ndarray:
+    """What the chain's loader WOULD produce — the frame stack an
+    acquisition source streams in."""
+    e = from_spec(spec).entries[0]
+    loader = e.cls(**e.params, in_datasets=list(e.in_datasets),
+                   out_datasets=list(e.out_datasets))
+    return np.asarray(loader.load()[0].materialise())
+
+
+# ======================================================== framework layer
+def test_pump_matches_batch_random_chunks():
+    """Feed the stream in random-size slabs: the final reconstruction is
+    bit-identical to the batch run, and a mid-stream preview covers a
+    non-trivial prefix."""
+    spec = _spec(seed=11)
+    want = _reference(spec)
+    frames = _frames(spec)
+    runner = PluginRunner(from_spec(spec))
+    runner.enable_streaming()
+    rng = np.random.default_rng(0)
+    fed, previewed = 0, None
+    while fed < frames.shape[0]:
+        k = int(rng.integers(1, 6))
+        fed = runner.feed(frames[fed:fed + k], fed)
+        runner.pump()
+        if previewed is None and fed >= frames.shape[0] // 2:
+            try:
+                arr, cut = runner.preview()
+                assert 0 < cut <= fed
+                assert arr.shape == want.shape
+                previewed = cut
+            except ValueError:
+                pass                     # windowed head not cleared yet
+    runner.mark_eof()
+    runner.pump()
+    assert runner.current_step == runner.n_steps
+    runner.finalise()
+    got = np.asarray(runner.transport.read(runner.datasets["recon"]))
+    np.testing.assert_array_equal(got, want)
+    assert previewed is not None, "no preview ever became available"
+
+
+def test_feed_rejects_out_of_order_and_overrun():
+    spec = _spec(seed=1)
+    frames = _frames(spec)
+    runner = PluginRunner(from_spec(spec))
+    runner.enable_streaming()
+    assert runner.feed(frames[:4], 0) == 4
+    with pytest.raises(ValueError, match="out of order"):
+        runner.feed(frames[4:8], 6)      # gap
+    with pytest.raises(ValueError, match="out of order"):
+        runner.feed(frames[0:4], 0)      # duplicate
+    with pytest.raises(ValueError):
+        runner.mark_eof()                # premature: 4/24 frames
+    runner.feed(frames[4:], 4)
+    runner.mark_eof()
+    with pytest.raises(ValueError, match="after eof"):
+        runner.feed(frames[:1], 24)
+
+
+def test_run_failure_closes_transport(tmp_path):
+    """A mid-chain plugin failure must not leak open chunk-file
+    handles: run() closes the transport on the error path too."""
+    class _Boom(BaseFilter):
+        name = "boom_filter"
+        pattern_name = PROJECTION
+        parameters = {}
+
+        def process_frames(self, frames):
+            raise RuntimeError("boom")
+
+    class _SpyTransport(ChunkedFileTransport):
+        closed = False
+
+        def close(self):
+            self.closed = True
+            super().close()
+
+    pl = (ProcessList()
+          .add(SyntheticTomoLoader,
+               params={"n_det": 16, "n_angles": 8, "n_rows": 1},
+               out_datasets=["tomo"])
+          .add(_Boom, in_datasets=["tomo"], out_datasets=["tomo"])
+          .add(HDF5LikeSaver, in_datasets=["tomo"]))
+    t = _SpyTransport(str(tmp_path / "chunks"))
+    with pytest.raises(RuntimeError, match="boom"):
+        PluginRunner(pl, t).run()
+    assert t.closed
+
+
+# ================================================== scheduler mode (HTTP)
+@pytest.fixture
+def sched():
+    svc = PipelineService(n_workers=1)
+    host, port = svc.serve(port=0)
+    client = PipelineClient(f"http://{host}:{port}", timeout=60.0)
+    try:
+        yield svc, client
+    finally:
+        svc.stop()
+
+
+def test_http_streamed_job_bit_identical_with_preview(sched):
+    """The headline contract: a job streamed over HTTP chunk-by-chunk
+    finishes bit-identical to the batch run, and ``GET
+    /jobs/{id}/preview`` serves a partial reconstruction BEFORE EOF."""
+    svc, client = sched
+    spec = _spec(seed=21)
+    want = _reference(spec)
+    frames = _frames(spec)
+    jid = client.submit(spec)
+    preview = None
+    for lo in range(0, frames.shape[0], 7):
+        out = client.ingest(jid, frames[lo:lo + 7], lo)
+        assert out["watermark"] == min(lo + 7, frames.shape[0])
+        if lo >= 14 and preview is None:
+            deadline = time.time() + 60
+            while preview is None and time.time() < deadline:
+                try:
+                    preview = client.preview(jid)
+                except ServiceError as e:
+                    assert e.status == 409, e
+                    time.sleep(0.05)
+    assert preview is not None, "no preview before EOF"
+    arr, cut = preview
+    assert arr.shape == want.shape and 0 < cut <= frames.shape[0]
+    client.eof(jid)
+    snap = client.wait(jid, timeout=120)
+    assert snap["state"] == "done", snap
+    assert snap["streaming"] is True
+    assert snap["frames_consumed"] == frames.shape[0]
+    np.testing.assert_array_equal(client.result(jid), want)
+
+
+def test_http_ingest_contract_409s(sched):
+    """Out-of-order, duplicate, after-EOF and non-streaming ingest are
+    all protocol errors (409); unknown jobs are 404."""
+    svc, client = sched
+    spec = _spec(seed=3)
+    frames = _frames(spec)
+    jid = client.submit(spec)
+    client.ingest(jid, frames[:6], 0)
+    with pytest.raises(ServiceError) as ei:
+        client.ingest(jid, frames[:6], 0)         # duplicate
+    assert ei.value.status == 409
+    with pytest.raises(ServiceError) as ei:
+        client.ingest(jid, frames[8:12], 8)       # gap
+    assert ei.value.status == 409
+    with pytest.raises(ServiceError) as ei:
+        client.ingest("nope", frames[:1], 0)      # unknown job
+    assert ei.value.status == 404
+    plain = client.submit(_spec(seed=4, streaming=False))
+    with pytest.raises(ServiceError) as ei:
+        client.ingest(plain, frames[:1], 0)       # not a streaming job
+    assert ei.value.status == 409
+    client.ingest(jid, frames[6:], 6)
+    client.eof(jid)
+    with pytest.raises(ServiceError) as ei:       # feed after EOF (or
+        client.ingest(jid, frames[:1], frames.shape[0])  # after done)
+    assert ei.value.status == 409
+    assert client.wait(jid, timeout=120)["state"] == "done"
+    # EOF on the COMPLETED stream is idempotent: the executor finishes
+    # the moment the last declared frame lands, racing the producer's
+    # EOF — that race must not surface as an error
+    assert client.eof(jid)["eof"] is True
+    # premature EOF fails the job; a second EOF is a 409 either way
+    # (duplicate on a live stream, or ingest-closed once it failed)
+    j2 = client.submit(_spec(seed=6))
+    client.eof(j2)
+    with pytest.raises(ServiceError) as ei:
+        client.eof(j2)
+    assert ei.value.status == 409
+    assert client.wait(j2, timeout=120)["state"] == "failed"
+
+
+def test_token_guards_mutating_endpoints(tmp_path):
+    """With --token set, every mutating verb 401s without the bearer
+    header; reads stay open; the right token passes."""
+    svc = PipelineService(n_workers=1, token="s3cret")
+    host, port = svc.serve(port=0)
+    base = f"http://{host}:{port}"
+    anon = PipelineClient(base, timeout=30.0)
+    authed = PipelineClient(base, timeout=60.0, token="s3cret")
+    try:
+        spec = _spec(seed=5)
+        frames = _frames(spec)
+        with pytest.raises(ServiceError) as ei:
+            anon.submit(spec)
+        assert ei.value.status == 401
+        jid = authed.submit(spec)
+        with pytest.raises(ServiceError) as ei:
+            anon.ingest(jid, frames[:4], 0)
+        assert ei.value.status == 401
+        with pytest.raises(ServiceError) as ei:
+            anon.eof(jid)
+        assert ei.value.status == 401
+        with pytest.raises(ServiceError) as ei:
+            PipelineClient(base, token="wrong").ingest(jid, frames[:4], 0)
+        assert ei.value.status == 401
+        assert anon.status(jid)["state"]          # reads stay open
+        authed.ingest(jid, frames, 0)
+        authed.eof(jid)
+        snap = authed.wait(jid, timeout=120)
+        assert snap["state"] == "done", snap
+        np.testing.assert_array_equal(anon.result(jid), _reference(spec))
+    finally:
+        svc.stop()
+
+
+# ======================================================== broker mode
+def test_starved_stream_parks_lease(tmp_path):
+    """A streaming job with no frames left to chew hands its lease back
+    (verdict ``parked``) instead of camping on it; once frames land the
+    job re-leases, restores the checkpoint's ingest watermark, and
+    finishes bit-identical."""
+    svc = PipelineService(workers_remote=True, lease_ttl=5.0,
+                          sweep_interval=0.1)
+    host, port = svc.serve(port=0)
+    client = PipelineClient(f"http://{host}:{port}", timeout=60.0)
+    spec = _spec(seed=31)
+    frames = _frames(spec)
+    w = PipelineWorker(client.base_url, worker_id="sw", poll=0.01,
+                       checkpoint_dir=str(tmp_path / "ck"),
+                       preview_interval=0.0)
+    try:
+        jid = client.submit(spec)
+        client.ingest(jid, frames[:6], 0)
+        w.register()
+        assert w.run_once() is True               # leases, feeds 6, parks
+        snap = client.status(jid)
+        assert snap["state"] == "queued", snap    # back in the queue...
+        assert snap["frames_consumed"] == 6
+        st = client.stats()
+        assert st["leases_expired"] == 0          # ...without an expiry
+        assert any(line.startswith("jobs_parked ")
+                   and int(line.split()[1]) >= 1
+                   for line in client.metrics().splitlines())
+        client.ingest(jid, frames[6:], 6)
+        client.eof(jid)
+        assert w.run_once() is True               # resumes at frame 6
+        snap = client.wait(jid, timeout=60)
+        assert snap["state"] == "done", snap
+        assert snap["frames_consumed"] == frames.shape[0]
+        assert snap["attempt"] >= 2               # park ended lease #1
+        np.testing.assert_array_equal(client.result(jid),
+                                      _reference(spec))
+    finally:
+        svc.stop()
+
+
+def test_stream_worker_sigkill_resumes_from_watermark(tmp_path):
+    """SIGKILL the worker mid-pump: the lease expires, the next owner
+    restores the checkpoint's ingest watermark, refetches the retained
+    frame buffers it never saw, and finishes bit-identical to batch."""
+    ckpt = str(tmp_path / "ckpts")
+    svc = PipelineService(workers_remote=True, lease_ttl=1.5,
+                          sweep_interval=0.1)
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    client = PipelineClient(url, timeout=60.0)
+    workers = spawn_local_workers(
+        url, 2, transport="inmemory", checkpoint_dir=ckpt,
+        poll=0.05, heartbeat=0.3, imports=("slow_plugins",),
+        worker_ids=["w0", "w1"], pythonpath_extra=(TESTS_DIR,))
+    by_id = dict(zip(["w0", "w1"], workers))
+    try:
+        spec = _spec(seed=41, delay=0.2)          # 0.2 s per frame pump
+        frames = _frames(spec)
+        jid = client.submit(spec)
+        client.ingest(jid, frames[:6], 0)
+        # first slab chewed + checkpointed (watermark 6)
+        deadline = time.time() + 120
+        while True:
+            snap = client.status(jid)
+            if snap.get("frames_consumed", 0) >= 6:
+                break
+            assert snap["state"] not in ("done", "failed"), snap
+            assert time.time() < deadline, f"slab never consumed: {snap}"
+            time.sleep(0.05)
+        # second slab: kill the owner mid-pump (6 frames x 0.2 s)
+        client.ingest(jid, frames[6:12], 6)
+        while True:
+            snap = client.status(jid)
+            if snap["state"] == "running" and snap["worker_id"]:
+                break
+            assert snap["state"] not in ("done", "failed"), snap
+            assert time.time() < deadline, f"never re-leased: {snap}"
+            time.sleep(0.05)
+        victim = snap["worker_id"]
+        time.sleep(0.4)                           # into the slow pump
+        os.kill(by_id[victim].pid, signal.SIGKILL)
+        client.ingest(jid, frames[12:], 12)
+        client.eof(jid)
+        snap = client.wait(jid, timeout=120)
+        assert snap["state"] == "done", snap
+        assert snap["frames_consumed"] == frames.shape[0]
+        assert snap["attempt"] >= 2, snap
+        np.testing.assert_array_equal(client.result(jid),
+                                      _reference(spec))
+        assert client.stats()["leases_expired"] >= 1
+    finally:
+        for p in workers:
+            if p.poll() is None:
+                p.kill()
+        for p in workers:
+            p.wait(timeout=10)
+        svc.stop()
+
+
+# ========================================================== trace spool
+def test_trace_spool_ring(tmp_path):
+    from repro.obs import TraceSpool
+    from repro.obs.trace import Trace
+    spool = TraceSpool(str(tmp_path / "spool"), max_traces=2)
+    for i in range(3):
+        tr = Trace(worker_id=f"w{i}")
+        with tr.span("work"):
+            pass
+        spool.put(f"job-{i}", tr)
+        time.sleep(0.02)                 # distinct mtimes for the ring
+    assert len(spool) == 2
+    assert spool.get("job-0") is None    # oldest evicted
+    got = spool.get("job-2")
+    assert got["job_id"] == "job-2"
+    assert got["spans"] and got["spans"][0]["name"] == "work"
+
+
+def test_trace_survives_history_eviction(tmp_path):
+    """max_history evicts terminal jobs from the queue; their traces
+    must still be served from the on-disk spool."""
+    svc = PipelineService(n_workers=1, max_history=1,
+                          trace_spool=str(tmp_path / "spool"))
+    host, port = svc.serve(port=0)
+    client = PipelineClient(f"http://{host}:{port}", timeout=60.0)
+    try:
+        j1 = client.submit(_spec(seed=1, streaming=False))
+        client.wait(j1, timeout=120)
+        j2 = client.submit(_spec(seed=2, streaming=False))
+        client.wait(j2, timeout=120)
+        # pruning runs at submit: the third submission evicts j1
+        client.wait(client.submit(_spec(seed=3, streaming=False)),
+                    timeout=120)
+        with pytest.raises(ServiceError) as ei:
+            client.status(j1)            # evicted from live history
+        assert ei.value.status == 404
+        tr = client.trace(j1)            # ...but the trace survived
+        assert tr["job_id"] == j1 and tr["spans"]
+    finally:
+        svc.stop()
