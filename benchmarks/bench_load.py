@@ -242,6 +242,89 @@ def run_stream(*, n_det: int, n_angles: int, chunk: int = 6,
         svc.stop()
 
 
+def _downsample_spec(parent: str, factor: int = 2) -> dict:
+    return {"version": 1, "plugins": [
+        {"plugin": "upstream_loader",
+         "params": {"data": {"from_job": parent, "dataset": "recon"}},
+         "out_datasets": ["vol"]},
+        {"plugin": "downsample", "params": {"factor": factor},
+         "in_datasets": ["vol"], "out_datasets": ["small"]},
+        {"plugin": "hdf5_saver", "in_datasets": ["small"]}]}
+
+
+def _quantify_spec(parent: str) -> dict:
+    return {"version": 1, "plugins": [
+        {"plugin": "upstream_loader",
+         "params": {"data": {"from_job": parent, "dataset": "small"}},
+         "out_datasets": ["vol"]},
+        {"plugin": "quantify",
+         "in_datasets": ["vol"], "out_datasets": ["stats"]},
+        {"plugin": "hdf5_saver", "in_datasets": ["stats"]}]}
+
+
+def run_workflow(*, n_det: int, n_angles: int, n_workers: int = 2) -> dict:
+    """Workflow-DAG smoke (docs/workflows.md): the 3-stage
+    recon -> downsample -> quantify DAG as ONE ``POST /workflows``
+    against a broker with worker subprocesses, vs the same stages
+    submitted sequentially (submit, wait, submit, wait...) — the
+    dependency-aware queue should hide the client round-trips."""
+    import numpy as np
+
+    from repro.service import to_spec
+
+    svc = PipelineService(workers_remote=True, lease_ttl=10.0,
+                          sweep_interval=0.2)
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    client = PipelineClient(url, timeout=60.0)
+    workers = spawn_local_workers(url, n_workers, transport="inmemory",
+                                  poll=0.05, heartbeat=1.0)
+    recon = to_spec(_spec(0, n_det=n_det, n_angles=n_angles))
+    try:
+        deadline = time.time() + 60
+        while len(client.workers()) < n_workers:
+            assert time.time() < deadline, "workers never registered"
+            time.sleep(0.05)
+        # sequential first: it doubles as the warm-up, so the DAG row
+        # measures orchestration, not first-compile cost
+        t0 = time.time()
+        j1 = client.submit(recon)
+        assert client.wait(j1, timeout=300)["state"] == "done"
+        j2 = client.submit(_downsample_spec(j1))
+        assert client.wait(j2, timeout=300)["state"] == "done"
+        j3 = client.submit(_quantify_spec(j2))
+        assert client.wait(j3, timeout=300)["state"] == "done"
+        seq_wall = time.time() - t0
+
+        t0 = time.time()
+        client.workflow({
+            "recon": {"process_list": recon},
+            "downsample": {"process_list": _downsample_spec("recon")},
+            "quantify": {"process_list": _quantify_spec("downsample")},
+        }, workflow_id="bench-wf")
+        snap = client.wait_workflow("bench-wf", timeout=300)
+        dag_wall = time.time() - t0
+        assert snap["state"] == "done", snap
+        np.testing.assert_array_equal(
+            client.result("bench-wf/quantify", "stats"),
+            client.result(j3, "stats"))
+        return {
+            "config": {"n_det": n_det, "n_angles": n_angles,
+                       "n_workers": n_workers, "n_stages": 3},
+            "dag_e2e_s": round(dag_wall, 3),
+            "sequential_e2e_s": round(seq_wall, 3),
+            "speedup": round(seq_wall / dag_wall, 3),
+            "metrics_missing": check_metrics_complete(url),
+        }
+    finally:
+        for p in workers:
+            if p.poll() is None:
+                p.kill()
+        for p in workers:
+            p.wait(timeout=10)
+        svc.stop()
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -269,6 +352,9 @@ def main(argv=None) -> int:
                       sweep_points=args.sweep_points, **cfg)
     result["streaming"] = run_stream(n_det=cfg["n_det"],
                                      n_angles=cfg["n_angles"])
+    result["workflow"] = run_workflow(n_det=cfg["n_det"],
+                                      n_angles=cfg["n_angles"],
+                                      n_workers=cfg["n_workers"])
 
     with open(args.out, "w") as fh:
         json.dump(result, fh, indent=2)
@@ -284,8 +370,13 @@ def main(argv=None) -> int:
     print(f"streaming: {sm['n_chunks']} chunks, ingest-to-preview "
           f"p50 {sm['ingest_to_preview_p50_s']}s, "
           f"p99 {sm['ingest_to_preview_p99_s']}s")
+    wf = result["workflow"]
+    print(f"workflow: 3-stage DAG e2e {wf['dag_e2e_s']}s vs "
+          f"sequential {wf['sequential_e2e_s']}s "
+          f"({wf['speedup']}x)")
     missing = sorted(set(result["metrics_missing"])
-                     | set(sm["metrics_missing"]))
+                     | set(sm["metrics_missing"])
+                     | set(wf["metrics_missing"]))
     if missing:
         print(f"MISSING from /metrics: {missing}", file=sys.stderr)
         return 1

@@ -32,6 +32,12 @@ Three modes:
           sweep --demo-chain --param sinogram_filter.cutoff=0.4:1.0:7 \\
           --metric sharpness --wait --out sweep.npy
 
+  workflow DAGs — jobs that depend on jobs, one atomic spec-v3
+  envelope (``docs/workflows.md``)::
+
+      PYTHONPATH=src python -m repro.launch.pipeline_serve client \\
+          workflow --demo --wait
+
   and live streaming acquisition (``docs/streaming.md``) — submit a
   v2 streaming job, feed frames as they "arrive", peek at the partial
   reconstruction before EOF::
@@ -451,6 +457,41 @@ def _client_parser() -> argparse.ArgumentParser:
                     help="download the stacked npy here when done "
                          "(implies --wait)")
 
+    wf = sub.add_parser(
+        "workflow", help="POST a workflow DAG (docs/workflows.md)",
+        description="Submit a DAG of process lists as ONE spec-v3 "
+                    "envelope: nodes depend on nodes (`after` + "
+                    "upstream-output references), admitted atomically "
+                    "— a cycle or dangling reference rejects the whole "
+                    "request with nothing enqueued.")
+    wf.add_argument("--envelope", metavar="FILE", default=None,
+                    help="JSON file: a full v3 envelope or a bare "
+                         "{node: {process_list, after}} mapping")
+    wf.add_argument("--demo", action="store_true",
+                    help="submit the 3-stage demo DAG instead: "
+                         "recon -> downsample -> quantify")
+    wf.add_argument("--n-det", type=int, default=48)
+    wf.add_argument("--n-angles", type=int, default=48)
+    wf.add_argument("--n-rows", type=int, default=2)
+    wf.add_argument("--seed", type=int, default=0)
+    wf.add_argument("--priority", type=int, default=0)
+    wf.add_argument("--workflow-id", default=None)
+    wf.add_argument("--wait", action="store_true",
+                    help="poll until every node is terminal")
+    wfs = sub.add_parser("workflow-status",
+                         help="GET one workflow's per-node snapshot")
+    wfs.add_argument("workflow_id")
+    wft = sub.add_parser(
+        "workflow-trace",
+        help="GET the workflow-level linked trace (per-node spans + "
+             "DAG edges)")
+    wft.add_argument("workflow_id")
+    wfc = sub.add_parser("workflow-cancel",
+                         help="DELETE a workflow (cancel live nodes; "
+                              "downstream cones cascade)")
+    wfc.add_argument("workflow_id")
+    sub.add_parser("workflows", help="GET every workflow's summary")
+
     sws = sub.add_parser("sweep-status", help="GET one sweep's snapshot")
     sws.add_argument("sweep_id")
     swr = sub.add_parser("sweep-result",
@@ -528,6 +569,55 @@ def _parse_sweep_axis(s: str) -> dict:
     return axis
 
 
+def _demo_workflow(args) -> dict:
+    """The 3-stage demo DAG — recon -> downsample -> quantify, the
+    downstream nodes fed by upstream outputs (docs/workflows.md)."""
+    from ..core.process_list import ProcessList
+    from ..tomo import Downsample, HDF5LikeSaver, Quantify, UpstreamLoader
+    down = ProcessList()
+    down.add(UpstreamLoader,
+             params={"data": {"from_job": "recon", "dataset": "recon"}},
+             out_datasets=("vol",))
+    down.add(Downsample, params={"factor": 2},
+             in_datasets=("vol",), out_datasets=("small",))
+    down.add(HDF5LikeSaver, in_datasets=("small",))
+    quant = ProcessList()
+    quant.add(UpstreamLoader,
+              params={"data": {"from_job": "downsample",
+                               "dataset": "small"}},
+              out_datasets=("vol",))
+    quant.add(Quantify, in_datasets=("vol",), out_datasets=("stats",))
+    quant.add(HDF5LikeSaver, in_datasets=("stats",))
+    return {
+        "recon": {"process_list": to_spec(standard_chain(
+            n_det=args.n_det, n_angles=args.n_angles,
+            n_rows=args.n_rows, seed=args.seed))},
+        "downsample": {"process_list": to_spec(down)},
+        # the upstream reference already implies this edge; the
+        # explicit `after` just demonstrates the envelope field
+        "quantify": {"process_list": to_spec(quant),
+                     "after": ["downsample"]},
+    }
+
+
+def _workflow_main(client: PipelineClient, args) -> None:
+    if args.envelope:
+        with open(args.envelope) as fh:
+            doc = json.load(fh)
+        # accept a full v3 envelope or a bare node mapping
+        nodes = doc.get("workflow", doc) if isinstance(doc, dict) else doc
+    elif args.demo:
+        nodes = _demo_workflow(args)
+    else:
+        raise SystemExit("workflow needs --envelope FILE or --demo")
+    reply = client.workflow(nodes, workflow_id=args.workflow_id,
+                            priority=args.priority)
+    print(json.dumps(reply, indent=2))
+    if args.wait:
+        snap = client.wait_workflow(reply["workflow_id"])
+        print(json.dumps(snap, indent=2))
+
+
 def _ingest_main(client: PipelineClient, args) -> None:
     """Feed a frame stack into a streaming job chunk by chunk."""
     if args.npy:
@@ -599,6 +689,19 @@ def _client_main(argv: list[str]) -> None:
                              indent=2))
         elif args.action == "sweeps":
             print(json.dumps(client.sweeps(), indent=2))
+        elif args.action == "workflow":
+            _workflow_main(client, args)
+        elif args.action == "workflow-status":
+            print(json.dumps(client.workflow_status(args.workflow_id),
+                             indent=2))
+        elif args.action == "workflow-trace":
+            print(json.dumps(client.workflow_trace(args.workflow_id),
+                             indent=2))
+        elif args.action == "workflow-cancel":
+            print(json.dumps(client.cancel_workflow(args.workflow_id),
+                             indent=2))
+        elif args.action == "workflows":
+            print(json.dumps(client.workflows(), indent=2))
         elif args.action == "submit":
             if args.spec:
                 with open(args.spec) as fh:

@@ -20,6 +20,8 @@ from .wire import (WireError, chain_plugin_names, from_spec,
                    register_plugin, registered_plugins, registry_spec,
                    to_spec)
 from .worker import PipelineWorker
+from .workflow import (WorkflowError, WorkflowGroup, WorkflowManager,
+                       toposort)
 
 __all__ = [
     "Job", "JobState", "chain_signature", "JobQueue", "QueueFull",
@@ -31,4 +33,5 @@ __all__ = [
     "chain_plugin_names",
     "METRICS", "SweepAxis", "SweepError", "SweepGroup", "SweepManager",
     "expand_sweep", "parse_sweep_block",
+    "WorkflowError", "WorkflowGroup", "WorkflowManager", "toposort",
 ]

@@ -325,6 +325,92 @@ class PipelineClient:
                     f"({snap['counts']}) after {timeout}s")
             time.sleep(poll)
 
+    # -- workflow DAGs (docs/workflows.md) -------------------------------
+    def workflow(self, nodes: dict[str, Any], *,
+                 workflow_id: str | None = None, priority: int = 0,
+                 metadata: dict | None = None) -> dict[str, Any]:
+        """Submit a DAG of process lists as ONE spec-v3 envelope
+        (``POST /workflows``): each node is a process list, ``after``
+        lists upstream node names, and an ``upstream_loader`` entry with
+        ``{"data": {"from_job": "<node>", "dataset": "<name>"}}`` feeds
+        a node an upstream output (the reference also implies the edge).
+
+        Args:
+            nodes: ``{name: ProcessList}`` or ``{name:
+                {"process_list": ProcessList | spec,
+                 "after": [upstream names], "priority": int}}``.
+            workflow_id: explicit group id (node jobs are
+                ``{id}/{node}``).
+            priority: default for nodes that set none.
+            metadata: annotations copied onto every node job.
+
+        Returns: the submission reply — ``workflow_id``, ``state``,
+        ``n_nodes``, ``nodes`` (topological order), ``job_ids``.
+        Raises:
+            ServiceError: 400 invalid envelope (cycle, dangling
+                reference, bad spec — NOTHING was enqueued), 409
+                duplicate active id, 429 the whole DAG was rejected by
+                admission control.
+        """
+        wf: dict[str, Any] = {}
+        for name, node in nodes.items():
+            if isinstance(node, ProcessList):
+                node = {"process_list": node}
+            node = dict(node)
+            if isinstance(node.get("process_list"), ProcessList):
+                node["process_list"] = to_spec(node["process_list"])
+            wf[name] = node
+        envelope: dict[str, Any] = {"version": 3, "workflow": wf,
+                                    "priority": priority}
+        if workflow_id is not None:
+            envelope["workflow_id"] = workflow_id
+        if metadata:
+            envelope["metadata"] = metadata
+        return self._request("POST", "/workflows", envelope)
+
+    def workflow_status(self, workflow_id: str) -> dict[str, Any]:
+        """One workflow's snapshot (``GET /workflows/{id}``): aggregate
+        state, per-state counts, the DAG edges, and per-node job
+        snapshots (``waiting_on``, ``cancel_reason``...) keyed by node
+        name."""
+        return self._request(
+            "GET", f"/workflows/{quote(workflow_id, safe='')}")
+
+    def workflows(self) -> list[dict[str, Any]]:
+        """Every retained workflow's summary (``GET /workflows``)."""
+        return self._request("GET", "/workflows")["workflows"]
+
+    def workflow_trace(self, workflow_id: str) -> dict[str, Any]:
+        """The workflow-level linked trace
+        (``GET /workflows/{id}/trace``): per-node span timelines keyed
+        by node name, plus the DAG edges that connect them."""
+        return self._request(
+            "GET", f"/workflows/{quote(workflow_id, safe='')}/trace")
+
+    def cancel_workflow(self, workflow_id: str) -> dict[str, Any]:
+        """Cancel every live node (``DELETE /workflows/{id}``).  Queued
+        nodes cancel immediately and their downstream cones cascade;
+        returns the ``cancelled``/``skipped`` id lists."""
+        return self._request(
+            "DELETE", f"/workflows/{quote(workflow_id, safe='')}")
+
+    def wait_workflow(self, workflow_id: str,
+                      timeout: float | None = None,
+                      poll: float = 0.1) -> dict[str, Any]:
+        """Block until every node is terminal.  Returns the final group
+        snapshot (inspect ``snapshot["state"]`` — done / failed /
+        cancelled / partial).  Raises TimeoutError at the deadline."""
+        deadline = None if timeout is None else time.time() + timeout
+        while True:
+            snap = self.workflow_status(workflow_id)
+            if snap["all_terminal"]:
+                return snap
+            if deadline is not None and time.time() >= deadline:
+                raise TimeoutError(
+                    f"workflow {workflow_id!r} still {snap['state']!r} "
+                    f"({snap['counts']}) after {timeout}s")
+            time.sleep(poll)
+
     # -- worker-pull protocol (broker mode; docs/worker-protocol.md) ----
     def register_worker(self, *, worker_id: str | None = None,
                         plugins: list[str] | None = None,

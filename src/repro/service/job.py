@@ -196,6 +196,21 @@ class Job:
     frames_consumed: int = 0
     #: frames covered by the newest uploaded preview (broker mode)
     preview_watermark: int = 0
+    # -- workflow DAGs (docs/workflows.md) ------------------------------
+    #: upstream job ids this job depends on (fan-in); the job is only
+    #: poppable once every upstream is terminal-ok (DONE)
+    after: tuple[str, ...] = ()
+    #: upstream ids not yet DONE — maintained by the queue under its
+    #: lock; empty ⇒ dependencies satisfied
+    waiting: set[str] = dataclasses.field(default_factory=set)
+    #: subset of ``after`` whose RESULTS this job consumes (output
+    #: addressing); evicting such an upstream before this job runs
+    #: cancels it with ``upstream_evicted``
+    data_deps: tuple[str, ...] = ()
+    #: machine-readable reason for a CANCELLED state
+    #: ("user" | "upstream_failed" | "upstream_cancelled" |
+    #: "upstream_evicted"); None while not cancelled
+    cancel_reason: str | None = None
 
     def __post_init__(self):
         if not self.chain_sig:
@@ -209,6 +224,17 @@ class Job:
             self.streaming = True
         if self.streaming and self.stream is None:
             self.stream = StreamState()
+        self.after = tuple(self.after)
+        self.data_deps = tuple(self.data_deps)
+        if self.after and not self.waiting:
+            self.waiting = set(self.after)
+
+    def deps_ready(self) -> bool:
+        """Queue-eligibility gate: every upstream job is terminal-ok.
+        The queue clears ids from ``waiting`` as upstreams reach DONE
+        (and cascade-cancels this job when one fails), so an empty set
+        means "all dependencies satisfied"."""
+        return not self.waiting
 
     def stream_ready(self) -> bool:
         """Queue-eligibility gate: a streaming job may only be
@@ -257,6 +283,11 @@ class Job:
                 "worker_id": self.worker_id, "attempt": self.attempt,
                 "metadata": {k: v for k, v in self.metadata.items()
                              if _is_jsonable(v)}}
+        if self.after:
+            snap["after"] = list(self.after)
+            snap["waiting_on"] = sorted(self.waiting)
+        if self.cancel_reason is not None:
+            snap["cancel_reason"] = self.cancel_reason
         if self.streaming:
             snap["streaming"] = True
             snap["ingest_watermark"] = self.stream.watermark

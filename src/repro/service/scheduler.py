@@ -33,6 +33,8 @@ import time
 import traceback
 from typing import Any, Callable
 
+import numpy as np
+
 from ..core.framework import PluginRunner
 from ..core.plugin import _is_jsonable
 from ..core.profiler import Profiler
@@ -43,6 +45,31 @@ from .checkpoint import CheckpointStore
 from .job import Job, JobState
 from .queue import JobQueue
 from .wire import WireError, chain_plugin_names, to_spec
+
+
+class UpstreamGone(RuntimeError):
+    """A workflow job's upstream result reference cannot be resolved —
+    the upstream job (or its stored result) was evicted between the
+    dependency becoming ready and this job dispatching.  The job is
+    cancelled with ``cancel_reason="upstream_evicted"``, mirroring the
+    queue's own eviction cascade (docs/workflows.md)."""
+
+
+def _upstream_ref(params: dict[str, Any]) -> tuple[str, str | None] | None:
+    """The ``(from_job, dataset)`` upstream-result reference of an
+    ``upstream_loader`` entry, or None when the entry needs no
+    resolution (no ref, or the data/path is already materialised).
+    Accepts both wire forms: split ``from_job``/``dataset`` params and
+    the ``"data": {"from_job": ..., "dataset": ...}`` object."""
+    data = params.get("data")
+    if isinstance(data, dict) and data.get("from_job"):
+        return str(data["from_job"]), data.get("dataset")
+    if params.get("data") is not None or params.get("path"):
+        return None
+    fj = params.get("from_job")
+    if fj:
+        return str(fj), params.get("dataset")
+    return None
 
 
 def _observe_terminal(metrics: MetricsRegistry | None, job: Job) -> None:
@@ -126,6 +153,12 @@ class PipelineScheduler:
         self.fuse = fuse
         self.compile_cache = compile_cache   # held for stats reporting
         self.metrics = metrics
+        # terminal transitions the QUEUE performs (queue-side cancels,
+        # workflow dependency cascades) are observed here — the
+        # scheduler observes its own in _finish, so every terminal job
+        # is counted exactly once (docs/workflows.md)
+        queue.add_terminal_hook(
+            lambda job: _observe_terminal(self.metrics, job))
         self._threads: list[threading.Thread] = []
         self._stop = threading.Event()
         self._lock = threading.Lock()
@@ -228,12 +261,71 @@ class PipelineScheduler:
         if self.checkpoints is not None:
             self.checkpoints.clear(job.job_id)
 
+    # -- workflow upstream inputs (docs/workflows.md) -------------------
+    def _upstream_array(self, from_job: str,
+                        dataset: str | None) -> np.ndarray:
+        """Resolve one upstream-result reference against the queue: the
+        upstream job's live runner datasets (in-process runs) or its
+        remote ``.npy`` (mixed deployments).  Raises UpstreamGone when
+        the upstream — or its result — is no longer reachable."""
+        try:
+            up = self.queue.job(from_job)
+        except KeyError:
+            raise UpstreamGone(
+                f"upstream {from_job!r} was evicted before its result "
+                f"was consumed") from None
+        if up.state is not JobState.DONE:
+            raise UpstreamGone(
+                f"upstream {from_job!r} is {up.state.value}, not done")
+        if up.remote_results:
+            name = dataset or next(
+                (k for k in up.remote_results if not k.startswith("__")),
+                None)
+            path = up.remote_results.get(name) if name else None
+            if path is None or not os.path.exists(path):
+                raise UpstreamGone(
+                    f"upstream {from_job!r} has no stored result "
+                    f"{name or dataset!r}")
+            return np.load(path)
+        runner = up.runner
+        if runner is None:
+            raise UpstreamGone(
+                f"upstream {from_job!r} result was evicted "
+                f"(max_history)")
+        name = dataset or (runner.result_names() or [None])[0]
+        if name is None or name not in runner.datasets:
+            raise UpstreamGone(
+                f"upstream {from_job!r} has no dataset {name!r} "
+                f"(available: {sorted(runner.datasets)})")
+        return np.ascontiguousarray(
+            np.asarray(runner.transport.read(runner.datasets[name])))
+
+    def _resolve_upstream(self, job: Job) -> None:
+        """Materialise every upstream-result reference in the job's
+        chain before the runner is built: the referenced array rides in
+        as the entry's ``data`` param (``upstream_loader``).  The
+        resolved value is a data param — excluded from the chain
+        signature — so downstream nodes still gang with other ready
+        jobs."""
+        for e in job.process_list.entries:
+            ref = _upstream_ref(e.params)
+            if ref is None:
+                continue
+            with job.trace.span("upstream.fetch", from_job=ref[0]):
+                e.params["data"] = self._upstream_array(*ref)
+
+    def _cancel_evicted(self, job: Job, exc: UpstreamGone) -> None:
+        job.error = str(exc)
+        job.state = JobState.CANCELLED
+        job.cancel_reason = "upstream_evicted"
+
     def _run_job(self, job: Job) -> None:
         job.started_at = time.time()
         job.state = JobState.CHECKING
         self._dispatched(job)
         try:
             with use_trace(job.trace):
+                self._resolve_upstream(job)
                 runner = PluginRunner(job.process_list,
                                       self.transport_factory(job),
                                       profiler=Profiler(trace=job.trace),
@@ -249,6 +341,8 @@ class PipelineScheduler:
                     self._drive_stream(job, runner)
                 else:
                     self._drive(job, runner)
+        except UpstreamGone as e:
+            self._cancel_evicted(job, e)
         except Exception as e:
             self._fail(job, e)
         finally:
@@ -326,6 +420,8 @@ class PipelineScheduler:
             job.state = JobState.CHECKING
             self._dispatched(job)
             try:
+                with use_trace(job.trace):
+                    self._resolve_upstream(job)
                 r = PluginRunner(job.process_list, transport,
                                  profiler=Profiler(trace=job.trace),
                                  fuse=self.fuse)
@@ -341,6 +437,9 @@ class PipelineScheduler:
                 else:
                     runners.append(r)
                     live.append(job)
+            except UpstreamGone as e:
+                self._cancel_evicted(job, e)
+                self._finish([job])
             except Exception as e:
                 self._fail(job, e)
                 self._finish([job])
@@ -427,7 +526,10 @@ class PipelineScheduler:
             # whole trace into the plugin-wall histograms here
             _observe_terminal(self.metrics, job)
             _observe_plugin_spans(self.metrics, job.trace.spans())
-        self.queue.notify_terminal()
+        for job in jobs:
+            # per-job so the queue can propagate DONE/FAILED/CANCELLED
+            # into each job's downstream cone (docs/workflows.md)
+            self.queue.notify_terminal(job)
 
 
 # ======================================================================
@@ -537,6 +639,12 @@ class WorkerBroker:
         """
         self.queue = queue
         self.metrics = metrics
+        # exactly-once outcome attribution: terminal transitions the
+        # QUEUE performs (queue-side cancels, workflow dependency
+        # cascades) fire this hook; the broker observes its own
+        # transitions inline (docs/workflows.md)
+        queue.add_terminal_hook(
+            lambda job: _observe_terminal(self.metrics, job))
         self.lease_ttl = lease_ttl
         self.sweep_interval = (sweep_interval if sweep_interval is not None
                                else min(1.0, lease_ttl / 4))
@@ -697,9 +805,22 @@ class WorkerBroker:
             jobs = self.queue.get_batch(n, timeout=timeout, predicate=pred)
         out = []
         now = time.time()
+        with self._lock:
+            shared_fs = w.shared_fs
         for job in jobs:
             try:
                 spec = to_spec(job.process_list)
+                self._resolve_upstream_spec(job, spec, shared_fs)
+            except UpstreamGone as e:
+                job.error = str(e)
+                job.state = JobState.CANCELLED
+                job.cancel_reason = "upstream_evicted"
+                job.finished_at = time.time()
+                with self._lock:
+                    self._required.pop(job.job_id, None)
+                _observe_terminal(self.metrics, job)
+                self.queue.notify_terminal(job)
+                continue
             except WireError as e:
                 job.error = f"WireError: {e}"
                 job.state = JobState.FAILED
@@ -708,7 +829,7 @@ class WorkerBroker:
                     self.jobs_failed += 1
                     self._required.pop(job.job_id, None)
                 _observe_terminal(self.metrics, job)
-                self.queue.notify_terminal()
+                self.queue.notify_terminal(job)
                 continue
             with self._lock:
                 job.worker_id = worker_id
@@ -735,6 +856,56 @@ class WorkerBroker:
                              if _is_jsonable(v)},
                 "lease_ttl": self.lease_ttl})
         return out
+
+    # -- workflow upstream inputs (docs/workflows.md) -------------------
+    def _resolve_upstream_spec(self, job: Job, spec: dict[str, Any],
+                               shared_fs: bool) -> None:
+        """Rewrite upstream-result references in the SERIALISED spec at
+        lease time.  Shared-fs workers get the broker-side ``.npy``
+        path spliced in (zero-copy hand-off); remote workers keep the
+        ref and fetch it over ``GET /jobs/{id}/result``.  Only the
+        descriptor's spec dict is touched — never ``job.process_list``
+        — so a lease expiry + re-lease to a differently-capable worker
+        re-resolves from scratch.  Raises UpstreamGone when the
+        upstream result is no longer reachable."""
+        for ent in spec.get("plugins", ()):
+            params = ent.get("params")
+            if not isinstance(params, dict):
+                continue
+            ref = _upstream_ref(params)
+            if ref is None:
+                continue
+            from_job, dataset = ref
+            try:
+                up = self.queue.job(from_job)
+            except KeyError:
+                raise UpstreamGone(
+                    f"upstream {from_job!r} was evicted before its "
+                    f"result was consumed") from None
+            if up.state is not JobState.DONE:
+                raise UpstreamGone(
+                    f"upstream {from_job!r} is {up.state.value}, "
+                    f"not done")
+            name = dataset or next(
+                (k for k in up.remote_results if not k.startswith("__")),
+                None)
+            path = up.remote_results.get(name) if name else None
+            if path is None or not os.path.exists(path):
+                raise UpstreamGone(
+                    f"upstream {from_job!r} has no stored result "
+                    f"{name or dataset!r}")
+            params = dict(params)
+            if shared_fs:
+                params.pop("data", None)
+                params["path"] = path
+                params["from_job"] = None
+            else:
+                # normalise to the split form the worker resolves over
+                # HTTP (GET /jobs/{from_job}/result?dataset=...)
+                params.pop("data", None)
+                params["from_job"] = from_job
+                params["dataset"] = name
+            ent["params"] = params
 
     # -- heartbeat / progress -------------------------------------------
     def progress(self, job_id: str, worker_id: str,
@@ -788,6 +959,7 @@ class WorkerBroker:
                 self._drop_lease_locked(job_id, worker_id)
                 if not job.state.terminal():
                     job.state = JobState.CANCELLED
+                    job.cancel_reason = job.cancel_reason or "user"
                     job.finished_at = now
                     _observe_terminal(self.metrics, job)
                 verdict = {"verdict": "cancelled"}
@@ -813,6 +985,15 @@ class WorkerBroker:
                 if isinstance(body.get("preview_watermark"), int):
                     job.preview_watermark = max(job.preview_watermark,
                                                 body["preview_watermark"])
+                if self.metrics is not None and isinstance(
+                        body.get("window_latency"), (int, float)) and \
+                        not isinstance(body.get("window_latency"), bool):
+                    # worker-side pump wall for the freshest streamed
+                    # window — transient on the heartbeat (shipped once,
+                    # never re-posted), closing the ROADMAP gap of
+                    # stream.window_latency_s being scheduler-mode only
+                    self.metrics.histogram("stream.window_latency_s") \
+                        .observe(max(0.0, float(body["window_latency"])))
                 if body.get("park") and job.streaming:
                     # starved streaming worker: hand the job back to the
                     # queue (a checkpoint was just reported) so the
@@ -826,7 +1007,7 @@ class WorkerBroker:
                     self.queue.requeue(job)
                     return {"verdict": "parked"}
                 return {"verdict": "ok", "lease_ttl": self.lease_ttl}
-        self.queue.notify_terminal()
+        self.queue.notify_terminal(job)
         return verdict
 
     def _fold_ingest_locked(self, job: Job, watermark: int,
@@ -958,7 +1139,7 @@ class WorkerBroker:
             job.finished_at = now
             self._required.pop(job_id, None)
         _observe_terminal(self.metrics, job)
-        self.queue.notify_terminal()
+        self.queue.notify_terminal(job)
         return {"job_id": job_id, "state": job.state.value}
 
     # -- cancellation ---------------------------------------------------
@@ -1002,6 +1183,7 @@ class WorkerBroker:
             self.metrics.counter("lease.expired").inc()
         if job.cancel_requested and not job.state.terminal():
             job.state = JobState.CANCELLED
+            job.cancel_reason = job.cancel_reason or "user"
             job.finished_at = time.time()
             _observe_terminal(self.metrics, job)
             return
@@ -1016,6 +1198,7 @@ class WorkerBroker:
         any path (cancel, failure, eviction) — the cache must not grow
         for the broker's lifetime."""
         now = time.time()
+        touched: list[Job] = []
         with self._lock:
             expired = [(jid, ls) for jid, ls in self._leases.items()
                        if now > ls.expires_at]
@@ -1028,14 +1211,18 @@ class WorkerBroker:
                 self._end_lease_locked(job, ls, "expired", now)
                 if not job.state.terminal():
                     self._requeue_locked(job)
+                touched.append(job)
             for jid in list(self._required):
                 try:
                     if self.queue.job(jid).state.terminal():
                         del self._required[jid]
                 except KeyError:
                     del self._required[jid]
-        if expired:
-            self.queue.notify_terminal()
+        for job in touched:
+            # per-job: a cancel-flagged expiry went CANCELLED and must
+            # cascade into its downstream cone; plain requeues are
+            # non-terminal and only wake capacity waiters
+            self.queue.notify_terminal(job)
 
     def _sweep_loop(self, stop: threading.Event) -> None:
         while not stop.wait(self.sweep_interval):

@@ -26,6 +26,15 @@ Endpoints (JSON unless noted; see ``docs/service.md``):
 ``GET /sweeps/{id}/result`` the stacked ``.npy`` — parameter axes as
                             the new leading dimension(s)
 ``DELETE /sweeps/{id}``     cancel every live variant
+``POST /workflows``         submit a spec-v3 DAG of process lists in
+                            one atomic request (``docs/workflows.md``;
+                            400 on cycles/dangling refs)
+``GET /workflows[/{id}]``   workflow group status (per-node snapshots,
+                            DAG edges, aggregate state)
+``GET /workflows/{id}/trace``  linked trace: every node's span
+                            timeline in one document
+``DELETE /workflows/{id}``  cancel every live node (queued downstream
+                            nodes cascade automatically)
 ``GET /jobs/{id}/trace``    the job's cross-process span timeline
                             (``?format=text`` renders an ASCII gantt;
                             ``docs/observability.md``)
@@ -72,10 +81,10 @@ from .checkpoint import CheckpointStore
 from .compile_cache import CompileCache
 from .job import Job, JobState
 from .queue import JobQueue, QueueFull
-from .scheduler import LeaseLost, PipelineScheduler, WorkerBroker, \
-    _observe_terminal
+from .scheduler import LeaseLost, PipelineScheduler, WorkerBroker
 from .sweep import SweepError, SweepGroup, SweepManager
 from .wire import WireError, from_spec, registry_spec
+from .workflow import WorkflowError, WorkflowGroup, WorkflowManager
 
 _JOB_RE = re.compile(r"^/jobs/([^/]+)$")
 _RESULT_RE = re.compile(r"^/jobs/([^/]+)/result$")
@@ -87,6 +96,8 @@ _PROGRESS_RE = re.compile(r"^/jobs/([^/]+)/progress$")
 _COMPLETE_RE = re.compile(r"^/jobs/([^/]+)/complete$")
 _SWEEP_RE = re.compile(r"^/sweeps/([^/]+)$")
 _SWEEP_RESULT_RE = re.compile(r"^/sweeps/([^/]+)/result$")
+_WORKFLOW_RE = re.compile(r"^/workflows/([^/]+)$")
+_WORKFLOW_TRACE_RE = re.compile(r"^/workflows/([^/]+)/trace$")
 
 
 class PipelineService:
@@ -161,6 +172,7 @@ class PipelineService:
                 metrics=self.metrics)
         self.sweeps = SweepManager(self.queue, fetch=self._variant_array,
                                    max_variants=max_sweep_variants)
+        self.workflows = WorkflowManager(self.queue)
         self.token = token
         self.trace_spool = (TraceSpool(trace_spool)
                             if isinstance(trace_spool, str) else trace_spool)
@@ -247,11 +259,10 @@ class PipelineService:
         job = self.queue.job(job_id)
         out = {"job_id": job_id, "cancelled": cancelled,
                "state": job.state.value}
-        if cancelled:
-            # queue-side cancel is the one terminal transition neither
-            # scheduler nor broker sees — observe it here
-            _observe_terminal(self.metrics, job)
-        elif self.broker is not None \
+        # a queue-side cancel (and any dependency cascade it triggers)
+        # is observed by the queue's terminal hooks — registered by both
+        # scheduler and broker — so outcome metrics stay exactly-once
+        if not cancelled and self.broker is not None \
                 and self.broker.request_cancel(job_id):
             out.update(cancelled=True, pending=True)
         return out
@@ -370,6 +381,43 @@ class PipelineService:
         if unknown."""
         return self.sweeps.cancel(sweep_id, self.cancel)
 
+    # -- workflow DAGs (docs/workflows.md) ------------------------------
+    def submit_workflow(self, envelope: dict[str, Any]) -> WorkflowGroup:
+        """Admit one spec-v3 workflow envelope (``POST /workflows``): a
+        DAG of process lists validated (cycles, dangling refs → 400)
+        and admitted atomically.  See :meth:`WorkflowManager.submit`
+        for the error contract."""
+        group = self.workflows.submit(envelope)
+        self.metrics.counter("jobs.submitted").inc(group.n_nodes)
+        return group
+
+    def cancel_workflow(self, workflow_id: str) -> dict[str, Any]:
+        """Cancel every live node of ``workflow_id``
+        (``DELETE /workflows/{id}``) — queued nodes cancel immediately
+        (their downstream cones cascade), leased ones at their worker's
+        next heartbeat.  Raises KeyError if unknown."""
+        return self.workflows.cancel(workflow_id, self.cancel)
+
+    def workflow_trace(self, workflow_id: str) -> dict[str, Any]:
+        """The workflow-level linked trace (``GET
+        /workflows/{id}/trace``): per-node span timelines, falling back
+        to the trace spool for evicted node jobs."""
+        return self.workflows.trace(workflow_id, self._job_trace_doc)
+
+    def _job_trace_doc(self, job_id: str) -> dict[str, Any]:
+        """One job's trace as a wire document — live trace when the job
+        record survives, trace-spool fallback after eviction.  Raises
+        KeyError when neither has it."""
+        try:
+            job = self.queue.job(job_id)
+        except KeyError:
+            rec = (self.trace_spool.get(job_id)
+                   if self.trace_spool is not None else None)
+            if rec is None:
+                raise
+            return rec
+        return {"job_id": job_id, **job.trace.to_wire()}
+
     def _variant_array(self, job_id: str, dataset: str | None = None
                        ) -> np.ndarray:
         """One DONE variant's result as a host array — covers both the
@@ -388,6 +436,7 @@ class PipelineService:
         out = (self.broker.stats() if self.broker is not None
                else self.scheduler.stats())
         out["sweeps"] = self.sweeps.stats()
+        out["workflows"] = self.workflows.stats()
         out["metrics"] = self.metrics.snapshot()
         return out
 
@@ -618,6 +667,26 @@ class _PipelineHandler(BaseHTTPRequestHandler):
             return self._json(200, {"jobs": svc.queue.snapshot()})
         if path == "/sweeps":
             return self._json(200, {"sweeps": svc.sweeps.snapshot_all()})
+        if path == "/workflows":
+            return self._json(
+                200, {"workflows": svc.workflows.snapshot_all()})
+        # trace regex first — _WORKFLOW_RE would also match ".../trace"
+        m = _WORKFLOW_TRACE_RE.match(path)
+        if m:
+            workflow_id = unquote(m.group(1))
+            try:
+                return self._json(200, svc.workflow_trace(workflow_id))
+            except KeyError:
+                return self._error(
+                    404, f"unknown workflow {workflow_id!r}")
+        m = _WORKFLOW_RE.match(path)
+        if m:
+            workflow_id = unquote(m.group(1))
+            try:
+                return self._json(200, svc.workflows.status(workflow_id))
+            except KeyError:
+                return self._error(
+                    404, f"unknown workflow {workflow_id!r}")
         m = _SWEEP_RESULT_RE.match(path)
         if m:
             return self._send_sweep_result(
@@ -708,6 +777,8 @@ class _PipelineHandler(BaseHTTPRequestHandler):
             return self._submit()
         if path == "/sweeps":
             return self._submit_sweep()
+        if path == "/workflows":
+            return self._submit_workflow()
         if path == "/workers":
             return self._broker_call(
                 lambda b, body: (201, b.register(body)))
@@ -757,6 +828,23 @@ class _PipelineHandler(BaseHTTPRequestHandler):
             "sweep_id": group.sweep_id, "state": group.state(),
             "n_variants": group.n_variants, "shape": list(group.shape),
             "axes": [a.spec() for a in group.axes],
+            "job_ids": [j.job_id for j in group.jobs]})
+
+    def _submit_workflow(self) -> None:
+        # NB: WorkflowError/WireError are ValueError subclasses — they
+        # must be caught before the duplicate-id ValueError below
+        try:
+            envelope = self._read_body()
+            group = self.service.submit_workflow(envelope)
+        except (WorkflowError, WireError, ProcessListError) as e:
+            return self._error(400, str(e))
+        except QueueFull as e:
+            return self._error(429, str(e))
+        except ValueError as e:       # duplicate active workflow/job id
+            return self._error(409, str(e))
+        self._json(201, {
+            "workflow_id": group.workflow_id, "state": group.state(),
+            "n_nodes": group.n_nodes, "nodes": list(group.nodes),
             "job_ids": [j.job_id for j in group.jobs]})
 
     # -- streaming ingest (docs/streaming.md) ---------------------------
@@ -914,6 +1002,15 @@ class _PipelineHandler(BaseHTTPRequestHandler):
                 return self._json(200, self.service.cancel_sweep(sweep_id))
             except KeyError:
                 return self._error(404, f"unknown sweep {sweep_id!r}")
+        m = _WORKFLOW_RE.match(path)
+        if m:
+            workflow_id = unquote(m.group(1))
+            try:
+                return self._json(
+                    200, self.service.cancel_workflow(workflow_id))
+            except KeyError:
+                return self._error(
+                    404, f"unknown workflow {workflow_id!r}")
         m = _JOB_RE.match(path)
         if not m:
             return self._error(404, f"no route for DELETE {self.path}")

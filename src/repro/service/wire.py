@@ -39,6 +39,12 @@ WIRE_VERSION = 1
 #: loader dataset is fed frame-by-frame via POST /jobs/{id}/frames
 #: instead of being complete at step 0 — docs/streaming.md)
 WIRE_VERSION_STREAMING = 2
+#: spec v3 = the ``POST /workflows`` envelope: a DAG of NODES, each
+#: node carrying a v1/v2 process-list spec plus ``"after"`` edges and
+#: upstream-result references (docs/workflows.md).  Parsed by
+#: ``repro.service.workflow`` — individual process-list specs stay
+#: v1/v2, which is why v3 is not in ``_ACCEPTED_VERSIONS`` here.
+WIRE_VERSION_WORKFLOW = 3
 _ACCEPTED_VERSIONS = (WIRE_VERSION, WIRE_VERSION_STREAMING)
 
 #: wire name -> plugin class.  Seeded with the tomography chain below;
@@ -248,7 +254,10 @@ def _register_defaults() -> None:
     from ..tomo import plugins as tomo
     for cls in (tomo.SyntheticTomoLoader, tomo.DarkFlatCorrection,
                 tomo.PaganinFilter, tomo.RingRemoval, tomo.SinogramFilter,
-                tomo.FBPRecon, tomo.HDF5LikeSaver):
+                tomo.FBPRecon, tomo.HDF5LikeSaver,
+                # workflow building blocks (docs/workflows.md): ingest
+                # an upstream node's result, then post-process it
+                tomo.UpstreamLoader, tomo.Downsample, tomo.Quantify):
         register_plugin(cls)
 
 

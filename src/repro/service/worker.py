@@ -293,8 +293,14 @@ class PipelineWorker:
             self._trace = None
         return hb.dropped
 
-    def _check(self, job_id: str, **fields: Any) -> None:
-        """Post a progress heartbeat and enforce the verdict."""
+    def _check(self, job_id: str, transient: dict[str, Any] | None = None,
+               **fields: Any) -> None:
+        """Post a progress heartbeat and enforce the verdict.
+
+        ``transient`` fields ride on THIS post only — they never enter
+        ``_progress_fields``, which the heartbeat thread re-posts
+        verbatim (a one-shot measurement like ``window_latency`` must
+        not be re-observed on every renewal)."""
         # rebind instead of .update(): the heartbeat thread snapshots
         # this dict concurrently, and a dict is never mutated once
         # published (no resize-during-copy race)
@@ -302,7 +308,7 @@ class PipelineWorker:
         # spans ride along transiently — NOT in _progress_fields, which
         # the heartbeat thread re-posts verbatim (the broker dedups on
         # span_id anyway, this just keeps payloads lean)
-        body = dict(self._progress_fields)
+        body = {**self._progress_fields, **(transient or {})}
         tr = self._trace
         shipped = tr.take_unshipped() if tr is not None else []
         if shipped:
@@ -336,6 +342,7 @@ class PipelineWorker:
         with use_trace(trace), \
                 trace.span("attempt", attempt=desc.get("attempt")):
             pl = from_spec(desc["process_list"])
+            self._resolve_upstream(pl, trace)
             runner = PluginRunner(pl, self.transport_factory(desc),
                                   profiler=Profiler(
                                       trace=trace,
@@ -376,6 +383,22 @@ class PipelineWorker:
         self.jobs_done += 1
         if self.checkpoints is not None:
             self.checkpoints.clear(job_id)
+
+    def _resolve_upstream(self, pl: Any, trace: Trace) -> None:
+        """Fetch upstream workflow outputs referenced by split-form
+        ``from_job``/``dataset`` params (the broker normalises
+        descriptor references to this form for upload-mode workers;
+        shared-fs descriptors carry a ``path`` instead, which
+        ``upstream_loader`` reads directly) — docs/workflows.md."""
+        for e in pl.entries:
+            params = e.params
+            fj = params.get("from_job")
+            if not isinstance(fj, str) or params.get("data") is not None \
+                    or params.get("path"):
+                continue
+            with trace.span("upstream.fetch", from_job=fj):
+                params["data"] = self.client.result(
+                    fj, params.get("dataset") or None)
 
     # -- streaming --------------------------------------------------------
     def _stream_steps(self, job_id: str, runner: PluginRunner,
@@ -431,7 +454,9 @@ class PipelineWorker:
             if eof and fed == total and not eof_marked:
                 runner.mark_eof()
                 eof_marked = True
+            t0 = time.time()
             did = runner.pump()
+            pumped = time.time() - t0
             if frames is None and not did and \
                     runner.current_step < runner.n_steps:
                 raise RuntimeError("streaming job stalled after EOF: "
@@ -439,8 +464,12 @@ class PipelineWorker:
             if self.checkpoints is not None:
                 with trace.span("checkpoint.save"):
                     self.checkpoints.save(job_id, runner)
+            # window latency is a one-shot observation → transient, so
+            # lease renewals can't re-observe it (docs/streaming.md)
             self._check(job_id, plugin_index=runner.current_step,
-                        ingest_watermark=fed)
+                        ingest_watermark=fed,
+                        transient={"window_latency": pumped}
+                        if did else None)
             if self.preview_interval > 0 and \
                     time.time() - last_preview >= self.preview_interval:
                 last_preview = time.time()
@@ -542,8 +571,9 @@ class PipelineWorker:
                     if self._verdict(jid) != "ok":
                         dropped.add(jid)
                         continue
-                    runner = PluginRunner(from_spec(d["process_list"]),
-                                          transport,
+                    pl = from_spec(d["process_list"])
+                    self._resolve_upstream(pl, tr)
+                    runner = PluginRunner(pl, transport,
                                           profiler=Profiler(
                                               trace=tr,
                                               worker_id=self.worker_id))

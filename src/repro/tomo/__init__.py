@@ -3,15 +3,15 @@
 from .geometry import ParallelGeometry
 from .phantom import (forward_project, phantom_stack, shepp_logan,
                       simulate_raw_scan)
-from .plugins import (DarkFlatCorrection, FBPRecon, HDF5LikeSaver,
-                      PaganinFilter, RingRemoval, SinogramFilter,
-                      SyntheticTomoLoader)
+from .plugins import (DarkFlatCorrection, Downsample, FBPRecon,
+                      HDF5LikeSaver, PaganinFilter, Quantify, RingRemoval,
+                      SinogramFilter, SyntheticTomoLoader, UpstreamLoader)
 
 __all__ = [
     "ParallelGeometry", "shepp_logan", "phantom_stack", "forward_project",
     "simulate_raw_scan", "SyntheticTomoLoader", "DarkFlatCorrection",
     "PaganinFilter", "RingRemoval", "SinogramFilter", "FBPRecon",
-    "HDF5LikeSaver",
+    "HDF5LikeSaver", "UpstreamLoader", "Downsample", "Quantify",
 ]
 
 

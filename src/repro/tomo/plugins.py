@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.dataset import DataSet
-from ..core.patterns import PROJECTION, SINOGRAM, VOLUME_XZ
+from ..core.patterns import PROJECTION, SINOGRAM, TIMESERIES, VOLUME_XZ
 from ..core.plugin import BaseFilter, BaseLoader, BasePlugin, BaseRecon, BaseSaver
 from ..kernels.backproject.ops import backproject
 from ..kernels.correction.ops import correct
@@ -227,6 +227,125 @@ class FBPRecon(BaseRecon):
         img = backproject(block, self._angles, self._out_size,
                           use_pallas=self.params["use_pallas"])
         return img / self._mu      # linearised path -> attenuation units
+
+
+class UpstreamLoader(BaseLoader):
+    """Workflow stage input (docs/workflows.md): loads another job's
+    result volume as this chain's starting dataset.
+
+    In a spec the reference is ``{"data": {"from_job": "<node>",
+    "dataset": "<name>"}}`` (or the split ``from_job``/``dataset``
+    params).  The service resolves it before execution — the scheduler
+    injects the array into ``data``, the broker splices a shared-fs
+    ``path``, a remote worker fetches over HTTP — so by ``load()`` time
+    exactly one of ``data`` (an array) or ``path`` is materialised.
+    All four params are ``data_params``: they select WHICH volume, so
+    downstream chains of different workflows share one chain signature
+    (and compiled programs) and may gang.
+    """
+
+    name = "upstream_loader"
+    parameters = {"from_job": None, "dataset": None, "data": None,
+                  "path": None}
+    data_params = ("from_job", "dataset", "data", "path")
+
+    def load(self) -> list[DataSet]:
+        p = self.params
+        data = p["data"]
+        if isinstance(data, dict):
+            raise RuntimeError(
+                f"upstream_loader: unresolved upstream reference {data!r} "
+                f"— submit through the service (POST /workflows) so it "
+                f"is resolved at dispatch time")
+        if data is None and p["path"]:
+            data = np.load(p["path"])
+        if data is None:
+            raise RuntimeError(
+                "upstream_loader: no input — neither a resolved 'data' "
+                "array nor a 'path' was provided")
+        arr = np.asarray(data)
+        if arr.ndim == 2:
+            arr = arr[None]
+        if arr.ndim != 3:
+            raise RuntimeError(
+                f"upstream_loader: expected a (y, z, x) volume, got "
+                f"shape {arr.shape}")
+        ds = DataSet(self.out_dataset_names[0], arr.shape, arr.dtype,
+                     ("voxel_y", "voxel_z", "voxel_x"),
+                     backing=lambda: arr)
+        ds.add_pattern(VOLUME_XZ, core=("voxel_z", "voxel_x"),
+                       slice_=("voxel_y",))
+        return [ds]
+
+
+class Downsample(BaseFilter):
+    """Block-mean downsampling of a reconstructed volume's in-plane
+    dims — the classic post-recon reduction stage (Ot2Rec-style staged
+    campaigns run it between reconstruction and quantification)."""
+
+    name = "downsample"
+    pattern_name = VOLUME_XZ
+    frames = 1
+    parameters = {"factor": 2}
+
+    def setup(self, in_datasets):
+        (din,) = in_datasets
+        f = int(self.params["factor"])
+        if f < 1:
+            raise ValueError(f"downsample: factor must be >= 1, got {f}")
+        y = din.shape[din.label_index("voxel_y")]
+        z = din.shape[din.label_index("voxel_z")]
+        x = din.shape[din.label_index("voxel_x")]
+        if z % f or x % f:
+            raise ValueError(
+                f"downsample: factor {f} must divide the in-plane dims "
+                f"({z}, {x})")
+        dout = DataSet(self.out_dataset_names[0], (y, z // f, x // f),
+                       np.float32, ("voxel_y", "voxel_z", "voxel_x"))
+        dout.add_pattern(VOLUME_XZ, core=("voxel_z", "voxel_x"),
+                         slice_=("voxel_y",))
+        dout.metadata = dict(din.metadata)
+        self.chunk_frames(self.pattern_name, self.frames)
+        return [dout]
+
+    def process_frames(self, frames):
+        (block,) = frames          # (m, z, x)
+        f = int(self.params["factor"])
+        m, z, x = block.shape
+        return jnp.mean(
+            block.reshape(m, z // f, f, x // f, f).astype(jnp.float32),
+            axis=(2, 4))
+
+
+class Quantify(BaseFilter):
+    """Per-slice summary statistics (mean/std/min/max) of a volume —
+    the terminal quantification stage of a recon → downsample →
+    quantify workflow."""
+
+    name = "quantify"
+    n_in_datasets = 1
+    n_out_datasets = 1
+    out_pattern_name = TIMESERIES
+    parameters: dict = {}
+
+    def setup(self, in_datasets):
+        (din,) = in_datasets
+        y = din.shape[din.label_index("voxel_y")]
+        dout = DataSet(self.out_dataset_names[0], (y, 4), np.float32,
+                       ("voxel_y", "stat"))
+        dout.add_pattern(TIMESERIES, core=("stat",), slice_=("voxel_y",))
+        dout.metadata = dict(din.metadata)
+        for pd in self.in_data:
+            pd.pattern_name = VOLUME_XZ
+            pd.n_frames = 1
+        return [dout]
+
+    def process_frames(self, frames):
+        (block,) = frames          # (m, z, x)
+        flat = block.reshape(block.shape[0], -1).astype(jnp.float32)
+        return jnp.stack([jnp.mean(flat, axis=1), jnp.std(flat, axis=1),
+                          jnp.min(flat, axis=1), jnp.max(flat, axis=1)],
+                         axis=-1)
 
 
 class HDF5LikeSaver(BaseSaver):

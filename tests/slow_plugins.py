@@ -9,7 +9,7 @@ started WITHOUT the import must never be leased a chain containing
 """
 import time
 
-from repro.core.patterns import PROJECTION
+from repro.core.patterns import PROJECTION, VOLUME_XZ
 from repro.core.plugin import BaseFilter
 from repro.service import register_plugin
 
@@ -28,3 +28,37 @@ class SlowIdentity(BaseFilter):
     def process_frames(self, frames):
         time.sleep(self.params["delay"])
         return frames[0]
+
+
+@register_plugin
+class SlowVolumeIdentity(BaseFilter):
+    """Volume-pattern pass-through that sleeps per slice — slows a
+    workflow's DOWNSTREAM node (which consumes an upstream VOLUME
+    output, docs/workflows.md) so its worker can be SIGKILLed
+    mid-node."""
+
+    name = "slow_volume_identity"
+    pattern_name = VOLUME_XZ
+    frames = 1
+    fusable = False
+    parameters = {"delay": 0.1}
+
+    def process_frames(self, frames):
+        time.sleep(self.params["delay"])
+        return frames[0]
+
+
+@register_plugin
+class FailingPlugin(BaseFilter):
+    """Raises on the first frame — drives a workflow node to FAILED so
+    the downstream cascade (cancelled(reason="upstream_failed")) can be
+    asserted."""
+
+    name = "failing_plugin"
+    pattern_name = PROJECTION
+    frames = 1
+    fusable = False
+    parameters = {"message": "injected failure"}
+
+    def process_frames(self, frames):
+        raise RuntimeError(self.params["message"])

@@ -326,6 +326,42 @@ def test_starved_stream_parks_lease(tmp_path):
         svc.stop()
 
 
+def test_broker_mode_records_window_latency(tmp_path):
+    """Regression: ``stream.window_latency_s`` must be observed in
+    broker mode too (it was scheduler-mode only) — the worker times each
+    ``pump`` and ships the measurement transiently on its next progress
+    post, where the broker folds it into the histogram.  Transient means
+    bare lease renewals must not re-observe a stale value."""
+    svc = PipelineService(workers_remote=True, lease_ttl=5.0,
+                          sweep_interval=0.1)
+    host, port = svc.serve(port=0)
+    client = PipelineClient(f"http://{host}:{port}", timeout=60.0)
+    spec = _spec(seed=37)
+    frames = _frames(spec)
+    w = PipelineWorker(client.base_url, worker_id="lw", poll=0.01,
+                       checkpoint_dir=str(tmp_path / "ck"),
+                       preview_interval=0.0)
+    try:
+        jid = client.submit(spec)
+        client.ingest(jid, frames, 0)
+        client.eof(jid)
+        w.register()
+        deadline = time.time() + 120
+        while client.status(jid)["state"] not in ("done", "failed"):
+            w.run_once()
+            assert time.time() < deadline, client.status(jid)
+        assert client.status(jid)["state"] == "done"
+        np.testing.assert_array_equal(client.result(jid),
+                                      _reference(spec))
+        counts = {line.split()[0]: float(line.split()[1])
+                  for line in client.metrics().splitlines()
+                  if line and not line.startswith("#")}
+        assert counts.get("stream_window_latency_s_count", 0) >= 1, \
+            "broker mode never observed stream.window_latency_s"
+    finally:
+        svc.stop()
+
+
 def test_stream_worker_sigkill_resumes_from_watermark(tmp_path):
     """SIGKILL the worker mid-pump: the lease expires, the next owner
     restores the checkpoint's ingest watermark, refetches the retained

@@ -1,0 +1,711 @@
+"""Workflow DAGs (docs/workflows.md): jobs that depend on jobs, proven
+by an adversarial DAG suite.
+
+Queue layer: ``after=[...]`` fan-out/fan-in pop gating, failure /
+cancel / eviction cascades with machine-readable ``cancel_reason``,
+atomic ``submit_many`` admission, and exactly-once terminal hooks.
+
+Envelope layer: every cyclic, dangling-ref, or malformed spec-v3
+envelope is rejected with 400 at submit and NOTHING is enqueued;
+property-tested over random DAG shapes (hypothesis).
+
+Execution: random DAGs (≤12 nodes) always run in topological order
+with downstream inputs resolved from upstream outputs — under BOTH the
+in-process scheduler and the worker-pull broker.  A worker SIGKILLed
+mid-downstream-node resumes without re-running its completed upstream
+(one ``attempt`` span on the upstream, ≥2 on the victim node), final
+volume bit-identical to the same stages submitted sequentially by hand.
+
+Acceptance: the 3-stage recon -> downsample -> quantify workflow
+submitted as ONE ``POST /workflows`` completes in broker mode with two
+workers, per-node status via ``GET /workflows/{id}`` and a linked
+workflow trace via ``GET /workflows/{id}/trace``.
+"""
+import os
+import random
+import signal
+import time
+
+import numpy as np
+import pytest
+
+import slow_plugins  # noqa: F401 — registers slow/failing test plugins
+from repro.service import (JobQueue, PipelineClient, PipelineService,
+                           PipelineWorker, ServiceError, WorkflowError,
+                           WorkflowManager, from_spec, toposort)
+from repro.service.job import JobState
+from repro.service.worker import spawn_local_workers
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def _recon_spec(seed=0, n_det=16, n_angles=12, n_rows=2, fail=False):
+    """A tiny root chain producing a ``recon`` volume; ``fail=True``
+    injects a plugin that raises on the first frame."""
+    plugins = [
+        {"plugin": "synthetic_tomo_loader",
+         "params": {"n_det": n_det, "n_angles": n_angles,
+                    "n_rows": n_rows, "seed": seed},
+         "out_datasets": ["tomo"]},
+    ]
+    if fail:
+        plugins.append({"plugin": "failing_plugin",
+                        "in_datasets": ["tomo"], "out_datasets": ["tomo"]})
+    plugins += [
+        {"plugin": "fbp_recon", "params": {"use_pallas": False},
+         "in_datasets": ["tomo"], "out_datasets": ["recon"]},
+        {"plugin": "hdf5_saver", "in_datasets": ["recon"]},
+    ]
+    return {"version": 1, "plugins": plugins}
+
+
+def _passthrough_spec(parent, dataset, delay=0.0):
+    """A downstream chain re-saving its parent's output as ``vol`` —
+    the minimal consumer of an upstream reference; ``delay`` > 0 slows
+    it (per volume slice) so its worker can be killed mid-node."""
+    plugins = [
+        {"plugin": "upstream_loader",
+         "params": {"data": {"from_job": parent, "dataset": dataset}},
+         "out_datasets": ["vol"]},
+    ]
+    if delay:
+        plugins.append({"plugin": "slow_volume_identity",
+                        "params": {"delay": delay},
+                        "in_datasets": ["vol"], "out_datasets": ["vol"]})
+    plugins.append({"plugin": "hdf5_saver", "in_datasets": ["vol"]})
+    return {"version": 1, "plugins": plugins}
+
+
+def _downsample_spec(parent, dataset="recon", factor=2):
+    return {"version": 1, "plugins": [
+        {"plugin": "upstream_loader",
+         "params": {"data": {"from_job": parent, "dataset": dataset}},
+         "out_datasets": ["vol"]},
+        {"plugin": "downsample", "params": {"factor": factor},
+         "in_datasets": ["vol"], "out_datasets": ["small"]},
+        {"plugin": "hdf5_saver", "in_datasets": ["small"]},
+    ]}
+
+
+def _quantify_spec(parent, dataset="small"):
+    return {"version": 1, "plugins": [
+        {"plugin": "upstream_loader",
+         "params": {"data": {"from_job": parent, "dataset": dataset}},
+         "out_datasets": ["vol"]},
+        {"plugin": "quantify",
+         "in_datasets": ["vol"], "out_datasets": ["stats"]},
+        {"plugin": "hdf5_saver", "in_datasets": ["stats"]},
+    ]}
+
+
+def _pl(**kw):
+    return from_spec(_recon_spec(**kw))
+
+
+def _finish(q, job, state=JobState.DONE):
+    """Drive a popped job terminal the way a scheduler would, then let
+    the queue propagate through the dependency graph."""
+    job.state = state
+    job.finished_at = time.time()
+    q.notify_terminal(job)
+
+
+# ===================================================== queue-level DAG
+def test_fan_out_fan_in_pop_gating():
+    """a -> (b, c) -> d: only dependency-satisfied jobs are poppable;
+    the fan-in node stays queued until EVERY upstream is DONE."""
+    q = JobQueue()
+    a = q.submit(_pl(), job_id="a")
+    q.submit(_pl(), job_id="b", after=["a"])
+    q.submit(_pl(), job_id="c", after=["a"])
+    d = q.submit(_pl(), job_id="d", after=["b", "c"])
+    assert q.get(timeout=0.1).job_id == "a"
+    assert q.get(timeout=0.05) is None          # b, c, d all gated
+    assert sorted(d.snapshot()["waiting_on"]) == ["b", "c"]
+    _finish(q, a)                                # fan-out: b AND c wake
+    got = {q.get(timeout=0.1).job_id, q.get(timeout=0.1).job_id}
+    assert got == {"b", "c"}
+    assert q.get(timeout=0.05) is None           # d still gated
+    _finish(q, q.job("b"))
+    assert q.get(timeout=0.05) is None           # fan-in: one of two
+    assert d.snapshot()["waiting_on"] == ["c"]
+    _finish(q, q.job("c"))
+    assert q.get(timeout=0.1).job_id == "d"
+
+
+def test_upstream_failure_cascades_with_reasons():
+    """a FAILED cancels its whole downstream cone: the direct child
+    carries ``upstream_failed``, the grandchild (whose own upstream was
+    CANCELLED) carries ``upstream_cancelled`` — machine-readable in
+    ``Job.snapshot()``."""
+    q = JobQueue()
+    a = q.submit(_pl(), job_id="a")
+    b = q.submit(_pl(), job_id="b", after=["a"])
+    c = q.submit(_pl(), job_id="c", after=["b"])
+    assert q.get(timeout=0.1) is a
+    _finish(q, a, JobState.FAILED)
+    assert b.state is JobState.CANCELLED
+    assert b.snapshot()["cancel_reason"] == "upstream_failed"
+    assert "a" in b.snapshot()["error"]
+    assert c.state is JobState.CANCELLED
+    assert c.snapshot()["cancel_reason"] == "upstream_cancelled"
+
+
+def test_user_cancel_cascades():
+    """Cancelling a queued upstream cancels its downstream cone with
+    the user/cascade reasons kept distinct."""
+    q = JobQueue()
+    a = q.submit(_pl(), job_id="a")
+    b = q.submit(_pl(), job_id="b", after=["a"])
+    assert q.cancel("a") is True
+    assert a.snapshot()["cancel_reason"] == "user"
+    assert b.state is JobState.CANCELLED
+    assert b.snapshot()["cancel_reason"] == "upstream_cancelled"
+
+
+def test_admission_against_terminal_upstream():
+    """Submitting after an already-failed upstream admits the job, then
+    cancels it by the same cascade rule; unknown/self upstreams are
+    rejected outright."""
+    q = JobQueue()
+    a = q.submit(_pl(), job_id="a")
+    assert q.get(timeout=0.1) is a
+    _finish(q, a, JobState.FAILED)
+    b = q.submit(_pl(), job_id="b", after=["a"])
+    assert b.state is JobState.CANCELLED
+    assert b.snapshot()["cancel_reason"] == "upstream_failed"
+    # a DONE upstream satisfies immediately
+    c = q.submit(_pl(), job_id="c")
+    assert q.get(timeout=0.1) is c
+    _finish(q, c)
+    d = q.submit(_pl(), job_id="d", after=["c"])
+    assert q.get(timeout=0.1) is d
+    with pytest.raises(ValueError, match="unknown upstream"):
+        q.submit(_pl(), job_id="e", after=["ghost"])
+    with pytest.raises(ValueError, match="itself"):
+        q.submit(_pl(), job_id="f", after=["f"])
+
+
+def test_eviction_of_data_dep_cancels_downstream():
+    """History eviction of a DONE upstream whose RESULT a queued
+    downstream consumes cancels that downstream with
+    ``upstream_evicted``."""
+    q = JobQueue(max_history=1)
+    up = q.submit(_pl(), job_id="up")
+    assert q.get(timeout=0.1) is up
+    _finish(q, up)
+    down = q.submit(_pl(), job_id="down", data_deps=["up"])
+    # fill history so the next submission prunes `up` out (fillers at
+    # higher priority so they pop ahead of the satisfied `down`)
+    f1 = q.submit(_pl(), job_id="f1", priority=1)
+    assert q.get(timeout=0.1) is f1
+    _finish(q, f1)
+    q.submit(_pl(), job_id="f2")                 # triggers the prune
+    with pytest.raises(KeyError):
+        q.job("up")                              # evicted
+    assert down.state is JobState.CANCELLED
+    assert down.snapshot()["cancel_reason"] == "upstream_evicted"
+    assert "evicted" in down.snapshot()["error"]
+
+
+def test_terminal_hooks_fire_exactly_once_per_cascaded_job():
+    """The queue's terminal hooks (metric attribution) fire exactly
+    once per QUEUE-cancelled job and never for jobs whose terminal
+    transition the scheduler/broker performed itself."""
+    q = JobQueue()
+    fired: dict[str, int] = {}
+    q.add_terminal_hook(
+        lambda j: fired.__setitem__(j.job_id, fired.get(j.job_id, 0) + 1))
+    a = q.submit(_pl(), job_id="a")
+    q.submit(_pl(), job_id="b", after=["a"])
+    q.submit(_pl(), job_id="c", after=["b"])
+    q.submit(_pl(), job_id="d", after=["b"])
+    assert q.get(timeout=0.1) is a
+    _finish(q, a, JobState.FAILED)               # scheduler-owned: no hook
+    q.notify_terminal(a)                         # double notify is safe
+    assert fired == {"b": 1, "c": 1, "d": 1}
+
+
+def test_submit_many_is_atomic():
+    """One bad dependency rejects the WHOLE group — nothing admitted."""
+    q = JobQueue()
+    with pytest.raises(ValueError, match="unknown upstream"):
+        q.submit_many([_pl(), _pl()], job_ids=["x", "y"],
+                      afters=[[], ["ghost"]])
+    assert q.snapshot() == []
+    # in-group forward references are fine regardless of order
+    jobs = q.submit_many([_pl(), _pl()], job_ids=["y", "x"],
+                         afters=[["x"], []])
+    assert [j.job_id for j in jobs] == ["y", "x"]
+    assert q.get(timeout=0.1).job_id == "x"
+
+
+# ============================================== envelope validation
+def test_toposort_orders_and_rejects_cycles():
+    assert toposort({"a": [], "b": ["a"], "c": ["a", "b"]}) == \
+        ["a", "b", "c"]
+    with pytest.raises(WorkflowError, match="cycle"):
+        toposort({"a": ["b"], "b": ["a"]})
+    with pytest.raises(WorkflowError, match="cycle"):
+        toposort({"a": ["a"]})
+
+
+def test_http_rejects_bad_envelopes_atomically():
+    """Cycle, dangling ref (explicit AND via an upstream-output
+    reference), self-dep, bad node name, bad version — all 400 at
+    ``POST /workflows``, and afterwards NOTHING is enqueued."""
+    svc = PipelineService()                      # scheduler never started
+    host, port = svc.serve(port=0)
+    client = PipelineClient(f"http://{host}:{port}", timeout=30.0)
+    r = _recon_spec()
+    bad = [
+        # dependency cycle via `after`
+        {"version": 3, "workflow": {
+            "a": {"process_list": r, "after": ["b"]},
+            "b": {"process_list": r, "after": ["a"]}}},
+        # dangling `after` reference
+        {"version": 3, "workflow": {
+            "a": {"process_list": r, "after": ["ghost"]}}},
+        # dangling upstream-OUTPUT reference
+        {"version": 3, "workflow": {
+            "a": {"process_list": r},
+            "b": {"process_list": _passthrough_spec("ghost", "recon")}}},
+        # self-dependency
+        {"version": 3, "workflow": {
+            "a": {"process_list": r, "after": ["a"]}}},
+        # invalid node name (job-id separator)
+        {"version": 3, "workflow": {
+            "bad/name": {"process_list": r}}},
+        # wrong version
+        {"version": 1, "workflow": {"a": {"process_list": r}}},
+        # no nodes
+        {"version": 3, "workflow": {}},
+        # unparseable node spec
+        {"version": 3, "workflow": {
+            "a": {"process_list": {"version": 1, "plugins": [
+                {"plugin": "no_such_plugin"}]}}}},
+    ]
+    try:
+        for env in bad:
+            with pytest.raises(ServiceError) as ei:
+                client._request("POST", "/workflows", env)
+            assert ei.value.status == 400, (env, ei.value)
+        assert client.jobs() == []               # atomic: nothing admitted
+        # duplicate ACTIVE workflow id -> 409 (and the dup's nodes are
+        # not admitted either)
+        ok = {"version": 3,
+              "workflow": {"a": {"process_list": r}},
+              "workflow_id": "wf-dup"}
+        assert client._request("POST", "/workflows", ok)["n_nodes"] == 1
+        with pytest.raises(ServiceError) as ei:
+            client._request("POST", "/workflows", ok)
+        assert ei.value.status == 409
+        assert len(client.jobs()) == 1
+        with pytest.raises(ServiceError) as ei:
+            client.workflow_status("no-such-wf")
+        assert ei.value.status == 404
+    finally:
+        svc.stop()
+
+
+# ======================================== property: random DAG shapes
+# Property tests run under hypothesis when it is installed; otherwise
+# they fall back to a seeded deterministic generator so the adversarial
+# DAG coverage runs everywhere (the container has no hypothesis and
+# nothing may be pip-installed).
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _random_dag(rng, max_nodes=12):
+    """A random DAG as ``{node: [upstream nodes]}`` — node i may only
+    depend on earlier nodes, so the shape is acyclic by construction
+    but covers chains, diamonds, fan-out and fan-in."""
+    n = rng.randint(2, max_nodes)
+    edges = {}
+    for i in range(n):
+        k = rng.randint(0, min(i, 3))
+        ups = sorted(rng.sample(range(i), k)) if k else []
+        edges[f"n{i}"] = [f"n{u}" for u in ups]
+    return edges
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _dags(draw, max_nodes=12):
+        """Hypothesis wrapper over :func:`_random_dag`: the strategy
+        draws sizes and parent sets directly so shrinking works."""
+        n = draw(st.integers(min_value=2, max_value=max_nodes))
+        edges = {}
+        for i in range(n):
+            ups = draw(st.lists(st.integers(0, i - 1), unique=True,
+                                max_size=min(i, 3))) if i else []
+            edges[f"n{i}"] = [f"n{u}" for u in sorted(ups)]
+        return edges
+
+
+def _property(max_examples, max_nodes):
+    """Decorator: ``@given`` random DAGs under hypothesis, or a seeded
+    ``parametrize`` sweep of the same shapes without it.  Either way
+    the test function receives ``edges``."""
+    if HAVE_HYPOTHESIS:
+        def deco(fn):
+            return settings(
+                max_examples=max_examples, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow],
+            )(given(edges=_dags(max_nodes=max_nodes))(fn))
+        return deco
+
+    def deco(fn):
+        shapes = [_random_dag(random.Random(seed), max_nodes)
+                  for seed in range(max_examples)]
+        return pytest.mark.parametrize("edges", shapes)(fn)
+    return deco
+
+
+def _dag_envelope(edges, workflow_id):
+    """Roots become tiny recon chains (seed = node index, so every
+    root's volume is distinct); dependent nodes consume their FIRST
+    parent's output and declare the rest via ``after``."""
+    nodes, out_name = {}, {}
+    for i, (name, ups) in enumerate(edges.items()):
+        if not ups:
+            nodes[name] = {"process_list": _recon_spec(seed=i)}
+            out_name[name] = "recon"
+        else:
+            nodes[name] = {
+                "process_list":
+                    _passthrough_spec(ups[0], out_name[ups[0]]),
+                "after": list(ups)}
+            out_name[name] = "vol"
+    return ({"version": 3, "workflow": nodes,
+             "workflow_id": workflow_id}, out_name)
+
+
+def _assert_topological(group):
+    """Every node DONE, and no node started before every upstream had
+    finished."""
+    snap = group.snapshot()
+    assert snap["state"] == "done", snap
+    jobs = snap["node_jobs"]
+    for node, ups in snap["edges"].items():
+        for up in ups:
+            assert jobs[up]["finished_at"] <= jobs[node]["started_at"], \
+                (node, up, jobs[up], jobs[node])
+
+
+def _assert_values_flow(svc, group, out_name):
+    """Each dependent node's output is bit-identical to the upstream
+    output it referenced."""
+    snap = group.snapshot()
+    for node, ups in snap["edges"].items():
+        if not ups:
+            continue
+        parent = ups[0]
+        got = np.asarray(_read(svc, group.workflow_id, node, "vol"))
+        want = np.asarray(_read(svc, group.workflow_id, parent,
+                                out_name[parent]))
+        np.testing.assert_array_equal(got, want)
+
+
+def _read(svc, workflow_id, node, dataset):
+    ds, transport = svc.result_dataset(f"{workflow_id}/{node}", dataset)
+    return transport.read(ds)
+
+
+@_property(max_examples=6, max_nodes=12)
+def test_random_dags_run_topologically_scheduler(edges):
+    """Property (scheduler mode): ANY random DAG executes every node,
+    in topological order, with downstream inputs bit-identical to the
+    upstream outputs they reference."""
+    svc = PipelineService(n_workers=2)
+    env, out_name = _dag_envelope(edges, "wf-prop")
+    try:
+        group = svc.submit_workflow(env)
+        svc.scheduler.start()
+        deadline = time.time() + 120
+        while not group.all_terminal():
+            assert time.time() < deadline, group.snapshot()
+            time.sleep(0.01)
+        _assert_topological(group)
+        _assert_values_flow(svc, group, out_name)
+    finally:
+        svc.stop()
+
+
+@_property(max_examples=4, max_nodes=6)
+def test_random_dags_run_topologically_broker(edges):
+    """Property (broker mode): the same topological-order guarantee
+    holds when dependency-aware leasing hands nodes to pull-based
+    workers, with upstream outputs fetched over the wire."""
+    svc = PipelineService(workers_remote=True, lease_ttl=10.0,
+                          sweep_interval=0.2)
+    host, port = svc.serve(port=0)
+    env, out_name = _dag_envelope(edges, "wf-prop-b")
+    try:
+        group = svc.submit_workflow(env)
+        w = PipelineWorker(f"http://{host}:{port}", worker_id="pw",
+                           poll=0.01)
+        w.register()
+        deadline = time.time() + 120
+        while not group.all_terminal():
+            assert time.time() < deadline, group.snapshot()
+            if not w.run_once():
+                time.sleep(0.01)
+        _assert_topological(group)
+        # broker results are .npy spool files — compare over the store
+        snap = group.snapshot()
+        for node, ups in snap["edges"].items():
+            if ups:
+                got = svc.result_file(f"wf-prop-b/{node}", "vol")
+                parent = ups[0]
+                want = svc.result_file(f"wf-prop-b/{parent}",
+                                       out_name[parent])
+                np.testing.assert_array_equal(np.load(got[1]),
+                                              np.load(want[1]))
+    finally:
+        svc.stop()
+
+
+@_property(max_examples=20, max_nodes=8)
+def test_random_broken_dags_rejected_atomically(edges):
+    """Property: ANY random DAG corrupted with a back-edge (cycle) or a
+    rewritten dangling upstream is rejected at validation and NOTHING
+    is enqueued."""
+    names = list(edges)
+    # corruption 1: force a cycle — first and last node now depend on
+    # each other (guaranteed loop whatever edges already exist)
+    env, _ = _dag_envelope(edges, "wf-bad")
+    env["workflow"][names[0]].setdefault("after", []).append(names[-1])
+    env["workflow"][names[-1]].setdefault("after", []).append(names[0])
+    q = JobQueue()
+    with pytest.raises(WorkflowError):
+        WorkflowManager(q).submit(env)
+    assert q.snapshot() == []
+    # corruption 2: a dangling upstream on every possible victim
+    for victim in names:
+        env, _ = _dag_envelope(edges, "wf-bad")
+        env["workflow"][victim].setdefault("after", []).append("ghost")
+        q = JobQueue()
+        with pytest.raises(WorkflowError):
+            WorkflowManager(q).submit(env)
+        assert q.snapshot() == []
+
+
+# ================================== fault injection: SIGKILL mid-DAG
+def test_sigkill_mid_downstream_does_not_rerun_upstream(tmp_path):
+    """SIGKILL the worker running a DOWNSTREAM node: the lease expires,
+    the node requeues, and the resumed attempt consumes the upstream
+    output already materialised in the result store — the upstream is
+    NOT re-executed (exactly one ``attempt`` span on it, and its
+    ``attempt`` counter stays 1) and the final volume is bit-identical
+    to the same stages submitted sequentially by hand."""
+    ckpt = str(tmp_path / "ckpts")
+    svc = PipelineService(workers_remote=True, lease_ttl=1.5,
+                          sweep_interval=0.1)
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    client = PipelineClient(url, timeout=60.0)
+    workers = spawn_local_workers(
+        url, 2, transport="inmemory", checkpoint_dir=ckpt,
+        poll=0.05, heartbeat=0.3, imports=("slow_plugins",),
+        worker_ids=["w0", "w1"], pythonpath_extra=(TESTS_DIR,))
+    by_id = dict(zip(["w0", "w1"], workers))
+    try:
+        reply = client.workflow({
+            "up": {"process_list": _recon_spec(seed=11, n_rows=4)},
+            "down": {"process_list":
+                     _passthrough_spec("up", "recon", delay=0.4)},
+        }, workflow_id="wf-kill")
+        assert reply["nodes"] == ["up", "down"]
+        # wait until the downstream node is running on a known worker
+        deadline = time.time() + 120
+        while True:
+            snap = client.workflow_status("wf-kill")
+            down = snap["node_jobs"]["down"]
+            if down["state"] == "running" and down["worker_id"]:
+                break
+            assert down["state"] not in ("done", "failed"), snap
+            assert time.time() < deadline, snap
+            time.sleep(0.05)
+        assert snap["node_jobs"]["up"]["state"] == "done"
+        victim = down["worker_id"]
+        time.sleep(0.5)                          # into the slow slices
+        os.kill(by_id[victim].pid, signal.SIGKILL)
+
+        snap = client.wait_workflow("wf-kill", timeout=120)
+        assert snap["state"] == "done", snap
+        up, down = snap["node_jobs"]["up"], snap["node_jobs"]["down"]
+        assert down["attempt"] >= 2, down        # requeued after expiry
+        assert down["worker_id"] != victim, down
+        assert up["attempt"] == 1, up            # upstream NOT re-run
+        # the spans agree: one attempt on `up`, >=2 on `down`, and the
+        # resumed attempt re-fetched the materialised upstream output
+        tr = client.workflow_trace("wf-kill")
+        names_up = [s["name"] for s in tr["nodes"]["up"]["spans"]]
+        names_down = [s["name"] for s in tr["nodes"]["down"]["spans"]]
+        assert names_up.count("attempt") == 1
+        # the SIGKILLed attempt's open spans die unshipped with the
+        # worker; the resumed attempt restores from checkpoint instead
+        # of starting over
+        assert names_down.count("attempt") >= 1
+        assert "checkpoint.restore" in names_down
+        assert "upstream.fetch" in names_down
+        # bit-identical to the sequential hand-submitted run
+        wf_vol = client.result("wf-kill/down", "vol")
+        jid = client.submit(_recon_spec(seed=11, n_rows=4),
+                            job_id="seq-up")
+        assert client.wait(jid, timeout=120)["state"] == "done"
+        jid2 = client.submit(_passthrough_spec("seq-up", "recon"),
+                             job_id="seq-down")
+        assert client.wait(jid2, timeout=120)["state"] == "done"
+        np.testing.assert_array_equal(wf_vol,
+                                      client.result("seq-down", "vol"))
+        assert client.stats()["leases_expired"] >= 1
+    finally:
+        for p in workers:
+            if p.poll() is None:
+                p.kill()
+        for p in workers:
+            p.wait(timeout=10)
+        svc.stop()
+
+
+# ========================================= failure-propagation matrix
+def test_failure_propagation_matrix():
+    """Upstream FAILED / CANCELLED / result-EVICTED each cancel the
+    downstream with the right machine-readable ``cancel_reason``, and
+    the ``jobs.cancelled`` counter attributes each cancelled job
+    exactly once."""
+    # --- upstream failed (executed in scheduler mode) ---------------
+    svc = PipelineService()
+    try:
+        group = svc.submit_workflow({"version": 3, "workflow": {
+            "up": {"process_list": _recon_spec(fail=True)},
+            "down": {"process_list": _passthrough_spec("up", "recon")},
+        }, "workflow_id": "wf-fail"})
+        svc.scheduler.start()
+        deadline = time.time() + 120
+        while not group.all_terminal():
+            assert time.time() < deadline, group.snapshot()
+            time.sleep(0.01)
+        snap = group.snapshot()
+        assert snap["state"] == "failed", snap
+        assert snap["node_jobs"]["up"]["state"] == "failed"
+        down = snap["node_jobs"]["down"]
+        assert down["state"] == "cancelled"
+        assert down["cancel_reason"] == "upstream_failed"
+        assert "up" in down["error"]
+        # exactly-once attribution: ONE cancelled job -> counter == 1
+        assert svc.metrics.counter("jobs.cancelled").value == 1
+        assert svc.metrics.counter("jobs.failed").value == 1
+    finally:
+        svc.stop()
+
+    # --- upstream cancelled (never dispatched) -----------------------
+    svc = PipelineService()
+    try:
+        group = svc.submit_workflow({"version": 3, "workflow": {
+            "up": {"process_list": _recon_spec()},
+            "down": {"process_list": _passthrough_spec("up", "recon")},
+        }, "workflow_id": "wf-cancel"})
+        out = svc.cancel("wf-cancel/up")
+        assert out["cancelled"] is True
+        snap = group.snapshot()
+        assert snap["node_jobs"]["up"]["cancel_reason"] == "user"
+        down = snap["node_jobs"]["down"]
+        assert down["state"] == "cancelled"
+        assert down["cancel_reason"] == "upstream_cancelled"
+        # both cancels attributed, each exactly once
+        assert svc.metrics.counter("jobs.cancelled").value == 2
+    finally:
+        svc.stop()
+
+    # --- upstream result evicted from history ------------------------
+    svc = PipelineService(max_history=1)
+    q = svc.queue
+    try:
+        up = q.submit(_pl(), job_id="up")
+        assert q.get(timeout=0.1) is up
+        _finish(q, up)
+        down = q.submit(_pl(), job_id="down", data_deps=["up"])
+        f1 = q.submit(_pl(), job_id="f1", priority=1)
+        assert q.get(timeout=0.1) is f1
+        _finish(q, f1)
+        q.submit(_pl(), job_id="f2")             # prunes `up` out
+        assert down.state is JobState.CANCELLED
+        assert down.snapshot()["cancel_reason"] == "upstream_evicted"
+        assert svc.metrics.counter("jobs.cancelled").value == 1
+    finally:
+        svc.stop()
+
+
+# ============================== acceptance: 3-stage DAG, broker mode
+def test_three_stage_workflow_broker_acceptance():
+    """The PR acceptance path: recon -> downsample -> quantify as ONE
+    ``POST /workflows`` in broker mode with two workers.  Downstream
+    inputs resolve from upstream outputs over the wire, the final
+    stats are bit-identical to the same stages submitted sequentially
+    by hand, and ``GET /workflows/{id}`` + ``/trace`` report per-node
+    status on one linked timeline."""
+    svc = PipelineService(workers_remote=True, lease_ttl=10.0,
+                          sweep_interval=0.2)
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    client = PipelineClient(url, timeout=60.0)
+    workers = spawn_local_workers(url, 2, transport="inmemory",
+                                  poll=0.05, worker_ids=["w0", "w1"])
+    try:
+        reply = client.workflow({
+            "recon": {"process_list": _recon_spec(seed=3)},
+            "downsample": {"process_list": _downsample_spec("recon")},
+            "quantify": {"process_list": _quantify_spec("downsample"),
+                         "after": ["downsample"]},
+        }, workflow_id="wf-accept")
+        assert reply["n_nodes"] == 3
+        assert reply["nodes"] == ["recon", "downsample", "quantify"]
+        snap = client.wait_workflow("wf-accept", timeout=120)
+        assert snap["state"] == "done", snap
+        assert snap["counts"] == {"done": 3}
+        for node in ("recon", "downsample", "quantify"):
+            assert snap["node_jobs"][node]["state"] == "done"
+        # dependency edges reported (incl. the implied data edges)
+        assert snap["edges"]["downsample"] == ["recon"]
+        assert snap["edges"]["quantify"] == ["downsample"]
+        # sequential-by-hand reference, stage outputs fed explicitly
+        j1 = client.submit(_recon_spec(seed=3), job_id="s-recon")
+        assert client.wait(j1, timeout=120)["state"] == "done"
+        j2 = client.submit(_downsample_spec("s-recon"), job_id="s-down")
+        assert client.wait(j2, timeout=120)["state"] == "done"
+        j3 = client.submit(_quantify_spec("s-down"), job_id="s-quant")
+        assert client.wait(j3, timeout=120)["state"] == "done"
+        np.testing.assert_array_equal(
+            client.result("wf-accept/quantify", "stats"),
+            client.result("s-quant", "stats"))
+        np.testing.assert_array_equal(
+            client.result("wf-accept/downsample", "small"),
+            client.result("s-down", "small"))
+        # workflow-level trace links the three node timelines
+        tr = client.workflow_trace("wf-accept")
+        assert sorted(tr["nodes"]) == ["downsample", "quantify", "recon"]
+        for node in ("downsample", "quantify"):
+            names = [s["name"] for s in tr["nodes"][node]["spans"]]
+            assert "upstream.fetch" in names, (node, names)
+        # both workers participated or at least every node ran leased
+        assert all(snap["node_jobs"][n]["worker_id"] in ("w0", "w1")
+                   for n in snap["node_jobs"])
+        assert "wf-accept" in [w["workflow_id"]
+                               for w in client.workflows()]
+        out = client.cancel_workflow("wf-accept")  # all done: all skipped
+        assert out["cancelled"] == []
+    finally:
+        for p in workers:
+            if p.poll() is None:
+                p.kill()
+        for p in workers:
+            p.wait(timeout=10)
+        svc.stop()
