@@ -325,6 +325,85 @@ def run_workflow(*, n_det: int, n_angles: int, n_workers: int = 2) -> dict:
         svc.stop()
 
 
+def run_cold_worker(*, n_det: int, n_angles: int) -> dict:
+    """The retrace-tax proof (docs/worker-protocol.md): first-job e2e
+    latency of a COLD sharded worker that must jit-compile the standard
+    chain, vs a FRESH worker that prefetched the broker's warm pool at
+    registration and only deserializes.  The prefetched worker's first
+    job must be >= 3x faster and its trace must show ``executable.fetch``
+    with NO ``compile`` span."""
+    import tempfile
+
+    svc = PipelineService(workers_remote=True, lease_ttl=30.0,
+                          sweep_interval=0.2,
+                          executables_dir=tempfile.mkdtemp(
+                              prefix="bench-exe-spool-"))
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    client = PipelineClient(url, timeout=120.0)
+    # paganin widens the chain to 5 compiled plugins: more retrace tax
+    # on the cold side, milliseconds of extra deserialize on the warm
+    spec = standard_chain(n_det=n_det, n_angles=n_angles, n_rows=1,
+                          use_pallas=False, paganin=True, seed=0)
+
+    def first_job_e2e(wid: str) -> tuple[float, list[str]]:
+        """Spawn ONE fresh sharded worker (its own empty local
+        executable tier), run one standard-chain job on it, return the
+        client-observed e2e latency and the job's span names."""
+        workers = spawn_local_workers(url, 1, transport="sharded",
+                                      poll=0.02, heartbeat=5.0,
+                                      worker_ids=[wid])
+        try:
+            deadline = time.time() + 120
+            while wid not in client.workers():
+                assert time.time() < deadline, "worker never registered"
+                time.sleep(0.05)
+            jid = client.submit(spec)
+            snap = client.wait(jid, timeout=300)
+            assert snap["state"] == "done", snap
+            spans = [s["name"] for s in client.trace(jid)["spans"]]
+            return snap["finished_at"] - snap["submitted_at"], spans
+        finally:
+            for p in workers:
+                if p.poll() is None:
+                    p.kill()
+            for p in workers:
+                p.wait(timeout=10)
+
+    try:
+        cold_s, cold_spans = first_job_e2e("bench-cold")
+        assert "compile" in cold_spans, \
+            f"cold worker never compiled? spans: {cold_spans}"
+        st = svc.broker.executables.stats()
+        assert st["entries"] >= 1, "cold worker uploaded nothing"
+
+        # one retry guards the ratio against a CI scheduling hiccup on
+        # the warm side (each attempt is still a fully fresh worker)
+        for attempt in range(2):
+            warm_s, warm_spans = first_job_e2e(
+                f"bench-prefetched-{attempt}")
+            assert "executable.fetch" in warm_spans, \
+                f"prefetched worker never fetched: {warm_spans}"
+            assert "compile" not in warm_spans, \
+                f"prefetched worker still compiled: {warm_spans}"
+            if cold_s / warm_s >= 3.0:
+                break
+        speedup = cold_s / warm_s
+        assert speedup >= 3.0, \
+            f"warm pool too slow: cold {cold_s:.3f}s vs " \
+            f"prefetched {warm_s:.3f}s ({speedup:.2f}x < 3x)"
+        return {
+            "config": {"n_det": n_det, "n_angles": n_angles},
+            "cold_first_job_e2e_s": round(cold_s, 4),
+            "prefetched_first_job_e2e_s": round(warm_s, 4),
+            "speedup": round(speedup, 2),
+            "spool": svc.broker.executables.stats(),
+            "metrics_missing": check_metrics_complete(url),
+        }
+    finally:
+        svc.stop()
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -355,6 +434,8 @@ def main(argv=None) -> int:
     result["workflow"] = run_workflow(n_det=cfg["n_det"],
                                       n_angles=cfg["n_angles"],
                                       n_workers=cfg["n_workers"])
+    result["cold_worker"] = run_cold_worker(n_det=cfg["n_det"],
+                                            n_angles=cfg["n_angles"])
 
     with open(args.out, "w") as fh:
         json.dump(result, fh, indent=2)
@@ -374,9 +455,14 @@ def main(argv=None) -> int:
     print(f"workflow: 3-stage DAG e2e {wf['dag_e2e_s']}s vs "
           f"sequential {wf['sequential_e2e_s']}s "
           f"({wf['speedup']}x)")
+    cw = result["cold_worker"]
+    print(f"cold worker: first job {cw['cold_first_job_e2e_s']}s "
+          f"compiling vs {cw['prefetched_first_job_e2e_s']}s "
+          f"prefetched ({cw['speedup']}x — the retrace tax)")
     missing = sorted(set(result["metrics_missing"])
                      | set(sm["metrics_missing"])
-                     | set(wf["metrics_missing"]))
+                     | set(wf["metrics_missing"])
+                     | set(cw["metrics_missing"]))
     if missing:
         print(f"MISSING from /metrics: {missing}", file=sys.stderr)
         return 1

@@ -86,7 +86,10 @@ class LocalCompileCache:
         self.hits = 0
         self.misses = 0
 
-    def get_or_build(self, key, builder):
+    def get_or_build(self, key, builder, serializable=False):
+        # ``serializable`` marks builders whose output could go to the
+        # process-level cache's persistent tier; the local cache has no
+        # such tier and ignores it
         try:
             fn = self._entries[key]
             self.hits += 1
@@ -276,7 +279,15 @@ class ShardedTransport(Transport):
     def _replicated(self) -> NamedSharding:
         return NamedSharding(self.mesh, PartitionSpec())
 
-    def compile_plugin(self, plugin: BasePlugin, lower_only: bool = False):
+    def compile_plugin(self, plugin: BasePlugin, lower_only: bool = False,
+                       consts: dict | None = None):
+        """Compile one plugin step.  With ``consts`` given, compiles
+        **ahead-of-time** (``jit(...).lower(...).compile()``) — the
+        resulting executable is callable exactly like the jit wrapper
+        AND serializable via ``jax.experimental.serialize_executable``
+        for the persistent cache tier.  Consts are lowered as concrete
+        values (not ShapeDtypeStructs) so python-float constants keep
+        their weak types and call-time avals match."""
         da = plugin.driver.data_axis
         in_sh = tuple(self._sharding(pd.pattern, da) for pd in plugin.in_data)
         out_sh = tuple(self._sharding(pd.pattern, da)
@@ -284,8 +295,8 @@ class ShardedTransport(Transport):
         fn = self._plugin_fn(plugin)
         mask = self._donate_mask(plugin)
         if lower_only:
-            consts = plugin.jit_constants()
-            jfn = jax.jit(lambda *arrays: fn(consts, *arrays),
+            lconsts = plugin.jit_constants()
+            jfn = jax.jit(lambda *arrays: fn(lconsts, *arrays),
                           in_shardings=in_sh, out_shardings=out_sh,
                           donate_argnums=tuple(
                               i for i, m in enumerate(mask) if m))
@@ -293,10 +304,16 @@ class ShardedTransport(Transport):
                                           pd.dataset.dtype, sharding=s)
                      for pd, s in zip(plugin.in_data, in_sh)]
             return jfn.lower(*specs)
-        return jax.jit(fn, in_shardings=(self._replicated(), *in_sh),
-                       out_shardings=out_sh,
-                       donate_argnums=tuple(
-                           i + 1 for i, m in enumerate(mask) if m))
+        jfn = jax.jit(fn, in_shardings=(self._replicated(), *in_sh),
+                      out_shardings=out_sh,
+                      donate_argnums=tuple(
+                          i + 1 for i, m in enumerate(mask) if m))
+        if consts is None:
+            return jfn
+        specs = [jax.ShapeDtypeStruct(pd.dataset.shape, pd.dataset.dtype,
+                                      sharding=s)
+                 for pd, s in zip(plugin.in_data, in_sh)]
+        return jfn.lower(consts, *specs).compile()
 
     def _device_in(self, plugin: BasePlugin) -> list[Any]:
         da = plugin.driver.data_axis
@@ -304,9 +321,12 @@ class ShardedTransport(Transport):
         for pd in plugin.in_data:
             a = pd.dataset.materialise()
             if not isinstance(a, jax.Array):
-                a = jax.device_put(np.asarray(a),
-                                   self._sharding(pd.pattern, da))
-            arrays.append(a)
+                a = np.asarray(a)
+            # unconditional: AOT-compiled executables (persistent cache
+            # tier) are stricter than jit about input placement, so even
+            # jax.Arrays are re-committed to the pattern sharding (a
+            # no-op when already there)
+            arrays.append(jax.device_put(a, self._sharding(pd.pattern, da)))
         return arrays
 
     def run_plugin(self, plugin: BasePlugin) -> list[Any]:
@@ -315,7 +335,8 @@ class ShardedTransport(Transport):
         with self.mesh:
             jfn = self.compile_cache.get_or_build(
                 self._plugin_key(plugin, consts),
-                lambda: self.compile_plugin(plugin))
+                lambda: self.compile_plugin(plugin, consts=consts),
+                serializable=True)
             outs = list(jfn(consts, *arrays))
         for pd, o in zip(plugin.out_data, outs):
             pd.dataset.backing = o

@@ -281,6 +281,16 @@ CATALOGUE: tuple[tuple[str, str, str], ...] = (
     ("compile.cache.hits", "gauge", "compile-cache hits (process cache)"),
     ("compile.cache.misses", "gauge",
      "compile-cache misses (process cache)"),
+    ("compile.cache.disk.hits", "gauge",
+     "compile-cache disk-tier hits (deserialized executables)"),
+    ("compile.cache.disk.misses", "gauge",
+     "compile-cache disk-tier misses (fresh compiles)"),
+    ("executables.uploaded", "counter",
+     "serialized executables accepted over PUT /executables/{sig}"),
+    ("executables.served", "counter",
+     "serialized executables streamed over GET /executables/{sig}"),
+    ("executables.spool.bytes", "gauge",
+     "bytes currently held in the broker's executable spool"),
     ("job.latency.e2e", "histogram",
      "submit-to-terminal latency, seconds"),
     ("job.latency.queue", "histogram",

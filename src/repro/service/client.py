@@ -59,6 +59,10 @@ class PipelineClient:
         self.base_url = base_url.rstrip("/")
         self.timeout = timeout
         self.token = token
+        # per-worker secrets minted by POST /workers, keyed by worker_id
+        # (one client may drive several registered workers — tests do);
+        # attached automatically to lease/progress/complete/uploads
+        self._worker_secrets: dict[str, str] = {}
 
     # -- transport ------------------------------------------------------
     def _request(self, method: str, path: str,
@@ -421,12 +425,30 @@ class PipelineClient:
         """Register a worker process (``POST /workers``) with its
         capabilities (``sweeps=False`` keeps the worker out of
         parameter-sweep fan-outs).  Returns ``{"worker_id",
-        "lease_ttl"}`` (plus ``"results_dir"`` for shared-fs workers).
+        "worker_secret", "lease_ttl", "hot_executables"}`` (plus
+        ``"results_dir"`` for shared-fs workers).  The minted
+        ``worker_secret`` is remembered per worker_id and attached to
+        every subsequent lease/progress/complete/upload automatically.
         409 if the server is not in broker mode."""
-        return self._request("POST", "/workers", {
+        reply = self._request("POST", "/workers", {
             "worker_id": worker_id, "plugins": plugins,
             "mesh_shape": mesh_shape, "max_batch": max_batch,
             "shared_fs": shared_fs, "sweeps": sweeps})
+        if isinstance(reply.get("worker_secret"), str):
+            self._worker_secrets[reply["worker_id"]] = \
+                reply["worker_secret"]
+        return reply
+
+    def worker_secret(self, worker_id: str) -> str | None:
+        """The per-worker secret minted at registration (None if this
+        client never registered ``worker_id``)."""
+        return self._worker_secrets.get(worker_id)
+
+    def adopt_worker_secret(self, worker_id: str, secret: str) -> None:
+        """Attach a secret minted elsewhere (e.g. by an in-process
+        :class:`PipelineWorker`'s own client) so this client may act
+        on that worker's behalf."""
+        self._worker_secrets[worker_id] = secret
 
     def lease(self, worker_id: str, max_jobs: int = 1,
               timeout: float = 0.0) -> list[dict[str, Any]]:
@@ -435,7 +457,8 @@ class PipelineClient:
         long-polls server-side up to 30s."""
         return self._request("POST", "/jobs/lease", {
             "worker_id": worker_id, "max_jobs": max_jobs,
-            "timeout": timeout})["jobs"]
+            "timeout": timeout,
+            "worker_secret": self._worker_secrets.get(worker_id)})["jobs"]
 
     def progress(self, job_id: str, worker_id: str,
                  **fields: Any) -> dict[str, Any]:
@@ -445,7 +468,9 @@ class PipelineClient:
         ``verdict`` is ``ok`` / ``cancelled`` / ``lost``."""
         return self._request(
             "POST", f"/jobs/{quote(job_id, safe='')}/progress",
-            {"worker_id": worker_id, **fields})
+            {"worker_id": worker_id,
+             "worker_secret": self._worker_secrets.get(worker_id),
+             **fields})
 
     def complete(self, job_id: str, worker_id: str, state: str,
                  error: str | None = None,
@@ -454,8 +479,10 @@ class PipelineClient:
         """Report a leased job terminal (``POST /jobs/{id}/complete``).
         Raises ServiceError(409) if the lease was lost — the caller
         must discard its outcome."""
-        body: dict[str, Any] = {"worker_id": worker_id, "state": state,
-                                **fields}
+        body: dict[str, Any] = {
+            "worker_id": worker_id,
+            "worker_secret": self._worker_secrets.get(worker_id),
+            "state": state, **fields}
         if error is not None:
             body["error"] = error
         if results is not None:
@@ -463,16 +490,45 @@ class PipelineClient:
         return self._request(
             "POST", f"/jobs/{quote(job_id, safe='')}/complete", body)
 
+    def _worker_headers(self, worker_id: str) -> dict[str, str]:
+        headers = {"X-Worker-Id": worker_id}
+        secret = self._worker_secrets.get(worker_id)
+        if secret is not None:
+            headers["X-Worker-Secret"] = secret
+        return headers
+
     def upload_result(self, job_id: str, worker_id: str, dataset: str,
                       payload: bytes) -> dict[str, Any]:
         """Upload one result dataset as raw ``.npy`` bytes
         (``PUT /jobs/{id}/result?dataset=``); only the lease holder may
-        upload (409 otherwise)."""
+        upload (409 otherwise; 403 on a bad worker secret)."""
         return self._request(
             "PUT",
             f"/jobs/{quote(job_id, safe='')}/result"
             f"?dataset={quote(dataset, safe='')}",
-            raw_body=payload, headers={"X-Worker-Id": worker_id})
+            raw_body=payload, headers=self._worker_headers(worker_id))
+
+    # -- executable warm pool (docs/worker-protocol.md) -----------------
+    def hot_executables(self) -> list[str]:
+        """The broker spool's hottest executable signatures
+        (``GET /executables``) — what a fresh worker prefetches."""
+        return self._request("GET", "/executables")["hot"]
+
+    def fetch_executable(self, sig: str) -> bytes:
+        """One serialized executable's raw payload
+        (``GET /executables/{sig}``).  Raises ServiceError(404) when
+        the spool doesn't have it."""
+        return self._request("GET", f"/executables/{quote(sig, safe='')}",
+                             raw=True)
+
+    def upload_executable(self, sig: str, worker_id: str,
+                          payload: bytes) -> dict[str, Any]:
+        """Hand one serialized executable to the broker spool
+        (``PUT /executables/{sig}``); registered workers only (403 on a
+        bad secret, 400 on an unframed payload)."""
+        return self._request(
+            "PUT", f"/executables/{quote(sig, safe='')}",
+            raw_body=payload, headers=self._worker_headers(worker_id))
 
     def workers(self) -> dict[str, Any]:
         """Per-worker broker stats (``GET /workers``; broker mode)."""

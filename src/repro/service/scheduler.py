@@ -24,8 +24,10 @@ day.  The scheduler closes that gap:
 from __future__ import annotations
 
 import dataclasses
+import hmac
 import os
 import re
+import secrets
 import shutil
 import tempfile
 import threading
@@ -541,6 +543,26 @@ class LeaseLost(RuntimeError):
     must be discarded (HTTP 409)."""
 
 
+class WorkerAuthError(RuntimeError):
+    """The caller presented a missing or mismatched per-worker secret —
+    a registered worker's identity may not be assumed by other sessions
+    even inside token auth (HTTP 403)."""
+
+
+# Clock seams.  Lease/heartbeat EXPIRY arithmetic must use the monotonic
+# clock: an NTP step of the wall clock would otherwise mass-expire every
+# lease (step forward) or immortalise them (step backward).  Wall time
+# is kept only for display fields and trace spans.  Module-level
+# indirection so tests can fake either clock independently
+# (``scheduler._mono = lambda: ...``).
+def _wall() -> float:
+    return time.time()
+
+
+def _mono() -> float:
+    return time.monotonic()
+
+
 #: names that may become path components (worker ids, result datasets):
 #: no separators, no leading dot — "../../x" or "/etc/x" never reaches
 #: os.path.join
@@ -563,6 +585,10 @@ class WorkerInfo:
     #: worker accepts parameter-sweep variant jobs (False keeps e.g.
     #: lightweight interactive workers out of wide sweep fan-outs)
     sweeps: bool = True
+    #: per-worker credential minted at registration; every subsequent
+    #: lease/progress/complete/result/executable call must present it
+    #: (rotated on re-registration).  Never serialised in snapshots.
+    secret: str = ""
     registered_at: float = dataclasses.field(default_factory=time.time)
     last_seen: float = dataclasses.field(default_factory=time.time)
     leases_granted: int = 0
@@ -589,8 +615,11 @@ class WorkerInfo:
 @dataclasses.dataclass
 class _Lease:
     worker_id: str
+    #: MONOTONIC-clock deadline (``_mono() + ttl``) — expiry arithmetic
+    #: must survive wall-clock steps; never compare against time.time()
     expires_at: float
-    #: when the lease was granted — start of the job's ``lease`` span
+    #: when the lease was granted, wall clock — start of the job's
+    #: ``lease`` span (display/trace only, never expiry arithmetic)
     granted_at: float = 0.0
 
 
@@ -625,7 +654,9 @@ class WorkerBroker:
     def __init__(self, queue: JobQueue, *, lease_ttl: float = 15.0,
                  sweep_interval: float | None = None,
                  results_dir: str | None = None,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 executables_dir: str | None = None,
+                 executables_max_bytes: int = 512 << 20):
         """Args:
             queue: the admission queue leases are fed from.
             lease_ttl: seconds a lease survives without a heartbeat.
@@ -636,6 +667,10 @@ class WorkerBroker:
                 temp directory.
             metrics: telemetry registry (``repro.obs``) to record job
                 outcomes/latencies into; None disables.
+            executables_dir: spool for serialized executables workers
+                upload (``PUT /executables/{sig}``) and fresh workers
+                prefetch (warm pool).  Default: a fresh temp directory.
+            executables_max_bytes: LRU retention bound on that spool.
         """
         self.queue = queue
         self.metrics = metrics
@@ -655,6 +690,12 @@ class WorkerBroker:
         # .npy spool goes with it — otherwise the spool grows for the
         # broker's lifetime (ROADMAP follow-up)
         queue.add_evict_hook(self._gc_spool)
+        from .compile_cache import ExecutableStore
+        self.executables = ExecutableStore(
+            executables_dir or tempfile.mkdtemp(prefix="pipeline-exe-"),
+            max_bytes=executables_max_bytes)
+        self.executables_uploaded = 0
+        self.executables_served = 0
         self._workers: dict[str, WorkerInfo] = {}
         self._leases: dict[str, _Lease] = {}
         self._required: dict[str, set[str]] = {}   # job_id -> plugin names
@@ -697,8 +738,13 @@ class WorkerBroker:
              "mesh_shape": [1], "max_batch": 1, "shared_fs": false}
 
         Returns the reply envelope: the (possibly generated)
-        ``worker_id``, the broker's ``lease_ttl``, and — for shared-fs
-        workers — the ``results_dir`` to write results into.
+        ``worker_id``, a freshly minted ``worker_secret`` that every
+        subsequent lease/progress/complete/result/executable call must
+        present (re-registration rotates it — the old secret dies),
+        the broker's ``lease_ttl``, the spool's hottest
+        ``hot_executables`` signatures (the warm-pool prefetch list,
+        docs/worker-protocol.md), and — for shared-fs workers — the
+        ``results_dir`` to write results into.
         Raises WireError on a malformed message.
         """
         if not isinstance(info, dict):
@@ -738,11 +784,30 @@ class WorkerBroker:
             w.max_batch = max_batch
             w.shared_fs = bool(info.get("shared_fs", False))
             w.sweeps = bool(info.get("sweeps", True))
-            w.last_seen = time.time()
-            reply = {"worker_id": worker_id, "lease_ttl": self.lease_ttl}
+            w.last_seen = _wall()
+            # (re-)registration mints a fresh secret: a restarting
+            # worker reclaims its id without needing the old credential,
+            # and the old credential stops working at the same moment
+            w.secret = secrets.token_hex(16)
+            reply = {"worker_id": worker_id, "lease_ttl": self.lease_ttl,
+                     "worker_secret": w.secret,
+                     "hot_executables": self.executables.hot()}
             if w.shared_fs:
                 reply["results_dir"] = self.results_dir
             return reply
+
+    def _check_secret_locked(self, worker_id: str,
+                             secret: str | None) -> WorkerInfo:
+        """The registered worker for ``worker_id`` after verifying its
+        per-worker secret.  Raises KeyError (→ 404) for an unknown
+        worker, WorkerAuthError (→ 403) for a missing/mismatched
+        secret."""
+        w = self._workers[worker_id]
+        if not (isinstance(secret, str)
+                and hmac.compare_digest(w.secret, secret)):
+            raise WorkerAuthError(
+                f"bad or missing worker_secret for {worker_id!r}")
+        return w
 
     # -- capability matching --------------------------------------------
     def _required_plugins(self, job: Job) -> set[str]:
@@ -778,7 +843,8 @@ class WorkerBroker:
 
     # -- lease ----------------------------------------------------------
     def lease(self, worker_id: str, max_jobs: int = 1,
-              timeout: float = 0.0) -> list[dict[str, Any]]:
+              timeout: float = 0.0,
+              secret: str | None = None) -> list[dict[str, Any]]:
         """Pop up to ``max_jobs`` (capped by the worker's ``max_batch``)
         capability-matching jobs and lease them to ``worker_id``.
 
@@ -788,14 +854,15 @@ class WorkerBroker:
             {"job_id": ..., "process_list": {spec v1}, "priority": 0,
              "attempt": 1, "metadata": {...}, "lease_ttl": 15.0}
 
-        Raises KeyError for an unregistered worker.  A job whose chain
+        Raises KeyError for an unregistered worker, WorkerAuthError for
+        a missing/mismatched per-worker secret.  A job whose chain
         cannot be wire-serialised (in-process submission with opaque
         params) is failed loudly rather than silently starving.
         """
         self._expire_locked_sweep()
         with self._lock:
-            w = self._workers[worker_id]
-            w.last_seen = time.time()
+            w = self._check_secret_locked(worker_id, secret)
+            w.last_seen = _wall()
             n = max(1, min(max_jobs, w.max_batch))
             pred = lambda job: self._capable(w, job)   # noqa: E731
         if n == 1:
@@ -804,7 +871,8 @@ class WorkerBroker:
         else:
             jobs = self.queue.get_batch(n, timeout=timeout, predicate=pred)
         out = []
-        now = time.time()
+        now = _wall()                    # display / span timestamps
+        now_m = _mono()                  # lease-deadline arithmetic
         with self._lock:
             shared_fs = w.shared_fs
         for job in jobs:
@@ -836,7 +904,7 @@ class WorkerBroker:
                 job.attempt += 1
                 job.started_at = job.started_at or now
                 self._leases[job.job_id] = _Lease(
-                    worker_id, now + self.lease_ttl, granted_at=now)
+                    worker_id, now_m + self.lease_ttl, granted_at=now)
                 w.leases_granted += 1
                 w.active.add(job.job_id)
             # the broker records the queue-side spans; the worker adds
@@ -926,11 +994,15 @@ class WorkerBroker:
           happens under the broker lock, and a stale owner can never
           match the new lease's ``worker_id``.
 
-        Raises KeyError for an unknown job.
+        Raises KeyError for an unknown job, WorkerAuthError when a
+        REGISTERED worker's secret is missing/mismatched (an
+        unregistered worker_id falls through to the lease checks and is
+        answered ``lost`` as before — there is no credential to verify).
         """
         body = body or {}
         job = self.queue.job(job_id)
-        now = time.time()
+        now = time.time()                # span timestamps (epoch)
+        now_m = _mono()                  # lease-expiry arithmetic
         # fold piggybacked spans into the job's trace FIRST, whatever
         # the verdict — a worker about to be told "lost" still carries
         # real history from its attempt (span-id dedup makes redelivery
@@ -939,13 +1011,16 @@ class WorkerBroker:
         new_spans = job.trace.merge(body.get("spans") or [])
         _observe_plugin_spans(self.metrics, new_spans)
         with self._lock:
+            if worker_id in self._workers:
+                self._check_secret_locked(worker_id,
+                                          body.get("worker_secret"))
             lease = self._leases.get(job_id)
             if lease is None or lease.worker_id != worker_id:
                 return {"verdict": "lost"}
             w = self._workers.get(worker_id)
             if w is not None:
                 w.last_seen = now
-            if now > lease.expires_at:
+            if now_m > lease.expires_at:
                 # expired but not yet swept: reject the heartbeat and
                 # requeue NOW so the job lands on a live worker (the
                 # requeue may CANCEL a cancel-flagged job — terminal —
@@ -964,7 +1039,7 @@ class WorkerBroker:
                     _observe_terminal(self.metrics, job)
                 verdict = {"verdict": "cancelled"}
             else:
-                lease.expires_at = now + self.lease_ttl
+                lease.expires_at = now_m + self.lease_ttl
                 if isinstance(body.get("plugin_index"), int):
                     # a bare renewal (no fields) keeps the lease alive
                     # without claiming execution started — batch-leased
@@ -1043,17 +1118,20 @@ class WorkerBroker:
         job.remote_results.clear()
 
     def store_result(self, job_id: str, worker_id: str, dataset: str,
-                     payload: bytes) -> str:
+                     payload: bytes, secret: str | None = None) -> str:
         """Spool one uploaded result dataset (raw ``.npy`` bytes) for
         ``GET /jobs/{id}/result`` to stream later.  Only the current
         lease holder may upload — a worker that lost its lease gets
-        :class:`LeaseLost` and must discard its copy."""
+        :class:`LeaseLost` and must discard its copy; a registered
+        worker with a bad secret gets :class:`WorkerAuthError`."""
         if not _SAFE_NAME.match(dataset):
             # the name becomes a path component under results_dir —
             # refuse separators/dot-leading names, never traverse out
             raise WireError(f"dataset must be a filename-safe name, "
                             f"got {dataset!r}")
         with self._lock:
+            if worker_id in self._workers:
+                self._check_secret_locked(worker_id, secret)
             lease = self._leases.get(job_id)
             if lease is None or lease.worker_id != worker_id:
                 raise LeaseLost(f"worker {worker_id!r} no longer holds "
@@ -1067,6 +1145,43 @@ class WorkerBroker:
         with self._lock:
             job.remote_results[dataset] = path
         return path
+
+    # -- executable warm pool (docs/worker-protocol.md) -----------------
+    def put_executable(self, worker_id: str, secret: str | None,
+                       sig: str, payload: bytes) -> dict[str, Any]:
+        """Accept one serialized executable a worker just compiled
+        (``PUT /executables/{sig}``).  Only registered workers with a
+        valid secret may upload (KeyError → 404, WorkerAuthError →
+        403); only framed payloads enter the spool (WireError → 400).
+        """
+        with self._lock:
+            self._check_secret_locked(worker_id, secret)
+        if not self.executables.put_bytes(sig, payload):
+            raise WireError(f"rejected executable payload for {sig!r} "
+                            f"(bad signature or framing)")
+        with self._lock:
+            self.executables_uploaded += 1
+        if self.metrics is not None:
+            self.metrics.counter("executables.uploaded").inc()
+        return {"sig": sig, "stored": True}
+
+    def get_executable(self, sig: str) -> bytes:
+        """The raw payload for one signature (``GET /executables/
+        {sig}``).  Raises KeyError when absent.  Each fetch counts a
+        use, which is exactly the heat signal :meth:`register`'s
+        ``hot_executables`` list ranks by."""
+        payload = self.executables.get_bytes(sig)
+        if payload is None:
+            raise KeyError(sig)
+        with self._lock:
+            self.executables_served += 1
+        if self.metrics is not None:
+            self.metrics.counter("executables.served").inc()
+        return payload
+
+    def hot_executables(self, n: int = 8) -> list[str]:
+        """The spool's hottest signatures (``GET /executables``)."""
+        return self.executables.hot(n)
 
     def complete(self, job_id: str, worker_id: str,
                  body: dict[str, Any]) -> dict[str, Any]:
@@ -1112,9 +1227,12 @@ class WorkerBroker:
                 accepted[name] = real
         now = time.time()
         with self._lock:
+            if worker_id in self._workers:
+                self._check_secret_locked(worker_id,
+                                          body.get("worker_secret"))
             lease = self._leases.get(job_id)
             if lease is None or lease.worker_id != worker_id or \
-                    now > lease.expires_at:
+                    _mono() > lease.expires_at:
                 raise LeaseLost(f"worker {worker_id!r} no longer holds "
                                 f"the lease on job {job_id!r}")
             self._end_lease_locked(job, lease, state, now)
@@ -1197,11 +1315,12 @@ class WorkerBroker:
         prune the required-plugins cache of jobs that went terminal via
         any path (cancel, failure, eviction) — the cache must not grow
         for the broker's lifetime."""
-        now = time.time()
+        now = time.time()                # span timestamps
+        now_m = _mono()                  # expiry arithmetic
         touched: list[Job] = []
         with self._lock:
             expired = [(jid, ls) for jid, ls in self._leases.items()
-                       if now > ls.expires_at]
+                       if now_m > ls.expires_at]
             for jid, ls in expired:
                 self._drop_lease_locked(jid, ls.worker_id)
                 try:
@@ -1253,6 +1372,10 @@ class WorkerBroker:
                 "jobs_requeued": self.jobs_requeued,
                 "leases_expired": self.leases_expired,
                 "active_leases": len(self._leases),
+                "executables": {
+                    **self.executables.stats(),
+                    "uploaded": self.executables_uploaded,
+                    "served": self.executables_served},
                 "workers": {wid: w.snapshot()
                             for wid, w in self._workers.items()},
             }

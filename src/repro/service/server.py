@@ -46,6 +46,13 @@ Endpoints (JSON unless noted; see ``docs/service.md``):
                             broker-mode workers pull the stream
 ``GET /jobs/{id}/preview``  partial reconstruction over the frames
                             ingested so far (before EOF)
+``GET /executables``        the broker spool's hottest executable
+                            signatures (warm-pool prefetch list;
+                            token-authed, broker mode)
+``GET /executables/{sig}``  one serialized executable as octet-stream
+                            bytes (token-authed, broker mode)
+``PUT /executables/{sig}``  worker upload of a serialized executable
+                            (``X-Worker-Id``/``X-Worker-Secret``)
 ``GET /metrics``            Prometheus text exposition of the metrics
                             registry (also JSON under ``/stats``)
 ``GET /stats``              scheduler + compile-cache + metrics counters
@@ -81,7 +88,8 @@ from .checkpoint import CheckpointStore
 from .compile_cache import CompileCache
 from .job import Job, JobState
 from .queue import JobQueue, QueueFull
-from .scheduler import LeaseLost, PipelineScheduler, WorkerBroker
+from .scheduler import (LeaseLost, PipelineScheduler, WorkerAuthError,
+                        WorkerBroker)
 from .sweep import SweepError, SweepGroup, SweepManager
 from .wire import WireError, from_spec, registry_spec
 from .workflow import WorkflowError, WorkflowGroup, WorkflowManager
@@ -98,6 +106,8 @@ _SWEEP_RE = re.compile(r"^/sweeps/([^/]+)$")
 _SWEEP_RESULT_RE = re.compile(r"^/sweeps/([^/]+)/result$")
 _WORKFLOW_RE = re.compile(r"^/workflows/([^/]+)$")
 _WORKFLOW_TRACE_RE = re.compile(r"^/workflows/([^/]+)/trace$")
+#: executable signatures are sha256 hex (compile_cache.executable_signature)
+_EXEC_RE = re.compile(r"^/executables/([0-9a-f]{8,128})$")
 
 
 class PipelineService:
@@ -126,7 +136,8 @@ class PipelineService:
                  results_dir: str | None = None,
                  max_sweep_variants: int = 64,
                  token: str | None = None,
-                 trace_spool: TraceSpool | str | None = None):
+                 trace_spool: TraceSpool | str | None = None,
+                 executables_dir: str | None = None):
         """Args mirror :class:`PipelineScheduler`; ``max_pending``
         bounds admission (HTTP 429 past it) and ``max_history`` bounds
         retained terminal jobs (a pruned job's result is gone — 404).
@@ -138,6 +149,11 @@ class PipelineService:
         ``trace_spool`` (a :class:`TraceSpool` or a directory path)
         retains terminal-job traces past ``max_history`` eviction —
         ``GET /jobs/{id}/trace`` falls back to it.
+        ``executables_dir`` roots the persistent executable tier: in
+        broker mode it is the broker's upload/prefetch spool
+        (``GET/PUT /executables/{sig}``, default a temp dir); in
+        scheduler mode it becomes the service CompileCache's disk store
+        so compiled programs survive restarts.
 
         ``workers_remote=True`` is **broker mode**: instead of
         in-process scheduler threads, detached :class:`PipelineWorker`
@@ -147,8 +163,13 @@ class PipelineService:
         gang options are worker-side concerns and are ignored here).
         """
         # explicit None-check: an EMPTY CompileCache is falsy (__len__)
-        self.compile_cache = (compile_cache if compile_cache is not None
-                              else CompileCache())
+        if compile_cache is None:
+            # scheduler mode gets the persistent tier on the service's
+            # own cache; broker mode roots its upload spool there
+            # instead (workers own their caches)
+            compile_cache = CompileCache(
+                store=None if workers_remote else executables_dir)
+        self.compile_cache = compile_cache
         self.queue = JobQueue(max_pending=max_pending,
                               max_history=max_history)
         # one registry per service (docs/observability.md); the full
@@ -162,7 +183,7 @@ class PipelineService:
             self.broker = WorkerBroker(
                 self.queue, lease_ttl=lease_ttl,
                 sweep_interval=sweep_interval, results_dir=results_dir,
-                metrics=self.metrics)
+                metrics=self.metrics, executables_dir=executables_dir)
         else:
             self.scheduler = PipelineScheduler(
                 self.queue, transport_factory=transport_factory,
@@ -199,7 +220,15 @@ class PipelineService:
             lambda: self.compile_cache.hits)
         m.gauge("compile.cache.misses").set_function(
             lambda: self.compile_cache.misses)
+        m.gauge("compile.cache.disk.hits").set_function(
+            lambda: self.compile_cache.disk_hits)
+        m.gauge("compile.cache.disk.misses").set_function(
+            lambda: self.compile_cache.disk_misses)
         broker = self.broker
+        m.gauge("executables.spool.bytes").set_function(
+            broker.executables.total_bytes if broker is not None
+            else lambda: (self.compile_cache.store.total_bytes()
+                          if self.compile_cache.store is not None else 0))
         m.gauge("leases.active").set_function(
             broker.n_active_leases if broker is not None else lambda: 0)
         m.gauge("workers.registered").set_function(
@@ -702,6 +731,35 @@ class _PipelineHandler(BaseHTTPRequestHandler):
             if svc.broker is None:
                 return self._error(409, "not serving in broker mode")
             return self._json(200, svc.broker.stats()["workers"])
+        if path == "/executables":
+            # token-authed even though it is a read: the hot list and
+            # the payloads below are worker-protocol surface, not a
+            # public monitoring endpoint
+            if self._reject_unauthorised():
+                return
+            if svc.broker is None:
+                return self._error(409, "not serving in broker mode")
+            return self._json(200, {"hot": svc.broker.hot_executables()})
+        m = _EXEC_RE.match(path)
+        if m:
+            if self._reject_unauthorised():
+                return
+            if svc.broker is None:
+                return self._error(409, "not serving in broker mode")
+            sig = m.group(1)
+            try:
+                payload = svc.broker.get_executable(sig)
+            except KeyError:
+                return self._error(404, f"unknown executable {sig!r}")
+            self.send_response(200)
+            self.send_header("Content-Type", "application/octet-stream")
+            self.send_header("Content-Length", str(len(payload)))
+            self.send_header("X-Executable-Sig", sig)
+            self.end_headers()
+            # stream in blocks: payloads can be tens of MB
+            for i in range(0, len(payload), 1 << 20):
+                self.wfile.write(payload[i:i + (1 << 20)])
+            return
         m = _TRACE_RE.match(path)
         if m:
             job_id = unquote(m.group(1))
@@ -928,14 +986,15 @@ class _PipelineHandler(BaseHTTPRequestHandler):
         if not isinstance(timeout, (int, float)) or timeout < 0 \
                 or timeout > 30:
             raise WireError(f"timeout must be 0..30s, got {timeout!r}")
-        return 200, {"jobs": broker.lease(wid, max_jobs=max_jobs,
-                                          timeout=float(timeout))}
+        return 200, {"jobs": broker.lease(
+            wid, max_jobs=max_jobs, timeout=float(timeout),
+            secret=body.get("worker_secret"))}
 
     def _broker_call(self, fn) -> None:
         """Run one worker-protocol operation: parse the JSON body, hand
         it to ``fn(broker, body) -> (status, payload)``, map the shared
-        error contract (409 no-broker/lease-lost, 404 unknown, 400
-        malformed)."""
+        error contract (409 no-broker/lease-lost, 404 unknown, 403 bad
+        worker secret, 400 malformed)."""
         if self.service.broker is None:
             self._drain_body()
             return self._error(
@@ -946,6 +1005,8 @@ class _PipelineHandler(BaseHTTPRequestHandler):
             code, payload = fn(self.service.broker, body)
         except WireError as e:
             return self._error(400, str(e))
+        except WorkerAuthError as e:
+            return self._error(403, str(e))
         except LeaseLost as e:
             return self._error(409, str(e))
         except KeyError as e:
@@ -953,11 +1014,16 @@ class _PipelineHandler(BaseHTTPRequestHandler):
         self._json(code, payload)
 
     def do_PUT(self) -> None:
-        """Result upload from a leased worker: raw ``.npy`` bytes to
-        ``/jobs/{id}/result?dataset=name`` with ``X-Worker-Id``."""
+        """Uploads from a leased worker: raw ``.npy`` result bytes to
+        ``/jobs/{id}/result?dataset=name``, or a serialized executable
+        to ``/executables/{sig}`` — both identified by ``X-Worker-Id``
+        + ``X-Worker-Secret`` headers."""
         if self._reject_unauthorised():
             return
         url = urlparse(self.path)
+        m = _EXEC_RE.match(url.path.rstrip("/"))
+        if m:
+            return self._put_executable(m.group(1))
         m = _RESULT_RE.match(url.path.rstrip("/"))
         if not m:
             self._drain_body()
@@ -979,16 +1045,46 @@ class _PipelineHandler(BaseHTTPRequestHandler):
         if not payload:
             return self._error(400, "empty result body")
         try:
-            self.service.broker.store_result(job_id, worker_id, dataset,
-                                             payload)
+            self.service.broker.store_result(
+                job_id, worker_id, dataset, payload,
+                secret=self.headers.get("X-Worker-Secret"))
         except WireError as e:            # e.g. unsafe dataset name
             return self._error(400, str(e))
+        except WorkerAuthError as e:
+            return self._error(403, str(e))
         except LeaseLost as e:
             return self._error(409, str(e))
         except KeyError:
             return self._error(404, f"unknown job {job_id!r}")
         self._json(200, {"job_id": job_id, "dataset": dataset,
                          "bytes": len(payload)})
+
+    def _put_executable(self, sig: str) -> None:
+        """PUT /executables/{sig}: a worker hands over one serialized
+        executable it just compiled (docs/worker-protocol.md)."""
+        if self.service.broker is None:
+            self._drain_body()
+            return self._error(409, "not serving in broker mode")
+        worker_id = self.headers.get("X-Worker-Id")
+        if not worker_id:
+            self._drain_body()
+            return self._error(
+                400, "PUT executable needs an X-Worker-Id header")
+        length = int(self.headers.get("Content-Length") or 0)
+        payload = self.rfile.read(length) if length else b""
+        if not payload:
+            return self._error(400, "empty executable body")
+        try:
+            out = self.service.broker.put_executable(
+                worker_id, self.headers.get("X-Worker-Secret"), sig,
+                payload)
+        except WireError as e:
+            return self._error(400, str(e))
+        except WorkerAuthError as e:
+            return self._error(403, str(e))
+        except KeyError:
+            return self._error(404, f"unknown worker {worker_id!r}")
+        self._json(200, {**out, "bytes": len(payload)})
 
     def do_DELETE(self) -> None:
         if self._reject_unauthorised():

@@ -157,6 +157,12 @@ class PipelineWorker:
             request; mutating calls are 401 without it).
         preview_interval: minimum seconds between preview uploads while
             executing a streaming job (0 disables previews).
+        compile_cache: the transport's :class:`CompileCache` — when it
+            has a persistent store, registration wires it to the
+            broker's executable warm pool: hot signatures are
+            prefetched BEFORE the first lease, broker payloads are
+            fetched on local disk misses, and fresh builds are uploaded
+            (docs/worker-protocol.md).
     """
 
     def __init__(self, base_url: str, *,
@@ -173,10 +179,13 @@ class PipelineWorker:
                  worker_id: str | None = None,
                  timeout: float = 60.0,
                  token: str | None = None,
-                 preview_interval: float = 0.5):
+                 preview_interval: float = 0.5,
+                 compile_cache: CompileCache | None = None):
         self.client = PipelineClient(base_url, timeout=timeout,
                                      token=token)
         self.preview_interval = preview_interval
+        self.compile_cache = compile_cache
+        self.prefetched = 0              # warm-pool payloads landed
         self.transport_factory = (transport_factory
                                   or (lambda desc: InMemoryTransport()))
         self.checkpoints = (CheckpointStore(checkpoint_dir)
@@ -202,8 +211,13 @@ class PipelineWorker:
 
     # -- registration ---------------------------------------------------
     def register(self) -> str:
-        """Announce capabilities; adopt the broker's ``lease_ttl`` (and
-        ``results_dir`` when shared-fs).  Returns the worker id."""
+        """Announce capabilities; adopt the broker's ``lease_ttl``,
+        the minted per-worker secret (the client attaches it to every
+        subsequent call) and ``results_dir`` when shared-fs.  With a
+        persistent compile cache, also wire the executable warm pool
+        and prefetch the broker's hottest signatures BEFORE the first
+        lease — a fresh worker deserializes the hot chains instead of
+        paying N compile storms.  Returns the worker id."""
         reply = self.client.register_worker(
             worker_id=self.worker_id, plugins=self.plugins,
             mesh_shape=self.mesh_shape, max_batch=self.max_batch,
@@ -214,6 +228,16 @@ class PipelineWorker:
         if self.heartbeat is None:
             self.heartbeat = max(0.05, self.lease_ttl / 3)
         self._registered = True
+        cache = self.compile_cache
+        if cache is not None and cache.store is not None:
+            cache.fetch = self.client.fetch_executable
+            # uploads read self.worker_id at call time so a re-register
+            # (new secret, maybe new id) stays wired
+            cache.publish = lambda sig, payload: \
+                self.client.upload_executable(sig, self.worker_id,
+                                              payload)
+            self.prefetched = cache.prefetch(
+                reply.get("hot_executables") or [])
         return self.worker_id
 
     # -- main loop ------------------------------------------------------
@@ -233,8 +257,11 @@ class PipelineWorker:
             leases = self.client.lease(self.worker_id,
                                        max_jobs=self.max_batch)
         except ServiceError as e:
-            if e.status == 404:          # broker restarted and lost the
-                self._registered = False  # registry: re-register next try
+            if e.status in (403, 404):
+                # 404: broker restarted and lost the registry.  403: our
+                # secret was rotated out from under us (another process
+                # re-registered this id).  Either way: re-register.
+                self._registered = False
             return False
         except OSError:
             return False
@@ -722,6 +749,7 @@ def spawn_local_workers(url: str, n: int, *, transport: str = "inmemory",
                         worker_ids: list[str] | None = None,
                         pythonpath_extra: tuple[str, ...] = (),
                         token: str | None = None,
+                        executables_dir: str | None = None,
                         stdout: Any = None) -> list:
     """Spawn ``n`` worker subprocesses against a broker URL — the
     ``pipeline_serve --workers-remote N`` demo, benchmarks and tests all
@@ -759,19 +787,25 @@ def spawn_local_workers(url: str, n: int, *, transport: str = "inmemory",
             cmd += ["--import", mod]
         if token is not None:
             cmd += ["--token", token]
+        if executables_dir is not None:
+            cmd += ["--executables-dir", executables_dir]
         procs.append(subprocess.Popen(cmd, env=env, stdout=stdout,
                                       stderr=stdout))
     return procs
 
 
-def _transport_factory(kind: str, scratch: str,
-                       donate: bool = True) -> Callable[[dict], Transport]:
+def _transport_factory(kind: str, scratch: str, donate: bool = True,
+                       compile_cache: CompileCache | None = None
+                       ) -> Callable[[dict], Transport]:
     if kind == "sharded":
         import jax
         from jax.sharding import Mesh
         from ..core.transport import ShardedTransport
         mesh = Mesh(np.asarray(jax.devices()), ("data",))
-        cache = CompileCache()            # process-level: reused per job
+        # process-level: reused per job; the caller may hand in a cache
+        # with a persistent store (the executable warm pool)
+        cache = (compile_cache if compile_cache is not None
+                 else CompileCache())
         return lambda desc: ShardedTransport(mesh, donate=donate,
                                              compile_cache=cache)
     if kind == "chunked":
@@ -819,26 +853,39 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--preview-interval", type=float, default=0.5,
                     help="minimum seconds between preview uploads on "
                          "streaming jobs (0 disables previews)")
+    ap.add_argument("--executables-dir", default=None,
+                    help="local disk tier for serialized executables "
+                         "(sharded transport only; default: a subdir "
+                         "of the worker scratch directory)")
     args = ap.parse_args(argv)
     for mod in args.imports:
         importlib.import_module(mod)
     scratch = tempfile.mkdtemp(prefix="pipeline-worker-")
+    compile_cache = None
+    if args.transport == "sharded":
+        exe_dir = args.executables_dir or os.path.join(scratch,
+                                                       "executables")
+        compile_cache = CompileCache(store=exe_dir)
     worker = PipelineWorker(
         args.url,
         # gang execution stacks job inputs — donation would invalidate
         # buffers the stack still references (mirrors the scheduler's
         # --batch rule), so donate only when leases stay solo
         transport_factory=_transport_factory(args.transport, scratch,
-                                             donate=args.max_batch == 1),
+                                             donate=args.max_batch == 1,
+                                             compile_cache=compile_cache),
         checkpoint_dir=args.checkpoint_dir, shared_fs=args.shared_fs,
         worker_id=args.worker_id, max_batch=args.max_batch,
         sweeps=args.sweeps, poll=args.poll, heartbeat=args.heartbeat,
-        token=args.token, preview_interval=args.preview_interval)
+        token=args.token, preview_interval=args.preview_interval,
+        compile_cache=compile_cache)
     wid = worker.register()
     print(f"worker {wid} serving {args.url} "
           f"(transport={args.transport}, plugins={len(worker.plugins)}"
           f"{', checkpointed' if worker.checkpoints else ''}"
-          f"{', shared-fs' if args.shared_fs else ''})", flush=True)
+          f"{', shared-fs' if args.shared_fs else ''}"
+          f"{f', prefetched={worker.prefetched}' if worker.prefetched else ''}"
+          f")", flush=True)
     try:
         worker.run_forever()
     except KeyboardInterrupt:

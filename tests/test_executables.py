@@ -1,0 +1,371 @@
+"""The persistent executable tier ("kill the retrace tax") and the two
+bugfixes riding along.
+
+Covers: payload framing (corrupt/truncated/version-mismatched payloads
+are ALWAYS rejected, never silently loaded), the ExecutableStore spool
+(LRU retention, heat ranking), CompileCache's disk tier (a second
+process-alike cache pointed at the same store deserializes instead of
+recompiling, bit-identically), the clear()-during-build generation
+guard, the monotonic lease clock (a wall-clock step must not expire
+leases; a monotonic advance must), per-worker secrets over HTTP, and
+the broker warm pool end-to-end: a freshly registered worker prefetches
+the spool's hot list and serves its first job with ``executable.fetch``
+spans but NO ``compile`` span.
+"""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import PluginRunner, ShardedTransport
+from repro.service import (CompileCache, PipelineClient, PipelineService,
+                           PipelineWorker, ServiceError, from_spec)
+from repro.service import scheduler as sched_mod
+from repro.service.compile_cache import (_MAGIC, ExecutableStore,
+                                         StaleExecutable,
+                                         deserialize_payload,
+                                         env_fingerprint,
+                                         executable_signature)
+from repro.service.worker import _transport_factory
+from repro.tomo import standard_chain
+
+
+def _framed(sig: str, body: bytes = b"opaque-executable-bytes") -> bytes:
+    """A payload that passes the store's framing check (the store never
+    deserializes, so the body can be anything)."""
+    header = json.dumps({"sig": sig, "fingerprint": env_fingerprint()},
+                        sort_keys=True).encode()
+    return _MAGIC + header + b"\n" + body
+
+
+def _spec(seed=0):
+    """The standard tomo chain as a wire spec (matches test_worker)."""
+    return {"version": 1, "plugins": [
+        {"plugin": "synthetic_tomo_loader",
+         "params": {"n_det": 16, "n_angles": 8, "n_rows": 1,
+                    "seed": seed},
+         "out_datasets": ["tomo"]},
+        {"plugin": "dark_flat_correction",
+         "params": {"use_pallas": False},
+         "in_datasets": ["tomo"], "out_datasets": ["tomo"]},
+        {"plugin": "fbp_recon", "params": {"use_pallas": False},
+         "in_datasets": ["tomo"], "out_datasets": ["recon"]},
+        {"plugin": "hdf5_saver", "in_datasets": ["recon"]},
+    ]}
+
+
+@pytest.fixture
+def broker(tmp_path):
+    svc = PipelineService(workers_remote=True, lease_ttl=30.0,
+                          sweep_interval=999.0,
+                          executables_dir=str(tmp_path / "spool"))
+    host, port = svc.serve(port=0)
+    client = PipelineClient(f"http://{host}:{port}", timeout=60.0)
+    try:
+        yield svc, client
+    finally:
+        svc.stop()
+
+
+# ======================================================== signatures
+def test_executable_signature_stable_hex_and_key_sensitive():
+    a = executable_signature(("plugin", (1, 2, 3)))
+    assert a == executable_signature(("plugin", (1, 2, 3)))
+    assert a != executable_signature(("plugin", (1, 2, 4)))
+    assert len(a) == 64 and set(a) <= set("0123456789abcdef")
+
+
+def test_deserialize_rejects_every_bad_payload():
+    """No payload that isn't exactly a framed, fingerprint-matching,
+    this-process-loadable executable may ever load."""
+    good_sig = "ab" * 16
+    with pytest.raises(StaleExecutable):
+        deserialize_payload(b"not an executable at all")
+    with pytest.raises(StaleExecutable):        # truncated mid-header
+        deserialize_payload(_MAGIC + b'{"sig": "abc')
+    with pytest.raises(StaleExecutable):        # unpicklable body
+        deserialize_payload(_framed(good_sig, b"\x00garbage"))
+    stale = dict(env_fingerprint())
+    stale["jax"] = "0.0.1"                      # another toolchain
+    header = json.dumps({"sig": good_sig, "fingerprint": stale}).encode()
+    with pytest.raises(StaleExecutable):
+        deserialize_payload(_MAGIC + header + b"\n" + b"body")
+    with pytest.raises(StaleExecutable):        # signature mismatch
+        deserialize_payload(_framed("cd" * 16), sig=good_sig)
+
+
+# ==================================================== ExecutableStore
+def test_store_framing_lru_and_heat(tmp_path):
+    store = ExecutableStore(str(tmp_path / "s"), max_bytes=4096)
+    sig_a, sig_b = "aa" * 8, "bb" * 8
+    assert store.put_bytes(sig_a, b"raw junk") is False    # unframed
+    assert store.put_bytes("NOT-HEX!", _framed("aa" * 8)) is False
+    assert store.put_bytes(sig_a, _framed(sig_a)) is True
+    assert store.put_bytes(sig_b, _framed(sig_b)) is True
+    assert store.get_bytes(sig_a) == _framed(sig_a)
+    assert store.get_bytes("ee" * 8) is None
+    # heat: every put/get counts a use; sig_a has 2, sig_b has 1
+    assert store.hot(2) == [sig_a, sig_b]
+    # LRU: a payload pushing past max_bytes evicts the least recent
+    big = _framed("cc" * 8, b"x" * 4096)
+    assert store.put_bytes("cc" * 8, big) is True
+    assert not store.has(sig_b)                 # b was least recent
+    assert store.has(sig_a) or store.evictions >= 1
+    # a new store over the same directory adopts surviving entries
+    adopted = ExecutableStore(str(tmp_path / "s"), max_bytes=4096)
+    assert set(adopted.signatures()) == set(store.signatures())
+    store.clear()
+    assert store.signatures() == [] and store.total_bytes() == 0
+
+
+# ================================================== CompileCache tiers
+def test_disk_tier_second_cache_loads_instead_of_compiling(tmp_path):
+    """Two caches over one store directory = two worker processes over
+    a shared disk tier: the second deserializes every program the first
+    compiled — zero builder calls — and produces bit-identical output."""
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    store_dir = str(tmp_path / "exe")
+    pl = standard_chain(n_det=16, n_angles=8, n_rows=1, use_pallas=False)
+
+    def run(cache):
+        tr = ShardedTransport(mesh, donate=False, compile_cache=cache)
+        out = PluginRunner(standard_chain(n_det=16, n_angles=8, n_rows=1,
+                                          use_pallas=False), tr).run()
+        return tr.read(out["recon"])
+
+    warm = CompileCache(store=store_dir)
+    got1 = run(warm)
+    assert warm.stats()["disk"]["hits"] == 0    # nothing persisted yet
+    persisted = warm.stats()["disk"]["puts"]
+    assert persisted >= 1                       # AOT programs landed
+
+    cold = CompileCache(store=store_dir)
+    got2 = run(cold)
+    st = cold.stats()
+    assert st["disk"]["hits"] == persisted      # every program loaded
+    assert st["disk"]["rejects"] == 0
+    assert st["build_s"] == 0.0                 # ZERO fresh compiles
+    np.testing.assert_array_equal(got1, got2)   # bit-identical
+
+
+def test_corrupt_store_entries_fall_back_to_fresh_compile(tmp_path):
+    """Corrupted/truncated/version-mismatched disk entries must never
+    crash or produce wrong results: the cache rejects them, drops them
+    from disk, and compiles fresh."""
+    store_dir = str(tmp_path / "exe")
+    key = ("k", (16, 8))
+    sig = executable_signature(key)
+    builds = []
+
+    def builder():
+        builds.append(1)
+        return "freshly-built"                  # not serializable: fine
+
+    for bad in (b"not even framed",
+                _framed(sig)[:20],              # truncated
+                _framed(sig, b"\x00junk")):     # undeserializable body
+        cache = CompileCache(store=store_dir)
+        cache.store.put_bytes(sig, _framed(sig))   # seed a file...
+        with open(os.path.join(store_dir, f"{sig}.exe"), "wb") as fh:
+            fh.write(bad)                          # ...then corrupt it
+        got = cache.get_or_build(key, builder, serializable=True)
+        assert got == "freshly-built"
+        if bad.startswith(_MAGIC):              # framed-but-broken ones
+            assert cache.disk_rejects == 1      # counted + dropped
+            assert not cache.store.has(sig)
+    assert len(builds) == 3                     # compiled fresh each time
+
+
+def test_clear_generation_guard_blocks_inflight_reinsert():
+    """clear() during a build: the build still returns its value to the
+    caller, but may NOT re-enter the cache afterwards."""
+    cache = CompileCache()
+    entered, release = threading.Event(), threading.Event()
+    out = []
+
+    def slow_builder():
+        entered.set()
+        release.wait(5)
+        return "stale-program"
+
+    t = threading.Thread(target=lambda: out.append(
+        cache.get_or_build("k", slow_builder)))
+    t.start()
+    assert entered.wait(5)
+    cache.clear()                               # invalidate mid-build
+    release.set()
+    t.join(5)
+    assert out == ["stale-program"]             # caller still served
+    assert len(cache) == 0                      # ...but never cached
+    builds = []
+    cache.get_or_build("k", lambda: builds.append(1) or "fresh")
+    assert builds == [1]                        # next call rebuilds
+
+
+def test_clear_invalidates_disk_tier(tmp_path):
+    cache = CompileCache(store=str(tmp_path / "exe"))
+    sig = "ab" * 16
+    cache.store.put_bytes(sig, _framed(sig))
+    assert cache.store.has(sig)
+    cache.clear()
+    assert not cache.store.has(sig)             # cleared through to disk
+
+
+# ================================================= lease clock (bugfix)
+def test_lease_survives_wall_clock_step_but_not_monotonic(broker):
+    """The regression this PR fixes: lease expiry must use the
+    monotonic clock.  An NTP/DST wall-clock step of +2h may not expire
+    a live lease; genuine monotonic passage beyond the TTL must."""
+    svc, client = broker
+    b = svc.broker
+    client.register_worker(worker_id="cw")
+    jid = client.submit(_spec(seed=1))
+    assert client.lease("cw")
+    real_wall, real_mono = sched_mod._wall, sched_mod._mono
+    try:
+        sched_mod._wall = lambda: real_wall() + 7200    # +2h step
+        b._expire_locked_sweep()
+        assert client.status(jid)["state"] != "queued"  # NOT requeued
+        assert client.progress(jid, "cw")["verdict"] == "ok"
+        assert client.stats()["leases_expired"] == 0
+
+        sched_mod._mono = lambda: real_mono() + svc.broker.lease_ttl + 1
+        b._expire_locked_sweep()
+        assert client.stats()["leases_expired"] == 1
+        assert client.status(jid)["state"] == "queued"  # requeued
+        assert client.progress(jid, "cw")["verdict"] == "lost"
+    finally:
+        sched_mod._wall, sched_mod._mono = real_wall, real_mono
+
+
+# ============================================ worker identity (bugfix)
+def test_worker_secret_required_and_rotated(broker):
+    """lease/complete demand the secret minted at registration: a rogue
+    client reusing a worker_id (the bug: any client could complete any
+    worker's jobs) gets 403; re-registration rotates the secret."""
+    svc, client = broker
+    client.register_worker(worker_id="sw")
+    old_secret = client.worker_secret("sw")
+    jid = client.submit(_spec(seed=2))
+
+    rogue = PipelineClient(client.base_url, timeout=30.0)
+    with pytest.raises(ServiceError) as ei:     # no secret at all
+        rogue.lease("sw")
+    assert ei.value.status == 403
+    rogue.adopt_worker_secret("sw", "deadbeef" * 4)
+    with pytest.raises(ServiceError) as ei:     # wrong secret
+        rogue.lease("sw")
+    assert ei.value.status == 403
+    with pytest.raises(ServiceError) as ei:     # unregistered worker
+        rogue.lease("ghost")
+    assert ei.value.status == 404
+
+    assert client.lease("sw")                   # the real holder works
+    with pytest.raises(ServiceError) as ei:     # rogue can't complete it
+        rogue.complete(jid, "sw", "done")
+    assert ei.value.status == 403
+
+    # re-registration mints a FRESH secret — the old one dies with it
+    client.register_worker(worker_id="sw")
+    assert client.worker_secret("sw") != old_secret
+    rogue.adopt_worker_secret("sw", old_secret)
+    with pytest.raises(ServiceError) as ei:
+        rogue.lease("sw")
+    assert ei.value.status == 403
+
+
+# =========================================== executable endpoints (HTTP)
+def test_executable_upload_fetch_and_hot_list(broker):
+    svc, client = broker
+    reply = client.register_worker(worker_id="ew")
+    sig = executable_signature(("wire-test", 1))
+    payload = _framed(sig)
+
+    out = client.upload_executable(sig, "ew", payload)
+    assert out["stored"] is True and out["bytes"] == len(payload)
+    assert client.fetch_executable(sig) == payload
+    assert sig in client.hot_executables()
+    with pytest.raises(ServiceError) as ei:     # unknown signature
+        client.fetch_executable("ee" * 16)
+    assert ei.value.status == 404
+    with pytest.raises(ServiceError) as ei:     # unframed payload
+        client.upload_executable(sig, "ew", b"arbitrary junk")
+    assert ei.value.status == 400
+
+    rogue = PipelineClient(client.base_url, timeout=30.0)
+    rogue.adopt_worker_secret("ew", "f00d" * 8)
+    with pytest.raises(ServiceError) as ei:     # bad secret
+        rogue.upload_executable(sig, "ew", payload)
+    assert ei.value.status == 403
+    # a fresh registration's reply advertises the hot list
+    reply2 = client.register_worker(worker_id="ew2")
+    assert sig in reply2["hot_executables"]
+
+
+def test_executable_reads_are_token_authed(tmp_path):
+    """Unlike the read-only job endpoints, /executables is token-authed
+    (serialized programs are code)."""
+    svc = PipelineService(workers_remote=True, token="sesame",
+                          executables_dir=str(tmp_path / "spool"))
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    try:
+        bare = PipelineClient(url, timeout=30.0)
+        for call in (bare.hot_executables,
+                     lambda: bare.fetch_executable("ab" * 16)):
+            with pytest.raises(ServiceError) as ei:
+                call()
+            assert ei.value.status == 401
+        armed = PipelineClient(url, timeout=30.0, token="sesame")
+        assert armed.hot_executables() == []
+    finally:
+        svc.stop()
+
+
+# ================================================= warm pool end-to-end
+def test_cold_worker_prefetches_and_skips_compile(broker, tmp_path):
+    """The acceptance path: worker A compiles the standard chain and
+    uploads its executables; a brand-new worker B prefetches them at
+    registration and serves its first job with ``executable.fetch``
+    spans and NO ``compile`` span — bit-identical results."""
+    svc, client = broker
+    url = client.base_url
+
+    def make_worker(wid, sub):
+        cache = CompileCache(store=str(tmp_path / sub / "exe"))
+        return PipelineWorker(
+            url, worker_id=wid, poll=0.01, compile_cache=cache,
+            transport_factory=_transport_factory(
+                "sharded", str(tmp_path / sub), compile_cache=cache))
+
+    hot = make_worker("hot-w", "wA")
+    hot.register()
+    assert hot.prefetched == 0                  # spool was empty
+    j1 = client.submit(_spec(seed=3))
+    assert hot.run_once() is True
+    assert client.wait(j1, timeout=120)["state"] == "done"
+    assert hot.compile_cache.uploads >= 1       # published to the broker
+    assert svc.broker.executables.stats()["entries"] >= 1
+
+    cold = make_worker("cold-w", "wB")
+    cold.register()
+    assert cold.prefetched >= 1                 # warm pool landed
+    # hot-w must not race for the job: deregister it from contention by
+    # simply not calling run_once on it again
+    j2 = client.submit(_spec(seed=3))
+    assert cold.run_once() is True
+    assert client.wait(j2, timeout=120)["state"] == "done"
+
+    st = cold.compile_cache.stats()
+    assert st["disk"]["hits"] >= 1
+    assert st["build_s"] == 0.0                 # zero fresh compiles
+    names = [s["name"] for s in client.trace(j2)["spans"]]
+    assert "executable.fetch" in names
+    assert "compile" not in names               # the retrace tax, killed
+    np.testing.assert_array_equal(client.result(j1), client.result(j2))

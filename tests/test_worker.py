@@ -326,6 +326,8 @@ def test_shared_fs_results_and_outside_paths_refused(broker):
     np.testing.assert_array_equal(client.result(jid), _reference(spec))
 
     j2 = client.submit(_spec(seed=9))
+    # acting on fs-w's behalf needs fs-w's minted secret
+    client.adopt_worker_secret("fs-w", w.client.worker_secret("fs-w"))
     assert client.lease("fs-w")
     with pytest.raises(ServiceError) as ei:
         client.complete(j2, "fs-w", "done",
