@@ -19,6 +19,17 @@ and writes ``BENCH_service.json``.  It also asserts that ``/metrics``
 exposes every catalogued metric name — exiting nonzero on a miss, so
 CI catches a metric that silently fell off the exposition.
 
+The health-plane row (``run_health``) kills a worker mid-job and
+proves the full observability story on a live cluster: the critical
+``lease-expiry-rate`` SLO rule fires and resolves, the event log holds
+the job's complete submit→lease→expire→requeue→complete chain on ONE
+trace id (and every record carries a trace id — nonzero exit
+otherwise), ``GET /slo`` serves every default rule, the OTLP export
+matches the native trace span-for-span, and cost-analysis workers
+stamp ``flops`` / ``bytes_accessed`` / ``peak_memory`` onto process
+spans.  It writes ``BENCH_events.json`` and ``BENCH_otlp_trace.json``
+for the CI artifact upload.
+
 Standalone:   PYTHONPATH=src python benchmarks/bench_load.py
 CI smoke:     PYTHONPATH=src python benchmarks/bench_load.py --smoke
 """
@@ -404,6 +415,162 @@ def run_cold_worker(*, n_det: int, n_angles: int) -> dict:
         svc.stop()
 
 
+def run_health(*, n_det: int, n_angles: int,
+               events_out: str = "BENCH_events.json",
+               otlp_out: str = "BENCH_otlp_trace.json") -> dict:
+    """The health-plane proof (docs/observability.md): kill a sharded
+    cost-analysis worker mid-job and verify the SLO lifecycle, the
+    event-log transition chain, the OTLP export's 1:1 span mapping,
+    and the per-step device profiles.  Returns a dict whose
+    ``failures`` list must be empty for CI to pass."""
+    import os
+    import signal
+    import tempfile
+
+    from repro.obs import default_rules, iter_spans
+
+    failures: list[str] = []
+    svc = PipelineService(
+        workers_remote=True, lease_ttl=1.5, sweep_interval=0.1,
+        slo_interval=0.1,
+        # tighten the rate window so fire->resolve happens in seconds
+        slo_spec={"lease-expiry-rate": {"window_s": 4.0}})
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    client = PipelineClient(url, timeout=60.0)
+    ckpt = tempfile.mkdtemp(prefix="bench-health-ckpt-")
+    workers = spawn_local_workers(
+        url, 2, transport="sharded", checkpoint_dir=ckpt,
+        poll=0.05, heartbeat=0.3, cost_analysis=True,
+        worker_ids=["health-w0", "health-w1"])
+    pids = dict(zip(["health-w0", "health-w1"], workers))
+    try:
+        deadline = time.time() + 120
+        while len(client.workers()) < 2:
+            assert time.time() < deadline, "workers never registered"
+            time.sleep(0.05)
+        assert client.health(ready=True)["ready"] is True
+
+        # -- kill the worker holding the first lease mid-job -------------
+        ids = [client.submit(_spec(i, n_det=n_det, n_angles=n_angles))
+               for i in range(3)]
+        while True:
+            running = [s for s in (client.status(j) for j in ids)
+                       if s["state"] == "running" and s["worker_id"]]
+            if running:
+                victim_job, victim = (running[0]["job_id"],
+                                      running[0]["worker_id"])
+                break
+            assert time.time() < deadline, "nothing ever ran"
+            time.sleep(0.02)
+        os.kill(pids[victim].pid, signal.SIGKILL)
+
+        # the critical rule must fire: readiness flips to 503
+        while client.health(ready=True)["ready"]:
+            assert time.time() < deadline, "expiry rule never fired"
+            time.sleep(0.05)
+        if "lease-expiry-rate" not in client.slo()["critical_firing"]:
+            failures.append("slo_rule_never_fired")
+
+        # the survivor drains everything (the killed job resumes from
+        # its shared checkpoint or restarts)
+        snaps = [client.wait(j, timeout=300) for j in ids]
+        bad = [s for s in snaps if s["state"] != "done"]
+        assert not bad, f"{len(bad)} jobs not done, first: {bad[0]}"
+        # ...and once the rate window slides past the expiry the rule
+        # resolves: readiness back to 200
+        while not client.health(ready=True)["ready"]:
+            assert time.time() < deadline, "expiry rule never resolved"
+            time.sleep(0.1)
+
+        # -- GET /slo: every default rule present, fire+resolve counted --
+        slo = client.slo()
+        by_rule = {r["name"]: r for r in slo["rules"]}
+        missing_rules = [r.name for r in default_rules()
+                         if r.name not in by_rule]
+        if missing_rules:
+            failures.append(f"slo_missing_rules:{missing_rules}")
+        expiry = by_rule.get("lease-expiry-rate", {})
+        if not (expiry.get("fired", 0) >= 1
+                and expiry.get("resolved", 0) >= 1
+                and expiry.get("state") == "ok"):
+            failures.append(f"slo_lifecycle_incomplete:{expiry}")
+
+        # -- event log: full transition chain on ONE trace id ------------
+        events = client.events()["events"]
+        with open(events_out, "w") as fh:
+            json.dump(events, fh, indent=2)
+        if any(not e["trace_id"] for e in events):
+            failures.append("event_records_missing_trace_id")
+        mine = [e for e in events if e["job_id"] == victim_job]
+        chain = [e["event"] for e in mine]
+        for needed in ("job.submit", "job.lease", "lease.expire",
+                       "job.requeue", "job.complete"):
+            if needed not in chain:
+                failures.append(f"event_chain_missing:{needed}")
+        if len({e["trace_id"] for e in mine}) != 1:
+            failures.append("event_chain_trace_id_not_unique")
+        for name in ("alert.firing", "alert.resolved"):
+            n = sum(1 for e in events if e["event"] == name
+                    and e["attrs"].get("rule") == "lease-expiry-rate")
+            if n != 1:
+                failures.append(f"alert_event_count:{name}={n}")
+
+        # -- OTLP export: spans match the native trace 1:1 ---------------
+        native = client.trace(victim_job)["spans"]
+        otlp = client.trace(victim_job, otlp=True)
+        with open(otlp_out, "w") as fh:
+            json.dump(otlp, fh, indent=2)
+        exported = list(iter_spans(otlp))
+        if len(exported) != len(native):
+            failures.append(f"otlp_span_count:{len(exported)}"
+                            f"!={len(native)}")
+        native_ids = {str(s["span_id"]).lower().rjust(16, "0")
+                      for s in native}
+        otlp_ids = {s["spanId"] for s in exported}
+        if native_ids != otlp_ids:
+            failures.append("otlp_span_ids_mismatch")
+
+        # -- device profiles on jitted process spans ---------------------
+        profiled = [s for s in native
+                    if s["name"].startswith("plugin.")
+                    and s["name"].endswith(".process")
+                    and "flops" in (s.get("attrs") or {})]
+        if not profiled:
+            failures.append("no_process_span_with_cost_attrs")
+        for key in ("bytes_accessed", "peak_memory"):
+            if not any(key in s["attrs"] for s in profiled):
+                failures.append(f"cost_attr_missing:{key}")
+
+        resumed = next((s for s in snaps
+                        if s["job_id"] == victim_job), {})
+        st = client.stats()
+        return {
+            "config": {"n_det": n_det, "n_angles": n_angles},
+            "leases_expired": st["leases_expired"],
+            "jobs_requeued": st["jobs_requeued"],
+            "victim_job_attempts": resumed.get("attempt"),
+            "victim_resumed_from": resumed.get("resumed_from"),
+            "slo_rules": sorted(by_rule),
+            "expiry_rule": {k: expiry.get(k)
+                            for k in ("fired", "resolved", "state")},
+            "n_events": len(events),
+            "n_spans_native": len(native),
+            "n_spans_otlp": len(exported),
+            "n_process_spans_profiled": len(profiled),
+            "events_out": events_out, "otlp_out": otlp_out,
+            "failures": failures,
+            "metrics_missing": check_metrics_complete(url),
+        }
+    finally:
+        for p in workers:
+            if p.poll() is None:
+                p.kill()
+        for p in workers:
+            p.wait(timeout=10)
+        svc.stop()
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -436,6 +603,8 @@ def main(argv=None) -> int:
                                       n_workers=cfg["n_workers"])
     result["cold_worker"] = run_cold_worker(n_det=cfg["n_det"],
                                             n_angles=cfg["n_angles"])
+    result["health"] = run_health(n_det=cfg["n_det"],
+                                  n_angles=cfg["n_angles"])
 
     with open(args.out, "w") as fh:
         json.dump(result, fh, indent=2)
@@ -459,14 +628,27 @@ def main(argv=None) -> int:
     print(f"cold worker: first job {cw['cold_first_job_e2e_s']}s "
           f"compiling vs {cw['prefetched_first_job_e2e_s']}s "
           f"prefetched ({cw['speedup']}x — the retrace tax)")
+    hp = result["health"]
+    print(f"health plane: expiry rule fired/resolved "
+          f"{hp['expiry_rule']['fired']}/{hp['expiry_rule']['resolved']}"
+          f", {hp['n_events']} events, {hp['n_spans_otlp']} OTLP spans "
+          f"(= {hp['n_spans_native']} native), "
+          f"{hp['n_process_spans_profiled']} profiled process spans "
+          f"-> {hp['events_out']}, {hp['otlp_out']}")
     missing = sorted(set(result["metrics_missing"])
                      | set(sm["metrics_missing"])
                      | set(wf["metrics_missing"])
-                     | set(cw["metrics_missing"]))
+                     | set(cw["metrics_missing"])
+                     | set(hp["metrics_missing"]))
+    failed = False
     if missing:
         print(f"MISSING from /metrics: {missing}", file=sys.stderr)
-        return 1
-    return 0
+        failed = True
+    if hp["failures"]:
+        print(f"HEALTH-PLANE failures: {hp['failures']}",
+              file=sys.stderr)
+        failed = True
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

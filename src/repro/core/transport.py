@@ -433,12 +433,15 @@ class ShardedTransport(Transport):
                 pd.dataset.backing = o[j]
 
     def plugin_cost(self, plugin: BasePlugin) -> dict[str, float] | None:
-        """HLO cost analysis for one plugin step: ``{"flops", "bytes"}``
-        from the AOT-compiled program, or None (disabled, or the jax
-        build doesn't expose ``cost_analysis``).  Cached per plugin key
-        — the extra lower+compile happens once per distinct step; the
-        profiler attaches the numbers to ``process`` spans so
-        ``/metrics`` can report per-plugin FLOPs."""
+        """HLO cost + memory analysis for one plugin step, from the
+        AOT-compiled program: ``flops`` / ``bytes`` (legacy alias) /
+        ``bytes_accessed`` from ``cost_analysis()``, plus
+        ``peak_memory`` / ``temp_bytes`` / ``argument_bytes`` from
+        ``memory_analysis()`` when the jax build exposes it.  None when
+        disabled or neither analysis is available.  Cached per plugin
+        key — the extra lower+compile happens once per distinct step;
+        the profiler attaches the numbers to ``process`` spans so
+        traces and ``/metrics`` can report per-plugin device profiles."""
         if not self.cost_analysis:
             return None
         key = ("cost", self._plugin_key(plugin))
@@ -447,12 +450,26 @@ class ShardedTransport(Transport):
         cost: dict[str, float] | None
         try:
             with self.mesh:
-                ca = self.compile_plugin(plugin, lower_only=True) \
-                    .compile().cost_analysis()
+                compiled = self.compile_plugin(
+                    plugin, lower_only=True).compile()
+            ca = compiled.cost_analysis()
             if isinstance(ca, (list, tuple)):    # older jax: per-device
                 ca = ca[0] if ca else {}
+            bytes_accessed = float(ca.get("bytes accessed", 0.0))
             cost = {"flops": float(ca.get("flops", 0.0)),
-                    "bytes": float(ca.get("bytes accessed", 0.0))}
+                    "bytes": bytes_accessed,          # legacy alias
+                    "bytes_accessed": bytes_accessed}
+            try:
+                ma = compiled.memory_analysis()
+                cost["peak_memory"] = float(
+                    getattr(ma, "temp_size_in_bytes", 0)
+                    + getattr(ma, "output_size_in_bytes", 0))
+                cost["temp_bytes"] = float(
+                    getattr(ma, "temp_size_in_bytes", 0))
+                cost["argument_bytes"] = float(
+                    getattr(ma, "argument_size_in_bytes", 0))
+            except Exception:        # noqa: BLE001 — telemetry only
+                pass                 # cost_analysis alone still useful
         except Exception:            # noqa: BLE001 — telemetry only
             cost = None
         self._costs[key] = cost

@@ -49,6 +49,16 @@ Three modes:
       PYTHONPATH=src python -m repro.launch.pipeline_serve client \\
           preview scan0 --out live.npy
 
+  plus the cluster health plane (``docs/observability.md``) — SLO rule
+  states, the structured event log (tail with ``--follow``), the
+  per-worker scoreboard::
+
+      PYTHONPATH=src python -m repro.launch.pipeline_serve client slo
+      PYTHONPATH=src python -m repro.launch.pipeline_serve client \\
+          events --follow --format text
+      PYTHONPATH=src python -m repro.launch.pipeline_serve client \\
+          cluster --format text
+
 * **multi-host demo** — ``--workers-remote N`` runs the broker and N
   detached worker *subprocesses* pulling jobs from it over HTTP (one
   queue, many worker processes — see ``docs/worker-protocol.md``)::
@@ -180,6 +190,13 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="--serve: spool evicted terminal-job traces "
                          "to this directory (bounded ring; "
                          "docs/observability.md)")
+    ap.add_argument("--cost-analysis",
+                    action=argparse.BooleanOptionalAction, default=False,
+                    help="sharded transport: attach per-plugin HLO "
+                         "FLOPs/bytes-accessed and peak-memory "
+                         "profiles to process spans (one extra AOT "
+                         "compile per distinct step; "
+                         "docs/observability.md)")
     return ap
 
 
@@ -192,8 +209,10 @@ def _transport_factory(args, cache: CompileCache):
         # buffer only at its FINAL use, so every dataset a checkpoint
         # (or a branching chain) still needs stays alive.
         donate = not args.batch
+        cost = getattr(args, "cost_analysis", False)
         return lambda job: ShardedTransport(mesh, donate=donate,
-                                            compile_cache=cache)
+                                            compile_cache=cache,
+                                            cost_analysis=cost)
     if args.transport == "chunked":
         return lambda job: ChunkedFileTransport()
     return lambda job: InMemoryTransport()
@@ -213,7 +232,8 @@ def _serve_main(args) -> None:
             f"http://{host}:{port}", args.workers_remote,
             transport=args.transport,
             checkpoint_dir=args.checkpoint_dir,
-            shared_fs=args.shared_fs, token=args.token)
+            shared_fs=args.shared_fs, token=args.token,
+            cost_analysis=args.cost_analysis)
         print(f"pipeline broker listening on http://{host}:{port}  "
               f"({len(workers)} local worker processes, lease_ttl="
               f"{args.lease_ttl}s; attach more with `python -m "
@@ -259,7 +279,8 @@ def _remote_demo(args) -> None:
     url = f"http://{host}:{port}"
     workers = spawn_local_workers(
         url, args.workers_remote, transport=args.transport,
-        checkpoint_dir=args.checkpoint_dir, shared_fs=args.shared_fs)
+        checkpoint_dir=args.checkpoint_dir, shared_fs=args.shared_fs,
+        cost_analysis=args.cost_analysis)
     client = PipelineClient(url)
     try:
         t0 = time.time()
@@ -526,6 +547,39 @@ def _client_parser() -> argparse.ArgumentParser:
     tr.add_argument("job_id")
     tr.add_argument("--json", action="store_true",
                     help="print the raw span list instead of the gantt")
+    tr.add_argument("--otlp", action="store_true",
+                    help="print the OTLP-shaped JSON export instead "
+                         "(?format=otlp; docs/observability.md)")
+    slo = sub.add_parser(
+        "slo", help="GET the SLO rule states (/slo)",
+        description="Every SLO rule's definition, current reading and "
+                    "alert lifecycle state (docs/observability.md).")
+    slo.add_argument("--format", choices=("json", "text"),
+                     default="json")
+    ev = sub.add_parser(
+        "events", help="GET the structured event log (/events)",
+        description="Page — or --follow tail — the bounded structured "
+                    "event log: one record per job state transition "
+                    "and alert edge, each carrying trace_id / job_id "
+                    "/ worker_id (docs/observability.md).")
+    ev.add_argument("--since", type=int, default=0,
+                    help="resume cursor: only records with seq > N")
+    ev.add_argument("--limit", type=int, default=None,
+                    help="page size bound")
+    ev.add_argument("--follow", action="store_true",
+                    help="poll forever, printing records as they land "
+                         "(one line each)")
+    ev.add_argument("--interval", type=float, default=1.0,
+                    help="--follow poll period in seconds")
+    ev.add_argument("--format", choices=("json", "text"),
+                    default="json")
+    cl = sub.add_parser(
+        "cluster", help="GET the per-worker scoreboard (/cluster)",
+        description="Broker mode: every registered worker's heartbeat "
+                    "staleness, active leases with time-to-expiry, "
+                    "last error and warm-pool prefetch count.")
+    cl.add_argument("--format", choices=("json", "text"),
+                    default="json")
     sub.add_parser("jobs", help="GET every job's snapshot")
     sub.add_parser("stats", help="GET scheduler + compile-cache stats")
     sub.add_parser("metrics",
@@ -648,6 +702,86 @@ def _ingest_main(client: PipelineClient, args) -> None:
         print(json.dumps(client.eof(args.job_id), indent=2))
 
 
+def _table(rows: list[tuple]) -> str:
+    """Plain-text column alignment for the --format text views."""
+    widths = [max(len(str(r[i])) for r in rows)
+              for i in range(len(rows[0]))]
+    return "\n".join(
+        "  ".join(str(c).ljust(w) for c, w in zip(r, widths)).rstrip()
+        for r in rows)
+
+
+def _slo_text(snap: dict) -> str:
+    rows = [("RULE", "STATE", "VALUE", "THRESHOLD", "FIRED",
+             "RESOLVED", "METRIC")]
+    for r in snap["rules"]:
+        value = "-" if r["value"] is None else f"{r['value']:.3f}"
+        rows.append((("*" if r["critical"] else " ") + r["name"],
+                     r["state"], value,
+                     f"{r['op']} {r['threshold']:g}",
+                     r["fired"], r["resolved"], r["metric"]))
+    firing = ", ".join(snap["firing"]) or "none"
+    return (_table(rows)
+            + f"\nfiring: {firing}   (* = critical rule)")
+
+
+def _event_line(rec: dict) -> str:
+    attrs = " ".join(f"{k}={v}"
+                     for k, v in sorted(rec["attrs"].items()))
+    return (f"{rec['seq']:>6d}  {rec['ts']:.3f}  {rec['event']:<14s} "
+            f"trace={rec['trace_id'] or '-'} "
+            f"job={rec['job_id'] or '-'} "
+            f"worker={rec['worker_id'] or '-'}"
+            + (f"  {attrs}" if attrs else ""))
+
+
+def _cluster_text(doc: dict) -> str:
+    rows = [("WORKER", "LEASES", "STALE_S", "DONE", "FAILED",
+             "PREFETCHED", "LAST_ERROR")]
+    for w in doc["workers"]:
+        leases = ",".join(ls["job_id"] for ls in w["leases"]) or "-"
+        err = w.get("last_error") or "-"
+        if len(err) > 40:
+            err = err[:37] + "..."
+        rows.append((w["worker_id"], leases,
+                     f"{w['heartbeat_staleness_s']:.1f}",
+                     w["jobs_done"], w["jobs_failed"],
+                     w["prefetched"], err))
+    return (_table(rows)
+            + f"\nactive_leases={doc['active_leases']}  "
+              f"leases_expired={doc['leases_expired']}  "
+              f"jobs_requeued={doc['jobs_requeued']}  "
+              f"lease_ttl={doc['lease_ttl']}")
+
+
+def _events_main(client: PipelineClient, args) -> None:
+    """One page of the event log, or --follow: tail it forever."""
+    if not args.follow:
+        page = client.events(since=args.since, limit=args.limit)
+        if args.format == "text":
+            for rec in page["events"]:
+                print(_event_line(rec))
+            tail = f"# cursor {page['cursor']}"
+            if page["dropped"]:
+                tail += f"  ({page['dropped']} dropped before cursor)"
+            print(tail)
+        else:
+            print(json.dumps(page, indent=2))
+        return
+    cursor = args.since
+    try:
+        while True:
+            page = client.events(since=cursor, limit=args.limit)
+            for rec in page["events"]:
+                print(_event_line(rec) if args.format == "text"
+                      else json.dumps(rec), flush=True)
+            cursor = page["cursor"]
+            if not page["events"]:
+                time.sleep(max(args.interval, 0.05))
+    except KeyboardInterrupt:
+        pass
+
+
 def _client_main(argv: list[str]) -> None:
     args = _client_parser().parse_args(argv)
     client = PipelineClient(args.url, token=args.token)
@@ -740,10 +874,23 @@ def _client_main(argv: list[str]) -> None:
         elif args.action == "cancel":
             print(json.dumps(client.cancel(args.job_id), indent=2))
         elif args.action == "trace":
-            if args.json:
+            if args.otlp:
+                print(json.dumps(client.trace(args.job_id, otlp=True),
+                                 indent=2))
+            elif args.json:
                 print(json.dumps(client.trace(args.job_id), indent=2))
             else:
                 print(client.trace(args.job_id, text=True), end="")
+        elif args.action == "slo":
+            snap = client.slo()
+            print(_slo_text(snap) if args.format == "text"
+                  else json.dumps(snap, indent=2))
+        elif args.action == "events":
+            _events_main(client, args)
+        elif args.action == "cluster":
+            doc = client.cluster()
+            print(_cluster_text(doc) if args.format == "text"
+                  else json.dumps(doc, indent=2))
         elif args.action == "jobs":
             print(json.dumps(client.jobs(), indent=2))
         elif args.action == "stats":

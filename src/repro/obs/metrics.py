@@ -306,6 +306,16 @@ CATALOGUE: tuple[tuple[str, str, str], ...] = (
      "frame arrival to executor consumption lag, seconds"),
     ("stream.window_latency_s", "histogram",
      "wall time of one arrival-driven pump over new frames, seconds"),
+    # -- health plane (docs/observability.md: events + SLO) -------------
+    ("executables.rejected", "counter",
+     "executable uploads the broker spool refused (unframed/corrupt)"),
+    ("alerts.fired", "counter",
+     "SLO alert pending->firing transitions"),
+    ("alerts.resolved", "counter",
+     "SLO alert firing->resolved transitions"),
+    ("slo.firing", "gauge", "SLO rules currently in the firing state"),
+    ("events.head", "gauge",
+     "newest structured-event sequence number (event-log write head)"),
 )
 
 

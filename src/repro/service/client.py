@@ -37,12 +37,17 @@ class ServiceError(RuntimeError):
         status: the HTTP status code (400 validation, 404 unknown,
             409 conflict, 429 admission rejection, ...).
         message: the server's ``error`` body field.
+        detail: the full parsed JSON error body when the server sent
+            one (e.g. the 503 readiness reply's ``firing`` list),
+            else None.
     """
 
-    def __init__(self, status: int, message: str):
+    def __init__(self, status: int, message: str,
+                 detail: dict[str, Any] | None = None):
         super().__init__(f"HTTP {status}: {message}")
         self.status = status
         self.message = message
+        self.detail = detail
 
 
 class PipelineClient:
@@ -86,12 +91,15 @@ class PipelineClient:
                 payload = resp.read()
                 resp_headers = dict(resp.headers)
         except urllib.error.HTTPError as e:
-            detail = e.read()
+            raw = e.read()
+            parsed: dict[str, Any] | None = None
             try:
-                message = json.loads(detail)["error"]
+                parsed = json.loads(raw)
+                message = parsed["error"]
             except (json.JSONDecodeError, KeyError, TypeError):
-                message = detail.decode(errors="replace") or e.reason
-            raise ServiceError(e.code, message) from None
+                message = raw.decode(errors="replace") or e.reason
+                parsed = parsed if isinstance(parsed, dict) else None
+            raise ServiceError(e.code, message, detail=parsed) from None
         out = payload if raw else json.loads(payload)
         return (out, resp_headers) if with_headers else out
 
@@ -139,16 +147,21 @@ class PipelineClient:
         """Scheduler + compile-cache counters (``GET /stats``)."""
         return self._request("GET", "/stats")
 
-    def trace(self, job_id: str, text: bool = False) -> dict[str, Any] | str:
+    def trace(self, job_id: str, text: bool = False,
+              otlp: bool = False) -> dict[str, Any] | str:
         """A job's cross-process span timeline
         (``GET /jobs/{id}/trace``): ``{"job_id", "trace_id",
         "spans": [...]}`` — or, with ``text=True``, the ASCII gantt
-        rendering (``?format=text``).  Raises ServiceError(404) for an
-        unknown/pruned job.  See ``docs/observability.md``."""
+        rendering (``?format=text``), or, with ``otlp=True``, the
+        OTLP/JSON export document (``?format=otlp``).  Raises
+        ServiceError(404) for an unknown/pruned job.  See
+        ``docs/observability.md``."""
         path = f"/jobs/{quote(job_id, safe='')}/trace"
         if text:
             return self._request("GET", path + "?format=text",
                                  raw=True).decode()
+        if otlp:
+            return self._request("GET", path + "?format=otlp")
         return self._request("GET", path)
 
     def metrics(self) -> str:
@@ -160,9 +173,45 @@ class PipelineClient:
         """The wire-format plugin registry (``GET /plugins``)."""
         return self._request("GET", "/plugins")
 
-    def health(self) -> dict[str, Any]:
-        """Liveness probe (``GET /healthz``)."""
-        return self._request("GET", "/healthz")
+    def health(self, ready: bool = False) -> dict[str, Any]:
+        """Liveness probe (``GET /healthz``).  With ``ready=True`` asks
+        the degrade-aware readiness question (``?ready=1``): while a
+        critical SLO rule fires the server answers 503 — returned here
+        as its machine-readable detail (``{"ok": False, "ready":
+        False, "firing": [...], ...}``) rather than raised, so callers
+        branch on ``out["ready"]``."""
+        if not ready:
+            return self._request("GET", "/healthz")
+        try:
+            return self._request("GET", "/healthz?ready=1")
+        except ServiceError as e:
+            if e.status == 503 and e.detail is not None:
+                return e.detail
+            raise
+
+    def slo(self) -> dict[str, Any]:
+        """The SLO engine snapshot (``GET /slo``): every rule's
+        definition, current reading and lifecycle state, plus the
+        ``firing`` / ``critical_firing`` summaries.  The scrape
+        evaluates first, so states are never stale."""
+        return self._request("GET", "/slo")
+
+    def events(self, since: int = 0,
+               limit: int | None = None) -> dict[str, Any]:
+        """A structured event-log page (``GET /events``): records with
+        ``seq > since`` oldest-first, the new ``cursor`` to resume
+        from, and how many records the bounded ring ``dropped`` before
+        this cursor.  Poll with the returned cursor to tail."""
+        q = f"?since={int(since)}"
+        if limit is not None:
+            q += f"&limit={int(limit)}"
+        return self._request("GET", "/events" + q)
+
+    def cluster(self) -> dict[str, Any]:
+        """The per-worker scoreboard (``GET /cluster``; broker mode —
+        409 otherwise): heartbeat staleness, active leases with
+        time-to-expiry, last error, warm-pool prefetch count."""
+        return self._request("GET", "/cluster")
 
     def cancel(self, job_id: str) -> dict[str, Any]:
         """Cancel a queued job (``DELETE /jobs/{id}``).
@@ -451,14 +500,20 @@ class PipelineClient:
         self._worker_secrets[worker_id] = secret
 
     def lease(self, worker_id: str, max_jobs: int = 1,
-              timeout: float = 0.0) -> list[dict[str, Any]]:
+              timeout: float = 0.0,
+              prefetched: int | None = None) -> list[dict[str, Any]]:
         """Lease capability-matching jobs (``POST /jobs/lease``).
         Returns the (possibly empty) job-descriptor list; ``timeout``
-        long-polls server-side up to 30s."""
-        return self._request("POST", "/jobs/lease", {
+        long-polls server-side up to 30s.  ``prefetched`` reports how
+        many warm-pool executables this worker holds — surfaced on the
+        ``GET /cluster`` scoreboard."""
+        body: dict[str, Any] = {
             "worker_id": worker_id, "max_jobs": max_jobs,
             "timeout": timeout,
-            "worker_secret": self._worker_secrets.get(worker_id)})["jobs"]
+            "worker_secret": self._worker_secrets.get(worker_id)}
+        if prefetched is not None:
+            body["prefetched"] = prefetched
+        return self._request("POST", "/jobs/lease", body)["jobs"]
 
     def progress(self, job_id: str, worker_id: str,
                  **fields: Any) -> dict[str, Any]:

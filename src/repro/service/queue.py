@@ -67,6 +67,20 @@ class JobQueue:
         self._terminal_hooks: list[Callable[[Job], None]] = []
         #: upstream job id -> ids of jobs submitted with it in ``after``
         self._downstream: dict[str, set[str]] = {}
+        #: structured event log (set by the service); the queue emits
+        #: ``job.submit`` for every admitted job — the one transition
+        #: only the queue sees, whatever path (submit / sweeps /
+        #: workflows) admitted it (docs/observability.md)
+        self.events = None
+
+    def _emit_submitted(self, jobs: list[Job]) -> None:
+        if self.events is None:
+            return
+        for job in jobs:
+            self.events.emit("job.submit", trace_id=job.trace_id,
+                             job_id=job.job_id, priority=job.priority,
+                             **({"after": list(job.after)}
+                                if job.after else {}))
 
     def add_terminal_hook(self, hook: Callable[[Job], None]) -> None:
         """Register a callback fired for each terminal transition the
@@ -266,6 +280,7 @@ class JobQueue:
 
         evicted: list[Job] = []
         dep_cancelled: list[Job] = []
+        admitted: list[Job] = []
         try:
             with self._lock:
                 evicted, dep_cancelled = self._prune_locked()
@@ -299,11 +314,13 @@ class JobQueue:
                 self._jobs[job_id] = job
                 heapq.heappush(self._heap, (-priority, seq, job))
                 dep_cancelled.extend(self._wire_deps_locked(job, aft, dd))
+                admitted.append(job)
                 self._not_empty.notify()
                 return job
         finally:
             # hooks (broker spool GC, metrics) do I/O — never under the
             # queue lock, and even when admission raises
+            self._emit_submitted(admitted)
             self._fire_evict_hooks(evicted)
             self._fire_terminal_hooks(dep_cancelled)
 
@@ -351,6 +368,7 @@ class JobQueue:
             raise ValueError(f"{len(data_deps)} data_deps for {n} jobs")
         evicted: list[Job] = []
         dep_cancelled: list[Job] = []
+        admitted: list[Job] = []
         try:
             with self._lock:
                 evicted, dep_cancelled = self._prune_locked()
@@ -395,9 +413,11 @@ class JobQueue:
                 for job, (aft, dd) in zip(jobs, deps):
                     dep_cancelled.extend(
                         self._wire_deps_locked(job, aft, dd))
+                admitted.extend(jobs)
                 self._not_empty.notify_all()
                 return jobs
         finally:
+            self._emit_submitted(admitted)
             self._fire_evict_hooks(evicted)
             self._fire_terminal_hooks(dep_cancelled)
 

@@ -74,13 +74,21 @@ def _upstream_ref(params: dict[str, Any]) -> tuple[str, str | None] | None:
     return None
 
 
-def _observe_terminal(metrics: MetricsRegistry | None, job: Job) -> None:
+def _observe_terminal(metrics: MetricsRegistry | None, job: Job,
+                      events=None) -> None:
     """Fold one terminal job into the registry: outcome counter,
-    end-to-end latency, and per-plugin process wall from its trace."""
+    end-to-end latency, and per-plugin process wall from its trace.
+    Every terminal path funnels through here exactly once, so this is
+    also where the structured ``job.complete`` event is emitted."""
     if job.stream is not None:
         # every terminal path funnels through here — the retained frame
         # chunks (kept for lease-expiry refetch) are no longer needed
         job.stream.drop_buffers()
+    if events is not None:
+        events.emit("job.complete", trace_id=job.trace_id,
+                    job_id=job.job_id, worker_id=job.worker_id or "",
+                    state=job.state.value, attempt=job.attempt,
+                    **({"error": job.error} if job.error else {}))
     if metrics is None:
         return
     if job.state is JobState.DONE:
@@ -127,7 +135,8 @@ class PipelineScheduler:
                  batch_max: int = 4,
                  fuse: bool = False,
                  compile_cache=None,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 events=None):
         """Args:
             queue: the admission queue workers pull from.
             transport_factory: Job -> Transport for each dispatch
@@ -144,6 +153,8 @@ class PipelineScheduler:
                 the SAME object into the transports the factory builds.
             metrics: telemetry registry (``repro.obs``) to record job
                 outcomes/latencies into; None disables.
+            events: structured :class:`~repro.obs.log.EventLog` for
+                state-transition records; None disables.
         """
         self.queue = queue
         self.transport_factory = (transport_factory
@@ -155,12 +166,14 @@ class PipelineScheduler:
         self.fuse = fuse
         self.compile_cache = compile_cache   # held for stats reporting
         self.metrics = metrics
+        self.events = events
         # terminal transitions the QUEUE performs (queue-side cancels,
         # workflow dependency cascades) are observed here — the
         # scheduler observes its own in _finish, so every terminal job
         # is counted exactly once (docs/workflows.md)
         queue.add_terminal_hook(
-            lambda job: _observe_terminal(self.metrics, job))
+            lambda job: _observe_terminal(self.metrics, job,
+                                          self.events))
         self._threads: list[threading.Thread] = []
         self._stop = threading.Event()
         self._lock = threading.Lock()
@@ -240,7 +253,9 @@ class PipelineScheduler:
 
     def _dispatched(self, job: Job) -> None:
         """Telemetry at dispatch: the queue.wait span (from submission,
-        or from the last requeue) and the queue-latency histogram."""
+        or from the last requeue), the queue-latency histogram, and the
+        ``job.lease`` event (in-process mode the "worker" is the
+        scheduler thread that claimed the job)."""
         now = job.started_at or time.time()
         waited_from = job.requeued_at or job.submitted_at
         job.trace.record("queue.wait", waited_from, now,
@@ -248,6 +263,11 @@ class PipelineScheduler:
         if self.metrics is not None:
             self.metrics.histogram("job.latency.queue").observe(
                 now - waited_from)
+        if self.events is not None:
+            self.events.emit("job.lease", trace_id=job.trace_id,
+                             job_id=job.job_id,
+                             worker_id=threading.current_thread().name,
+                             priority=job.priority)
 
     def _drive(self, job: Job, runner: PluginRunner) -> None:
         """Step a PREPARED runner to completion (status + checkpoints)."""
@@ -526,7 +546,7 @@ class PipelineScheduler:
             # in-process runs record every span exactly once, and
             # _finish sees each job exactly once — safe to fold the
             # whole trace into the plugin-wall histograms here
-            _observe_terminal(self.metrics, job)
+            _observe_terminal(self.metrics, job, self.events)
             _observe_plugin_spans(self.metrics, job.trace.spans())
         for job in jobs:
             # per-job so the queue can propagate DONE/FAILED/CANCELLED
@@ -596,6 +616,12 @@ class WorkerInfo:
     jobs_failed: int = 0
     #: job ids currently leased to this worker
     active: set[str] = dataclasses.field(default_factory=set)
+    #: the error string of the worker's most recent failed job (the
+    #: cluster scoreboard's "what went wrong last" column)
+    last_error: str | None = None
+    #: executables the worker reported prefetching from the warm pool
+    #: (piggybacked on lease requests)
+    prefetched: int = 0
 
     def snapshot(self) -> dict[str, Any]:
         return {"worker_id": self.worker_id,
@@ -609,7 +635,9 @@ class WorkerInfo:
                 "leases_granted": self.leases_granted,
                 "jobs_done": self.jobs_done,
                 "jobs_failed": self.jobs_failed,
-                "active": sorted(self.active)}
+                "active": sorted(self.active),
+                "last_error": self.last_error,
+                "prefetched": self.prefetched}
 
 
 @dataclasses.dataclass
@@ -655,6 +683,7 @@ class WorkerBroker:
                  sweep_interval: float | None = None,
                  results_dir: str | None = None,
                  metrics: MetricsRegistry | None = None,
+                 events=None,
                  executables_dir: str | None = None,
                  executables_max_bytes: int = 512 << 20):
         """Args:
@@ -667,6 +696,9 @@ class WorkerBroker:
                 temp directory.
             metrics: telemetry registry (``repro.obs``) to record job
                 outcomes/latencies into; None disables.
+            events: structured :class:`~repro.obs.log.EventLog` for
+                state-transition records (lease/park/expire/requeue/
+                complete); None disables.
             executables_dir: spool for serialized executables workers
                 upload (``PUT /executables/{sig}``) and fresh workers
                 prefetch (warm pool).  Default: a fresh temp directory.
@@ -674,12 +706,14 @@ class WorkerBroker:
         """
         self.queue = queue
         self.metrics = metrics
+        self.events = events
         # exactly-once outcome attribution: terminal transitions the
         # QUEUE performs (queue-side cancels, workflow dependency
         # cascades) fire this hook; the broker observes its own
         # transitions inline (docs/workflows.md)
         queue.add_terminal_hook(
-            lambda job: _observe_terminal(self.metrics, job))
+            lambda job: _observe_terminal(self.metrics, job,
+                                          self.events))
         self.lease_ttl = lease_ttl
         self.sweep_interval = (sweep_interval if sweep_interval is not None
                                else min(1.0, lease_ttl / 4))
@@ -844,7 +878,8 @@ class WorkerBroker:
     # -- lease ----------------------------------------------------------
     def lease(self, worker_id: str, max_jobs: int = 1,
               timeout: float = 0.0,
-              secret: str | None = None) -> list[dict[str, Any]]:
+              secret: str | None = None,
+              prefetched: int | None = None) -> list[dict[str, Any]]:
         """Pop up to ``max_jobs`` (capped by the worker's ``max_batch``)
         capability-matching jobs and lease them to ``worker_id``.
 
@@ -858,11 +893,17 @@ class WorkerBroker:
         a missing/mismatched per-worker secret.  A job whose chain
         cannot be wire-serialised (in-process submission with opaque
         params) is failed loudly rather than silently starving.
+
+        ``prefetched`` piggybacks the worker's warm-pool prefetch count
+        (how many hot executables it pulled at registration) for the
+        ``GET /cluster`` scoreboard.
         """
         self._expire_locked_sweep()
         with self._lock:
             w = self._check_secret_locked(worker_id, secret)
             w.last_seen = _wall()
+            if isinstance(prefetched, int) and prefetched >= 0:
+                w.prefetched = prefetched
             n = max(1, min(max_jobs, w.max_batch))
             pred = lambda job: self._capable(w, job)   # noqa: E731
         if n == 1:
@@ -886,7 +927,7 @@ class WorkerBroker:
                 job.finished_at = time.time()
                 with self._lock:
                     self._required.pop(job.job_id, None)
-                _observe_terminal(self.metrics, job)
+                _observe_terminal(self.metrics, job, self.events)
                 self.queue.notify_terminal(job)
                 continue
             except WireError as e:
@@ -896,7 +937,7 @@ class WorkerBroker:
                 with self._lock:
                     self.jobs_failed += 1
                     self._required.pop(job.job_id, None)
-                _observe_terminal(self.metrics, job)
+                _observe_terminal(self.metrics, job, self.events)
                 self.queue.notify_terminal(job)
                 continue
             with self._lock:
@@ -916,6 +957,11 @@ class WorkerBroker:
             if self.metrics is not None:
                 self.metrics.histogram("job.latency.queue").observe(
                     now - waited_from)
+            if self.events is not None:
+                self.events.emit("job.lease", trace_id=job.trace_id,
+                                 job_id=job.job_id, worker_id=worker_id,
+                                 attempt=job.attempt,
+                                 priority=job.priority)
             out.append({
                 "job_id": job.job_id, "process_list": spec,
                 "priority": job.priority, "attempt": job.attempt,
@@ -1036,7 +1082,7 @@ class WorkerBroker:
                     job.state = JobState.CANCELLED
                     job.cancel_reason = job.cancel_reason or "user"
                     job.finished_at = now
-                    _observe_terminal(self.metrics, job)
+                    _observe_terminal(self.metrics, job, self.events)
                 verdict = {"verdict": "cancelled"}
             else:
                 lease.expires_at = now_m + self.lease_ttl
@@ -1079,6 +1125,11 @@ class WorkerBroker:
                     self._drop_lease_locked(job_id, worker_id)
                     if self.metrics is not None:
                         self.metrics.counter("jobs.parked").inc()
+                    if self.events is not None:
+                        self.events.emit(
+                            "job.park", trace_id=job.trace_id,
+                            job_id=job_id, worker_id=worker_id,
+                            frames_consumed=job.frames_consumed)
                     self.queue.requeue(job)
                     return {"verdict": "parked"}
                 return {"verdict": "ok", "lease_ttl": self.lease_ttl}
@@ -1157,6 +1208,8 @@ class WorkerBroker:
         with self._lock:
             self._check_secret_locked(worker_id, secret)
         if not self.executables.put_bytes(sig, payload):
+            if self.metrics is not None:
+                self.metrics.counter("executables.rejected").inc()
             raise WireError(f"rejected executable payload for {sig!r} "
                             f"(bad signature or framing)")
         with self._lock:
@@ -1254,9 +1307,10 @@ class WorkerBroker:
                 self.jobs_failed += 1
                 if w is not None:
                     w.jobs_failed += 1
+                    w.last_error = job.error
             job.finished_at = now
             self._required.pop(job_id, None)
-        _observe_terminal(self.metrics, job)
+        _observe_terminal(self.metrics, job, self.events)
         self.queue.notify_terminal(job)
         return {"job_id": job_id, "state": job.state.value}
 
@@ -1299,16 +1353,29 @@ class WorkerBroker:
         self.leases_expired += 1
         if self.metrics is not None:
             self.metrics.counter("lease.expired").inc()
+        if self.events is not None:
+            # the single choke point for BOTH expiry paths (heartbeat-
+            # detected and sweep-detected) — exactly one event per
+            # expired lease
+            self.events.emit("lease.expire", trace_id=job.trace_id,
+                             job_id=job.job_id,
+                             worker_id=job.worker_id or "",
+                             attempt=job.attempt)
         if job.cancel_requested and not job.state.terminal():
             job.state = JobState.CANCELLED
             job.cancel_reason = job.cancel_reason or "user"
             job.finished_at = time.time()
-            _observe_terminal(self.metrics, job)
+            _observe_terminal(self.metrics, job, self.events)
             return
         if self.queue.requeue(job):
             self.jobs_requeued += 1
             if self.metrics is not None:
                 self.metrics.counter("jobs.requeued").inc()
+            if self.events is not None:
+                self.events.emit("job.requeue", trace_id=job.trace_id,
+                                 job_id=job.job_id,
+                                 worker_id=job.worker_id or "",
+                                 attempt=job.attempt)
 
     def _expire_locked_sweep(self) -> None:
         """Requeue every job whose lease expired (dead worker), and
@@ -1357,6 +1424,34 @@ class WorkerBroker:
         """Registered worker count (``workers.registered`` gauge)."""
         with self._lock:
             return len(self._workers)
+
+    def cluster(self) -> dict[str, Any]:
+        """The ``GET /cluster`` worker scoreboard: one row per
+        registered worker — capabilities, heartbeat staleness, active
+        leases with time-to-expiry, last failure, and the warm-pool
+        prefetch count — plus broker-level lease totals.  This is the
+        operator's "which worker is sick?" view; ``/slo`` answers
+        "is the service sick?"."""
+        now = _wall()
+        now_m = _mono()
+        with self._lock:
+            workers = []
+            for wid, w in sorted(self._workers.items()):
+                snap = w.snapshot()
+                snap["heartbeat_staleness_s"] = round(
+                    max(0.0, now - w.last_seen), 3)
+                snap["leases"] = [
+                    {"job_id": jid,
+                     "expires_in_s": round(ls.expires_at - now_m, 3)}
+                    for jid, ls in sorted(self._leases.items())
+                    if ls.worker_id == wid]
+                workers.append(snap)
+            return {"workers": workers,
+                    "active_leases": len(self._leases),
+                    "leases_expired": self.leases_expired,
+                    "jobs_requeued": self.jobs_requeued,
+                    "lease_ttl": self.lease_ttl,
+                    "now": now}
 
     def stats(self) -> dict[str, Any]:
         """Broker counters + per-worker stats (``GET /stats`` in broker

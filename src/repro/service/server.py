@@ -36,7 +36,8 @@ Endpoints (JSON unless noted; see ``docs/service.md``):
 ``DELETE /workflows/{id}``  cancel every live node (queued downstream
                             nodes cascade automatically)
 ``GET /jobs/{id}/trace``    the job's cross-process span timeline
-                            (``?format=text`` renders an ASCII gantt;
+                            (``?format=text`` renders an ASCII gantt,
+                            ``?format=otlp`` an OTLP/JSON export doc;
                             ``docs/observability.md``)
 ``POST /jobs/{id}/frames``  streaming ingest: one raw ``.npy`` chunk +
                             ``X-Start-Frame`` header (409 on
@@ -57,7 +58,13 @@ Endpoints (JSON unless noted; see ``docs/service.md``):
                             registry (also JSON under ``/stats``)
 ``GET /stats``              scheduler + compile-cache + metrics counters
 ``GET /plugins``            the wire-format plugin registry
-``GET /healthz``            liveness probe
+``GET /events``             structured event log tail (``?since=``
+                            cursor + ``?limit=``; docs/observability.md)
+``GET /slo``                SLO rule states + alert lifecycle snapshot
+``GET /cluster``            per-worker scoreboard (broker mode: leases,
+                            heartbeat staleness, last error, prefetch)
+``GET /healthz``            liveness probe; ``?ready=1`` consults the
+                            SLO engine (503 while a critical rule fires)
 ==========================  ==========================================
 
 Results are streamed straight out of the transport's chunk-addressed
@@ -82,7 +89,10 @@ import numpy as np
 
 from ..core.process_list import ProcessListError
 from ..core.transport import ChunkedFile, Transport
+from ..obs.export import trace_to_otlp
+from ..obs.log import EventLog
 from ..obs.metrics import MetricsRegistry, register_catalogue
+from ..obs.slo import SloEngine
 from ..obs.trace import Span, TraceSpool, render_gantt
 from .checkpoint import CheckpointStore
 from .compile_cache import CompileCache
@@ -137,7 +147,10 @@ class PipelineService:
                  max_sweep_variants: int = 64,
                  token: str | None = None,
                  trace_spool: TraceSpool | str | None = None,
-                 executables_dir: str | None = None):
+                 executables_dir: str | None = None,
+                 events_max: int = 2048,
+                 slo_spec: dict[str, Any] | None = None,
+                 slo_interval: float = 1.0):
         """Args mirror :class:`PipelineScheduler`; ``max_pending``
         bounds admission (HTTP 429 past it) and ``max_history`` bounds
         retained terminal jobs (a pruned job's result is gone — 404).
@@ -161,6 +174,13 @@ class PipelineService:
         (``lease_ttl``/``sweep_interval``/``results_dir`` configure the
         :class:`WorkerBroker`; ``transport_factory``/``n_workers``/
         gang options are worker-side concerns and are ignored here).
+
+        The health plane (docs/observability.md): ``events_max`` bounds
+        the structured event-log ring (``GET /events``), ``slo_spec``
+        overrides/extends the default SLO rules
+        (:func:`repro.obs.slo.rules_from_spec`), and ``slo_interval``
+        paces the background evaluator that walks alerts through
+        pending → firing → resolved.
         """
         # explicit None-check: an EMPTY CompileCache is falsy (__len__)
         if compile_cache is None:
@@ -177,20 +197,27 @@ class PipelineService:
         # first scrape
         self.metrics = MetricsRegistry()
         register_catalogue(self.metrics)
+        # the structured event log: every queue/scheduler/broker state
+        # transition lands here as one bounded JSON record
+        self.events = EventLog(max_events=events_max)
+        self.queue.events = self.events
+        self.slo = SloEngine(self.metrics, self.events, spec=slo_spec)
+        self.slo_interval = max(0.05, float(slo_interval))
         self.scheduler: PipelineScheduler | None = None
         self.broker: WorkerBroker | None = None
         if workers_remote:
             self.broker = WorkerBroker(
                 self.queue, lease_ttl=lease_ttl,
                 sweep_interval=sweep_interval, results_dir=results_dir,
-                metrics=self.metrics, executables_dir=executables_dir)
+                metrics=self.metrics, events=self.events,
+                executables_dir=executables_dir)
         else:
             self.scheduler = PipelineScheduler(
                 self.queue, transport_factory=transport_factory,
                 n_workers=n_workers, checkpoints=checkpoints,
                 batch_identical=batch_identical, batch_max=batch_max,
                 fuse=fuse, compile_cache=self.compile_cache,
-                metrics=self.metrics)
+                metrics=self.metrics, events=self.events)
         self.sweeps = SweepManager(self.queue, fetch=self._variant_array,
                                    max_variants=max_sweep_variants)
         self.workflows = WorkflowManager(self.queue)
@@ -208,6 +235,8 @@ class PipelineService:
         self._wire_gauges()
         self._httpd: ThreadingHTTPServer | None = None
         self._http_thread: threading.Thread | None = None
+        self._slo_thread: threading.Thread | None = None
+        self._slo_stop = threading.Event()
 
     def _wire_gauges(self) -> None:
         """Bind the callback gauges: these read live state at scrape
@@ -233,6 +262,10 @@ class PipelineService:
             broker.n_active_leases if broker is not None else lambda: 0)
         m.gauge("workers.registered").set_function(
             broker.n_workers if broker is not None else lambda: 0)
+        m.gauge("slo.firing").set_function(
+            lambda: float(self.slo.n_firing()))
+        m.gauge("events.head").set_function(
+            lambda: float(self.events.head))
 
     # -- service operations (HTTP-independent) -------------------------
     def submit_envelope(self, envelope: dict[str, Any]) -> Job:
@@ -458,6 +491,35 @@ class PipelineService:
         ds, transport = self.result_dataset(job_id, dataset)
         return np.ascontiguousarray(np.asarray(transport.read(ds)))
 
+    # -- health plane (docs/observability.md) ---------------------------
+    def readiness(self) -> tuple[int, dict[str, Any]]:
+        """The degrade-aware readiness verdict
+        (``GET /healthz?ready=1``): evaluate the SLO engine NOW, answer
+        ``(503, detail)`` while any critical rule is firing, else
+        ``(200, ok)``.  Liveness (plain ``/healthz``) never consults
+        the engine — a sick-but-alive service must not be restarted by
+        its liveness probe."""
+        self.slo.evaluate()
+        critical = self.slo.critical_firing()
+        if critical:
+            return 503, {"ok": False, "ready": False,
+                         "error": "critical SLO rule firing",
+                         "firing": [r["name"] for r in critical],
+                         "detail": critical,
+                         "pending": self.queue.pending()}
+        return 200, {"ok": True, "ready": True,
+                     "pending": self.queue.pending()}
+
+    def slo_snapshot(self) -> dict[str, Any]:
+        """Fresh ``GET /slo`` payload (evaluates first, so a scrape
+        never reports stale lifecycle states)."""
+        self.slo.evaluate()
+        return self.slo.snapshot()
+
+    def _slo_loop(self, stop: threading.Event) -> None:
+        while not stop.wait(self.slo_interval):
+            self.slo.evaluate()
+
     def stats(self) -> dict[str, Any]:
         """Scheduler (or broker) counters + compile-cache hit rates +
         sweep-group counters + the metrics-registry snapshot
@@ -547,6 +609,12 @@ class PipelineService:
             self.broker.start()
         else:
             self.scheduler.start()
+        if self._slo_thread is None:
+            self._slo_stop = threading.Event()
+            self._slo_thread = threading.Thread(
+                target=self._slo_loop, args=(self._slo_stop,),
+                name="slo-eval", daemon=True)
+            self._slo_thread.start()
         service = self
 
         class Handler(_PipelineHandler):
@@ -578,6 +646,10 @@ class PipelineService:
         if self._http_thread is not None:
             self._http_thread.join(timeout=10)
             self._http_thread = None
+        if self._slo_thread is not None:
+            self._slo_stop.set()
+            self._slo_thread.join(timeout=10)
+            self._slo_thread = None
         if self.broker is not None:
             self.broker.shutdown()
         if self.scheduler is not None:
@@ -683,8 +755,27 @@ class _PipelineHandler(BaseHTTPRequestHandler):
         path, query = url.path.rstrip("/") or "/", parse_qs(url.query)
         svc = self.service
         if path == "/healthz":
+            # plain = cheap liveness; ?ready=1 = degrade-aware
+            # readiness via the SLO engine (503 + machine-readable
+            # detail while a critical rule fires)
+            if (query.get("ready") or ["0"])[0] in ("1", "true"):
+                return self._json(*svc.readiness())
             return self._json(200, {"ok": True,
                                     "pending": svc.queue.pending()})
+        if path == "/slo":
+            return self._json(200, svc.slo_snapshot())
+        if path == "/events":
+            try:
+                since = int((query.get("since") or ["0"])[0])
+                raw_limit = (query.get("limit") or [None])[0]
+                limit = None if raw_limit is None else int(raw_limit)
+            except ValueError:
+                return self._error(400, "since/limit must be integers")
+            return self._json(200, svc.events.since(since, limit=limit))
+        if path == "/cluster":
+            if svc.broker is None:
+                return self._error(409, "not serving in broker mode")
+            return self._json(200, svc.broker.cluster())
         if path == "/stats":
             return self._json(200, svc.stats())
         if path == "/metrics":
@@ -763,7 +854,8 @@ class _PipelineHandler(BaseHTTPRequestHandler):
         m = _TRACE_RE.match(path)
         if m:
             job_id = unquote(m.group(1))
-            as_text = (query.get("format") or [None])[0] == "text"
+            fmt = (query.get("format") or [None])[0]
+            as_text, as_otlp = fmt == "text", fmt == "otlp"
             try:
                 job = svc.queue.job(job_id)
             except KeyError:
@@ -781,10 +873,16 @@ class _PipelineHandler(BaseHTTPRequestHandler):
                         except (KeyError, TypeError, ValueError):
                             continue
                     return self._text(200, render_gantt(spans) + "\n")
+                if as_otlp:
+                    return self._json(
+                        200, trace_to_otlp(rec, {"job.id": job_id}))
                 return self._json(200, rec)
             if as_text:
                 return self._text(
                     200, render_gantt(job.trace.spans()) + "\n")
+            if as_otlp:
+                return self._json(
+                    200, trace_to_otlp(job.trace, {"job.id": job_id}))
             return self._json(200, {"job_id": job_id,
                                     **job.trace.to_wire()})
         m = _PREVIEW_RE.match(path)
@@ -986,9 +1084,15 @@ class _PipelineHandler(BaseHTTPRequestHandler):
         if not isinstance(timeout, (int, float)) or timeout < 0 \
                 or timeout > 30:
             raise WireError(f"timeout must be 0..30s, got {timeout!r}")
+        prefetched = body.get("prefetched")
+        if prefetched is not None and (
+                not isinstance(prefetched, int) or prefetched < 0
+                or isinstance(prefetched, bool)):
+            raise WireError(f"prefetched must be a non-negative int, "
+                            f"got {prefetched!r}")
         return 200, {"jobs": broker.lease(
             wid, max_jobs=max_jobs, timeout=float(timeout),
-            secret=body.get("worker_secret"))}
+            secret=body.get("worker_secret"), prefetched=prefetched)}
 
     def _broker_call(self, fn) -> None:
         """Run one worker-protocol operation: parse the JSON body, hand

@@ -254,8 +254,11 @@ class PipelineWorker:
         if not self._registered:
             self.register()
         try:
+            # prefetched piggybacks the warm-pool count for the broker's
+            # /cluster scoreboard (docs/worker-protocol.md)
             leases = self.client.lease(self.worker_id,
-                                       max_jobs=self.max_batch)
+                                       max_jobs=self.max_batch,
+                                       prefetched=self.prefetched)
         except ServiceError as e:
             if e.status in (403, 404):
                 # 404: broker restarted and lost the registry.  403: our
@@ -750,6 +753,7 @@ def spawn_local_workers(url: str, n: int, *, transport: str = "inmemory",
                         pythonpath_extra: tuple[str, ...] = (),
                         token: str | None = None,
                         executables_dir: str | None = None,
+                        cost_analysis: bool = False,
                         stdout: Any = None) -> list:
     """Spawn ``n`` worker subprocesses against a broker URL — the
     ``pipeline_serve --workers-remote N`` demo, benchmarks and tests all
@@ -789,13 +793,16 @@ def spawn_local_workers(url: str, n: int, *, transport: str = "inmemory",
             cmd += ["--token", token]
         if executables_dir is not None:
             cmd += ["--executables-dir", executables_dir]
+        if cost_analysis:
+            cmd += ["--cost-analysis"]
         procs.append(subprocess.Popen(cmd, env=env, stdout=stdout,
                                       stderr=stdout))
     return procs
 
 
 def _transport_factory(kind: str, scratch: str, donate: bool = True,
-                       compile_cache: CompileCache | None = None
+                       compile_cache: CompileCache | None = None,
+                       cost_analysis: bool = False
                        ) -> Callable[[dict], Transport]:
     if kind == "sharded":
         import jax
@@ -807,7 +814,8 @@ def _transport_factory(kind: str, scratch: str, donate: bool = True,
         cache = (compile_cache if compile_cache is not None
                  else CompileCache())
         return lambda desc: ShardedTransport(mesh, donate=donate,
-                                             compile_cache=cache)
+                                             compile_cache=cache,
+                                             cost_analysis=cost_analysis)
     if kind == "chunked":
         return lambda desc: ChunkedFileTransport(
             os.path.join(scratch, desc["job_id"]))
@@ -857,6 +865,11 @@ def main(argv: list[str] | None = None) -> None:
                     help="local disk tier for serialized executables "
                          "(sharded transport only; default: a subdir "
                          "of the worker scratch directory)")
+    ap.add_argument("--cost-analysis",
+                    action=argparse.BooleanOptionalAction, default=False,
+                    help="attach XLA cost/memory analysis (flops, bytes "
+                         "accessed, peak memory) to every jitted "
+                         "plugin's process span (sharded transport)")
     args = ap.parse_args(argv)
     for mod in args.imports:
         importlib.import_module(mod)
@@ -871,9 +884,10 @@ def main(argv: list[str] | None = None) -> None:
         # gang execution stacks job inputs — donation would invalidate
         # buffers the stack still references (mirrors the scheduler's
         # --batch rule), so donate only when leases stay solo
-        transport_factory=_transport_factory(args.transport, scratch,
-                                             donate=args.max_batch == 1,
-                                             compile_cache=compile_cache),
+        transport_factory=_transport_factory(
+            args.transport, scratch, donate=args.max_batch == 1,
+            compile_cache=compile_cache,
+            cost_analysis=args.cost_analysis),
         checkpoint_dir=args.checkpoint_dir, shared_fs=args.shared_fs,
         worker_id=args.worker_id, max_batch=args.max_batch,
         sweeps=args.sweeps, poll=args.poll, heartbeat=args.heartbeat,

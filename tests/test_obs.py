@@ -1,20 +1,29 @@
 """Unit tests for the telemetry substrate (``repro.obs``): the trace
 model (span identity, parent links, merge dedup, the shipping protocol),
 the metrics registry (counters/gauges/reservoir histograms and the
-Prometheus exposition), and the span-backed Profiler's back-compat
-surface.  Quantile math gets a hypothesis property test when hypothesis
-is installed."""
+Prometheus exposition), the span-backed Profiler's back-compat surface,
+and the health plane — the structured event log (ring + cursor), the
+SLO rule engine's alert lifecycle (deterministic via explicit clocks),
+the OTLP export bridge (1:1 span mapping, metric shapes, the spool),
+and the registry↔CATALOGUE completeness guard.  Quantile math gets a
+hypothesis property test when hypothesis is installed."""
 import math
+import os
+import re
 import threading
 import time
 
 import pytest
 
 from repro.core.profiler import Profiler
-from repro.obs import (CATALOGUE, Counter, Gauge, Histogram,
-                       MetricsRegistry, Span, Trace, catalogue_names,
-                       current_trace, prometheus_name, register_catalogue,
-                       render_gantt, use_trace)
+from repro.obs import (CATALOGUE, Counter, EventLog, Gauge, Histogram,
+                       MetricsRegistry, OtlpSpool, SloEngine, SloRule,
+                       Span, Trace, catalogue_names, current_trace,
+                       default_rules, iter_spans, metrics_to_otlp,
+                       prometheus_name, register_catalogue, render_gantt,
+                       rules_from_spec, trace_to_otlp, use_trace)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 # ============================================================== tracing
@@ -265,3 +274,342 @@ def test_catalogue_registers_every_name():
     for name in catalogue_names():
         assert prometheus_name(name) in text
     register_catalogue(reg)                  # idempotent
+
+
+# ==================================================== completeness guard
+#: per-plugin metrics minted from plugin names at runtime — the only
+#: names allowed to live outside the CATALOGUE
+DYNAMIC_METRIC_PREFIXES = ("plugin.wall.", "plugin.flops.")
+_METRIC_CALL_RE = re.compile(
+    r"""\.(counter|gauge|histogram)\(\s*["']([^"']+)["']""")
+
+
+def _scan_metric_literals() -> dict[str, set[tuple[str, str]]]:
+    """Every literal ``.counter("x") / .gauge("x") / .histogram("x")``
+    in ``src/repro`` -> {name: {(kind, relpath), ...}}."""
+    src = os.path.join(REPO_ROOT, "src", "repro")
+    found: dict[str, set[tuple[str, str]]] = {}
+    for root, _, files in os.walk(src):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(root, fname)
+            with open(path) as fh:
+                text = fh.read()
+            rel = os.path.relpath(path, REPO_ROOT)
+            for kind, name in _METRIC_CALL_RE.findall(text):
+                found.setdefault(name, set()).add((kind, rel))
+    return found
+
+
+def test_every_created_metric_is_catalogued_and_vice_versa():
+    """The CATALOGUE is the single source of truth: any metric name a
+    service module creates must be pre-registered there (so /metrics is
+    complete from the first scrape), and every catalogued name must
+    actually be produced somewhere (no dead documentation)."""
+    used = _scan_metric_literals()
+    cat = {name: kind for name, kind, _ in CATALOGUE}
+    dynamic = {n for n in used
+               if n.startswith(DYNAMIC_METRIC_PREFIXES)}
+    uncatalogued = set(used) - set(cat) - dynamic
+    assert not uncatalogued, (
+        f"metric names created in src/repro but missing from "
+        f"CATALOGUE: { {n: sorted(used[n]) for n in uncatalogued} }")
+    unused = set(cat) - set(used)
+    assert not unused, (f"CATALOGUE names never created anywhere in "
+                        f"src/repro: {sorted(unused)}")
+    # and the creation kind agrees with the catalogued kind — a
+    # mismatch would raise at runtime on the first conflicting create
+    for name, sites in used.items():
+        if name in cat:
+            kinds = {k for k, _ in sites}
+            assert kinds == {cat[name]}, (name, sorted(sites))
+
+
+# ============================================================ event log
+def test_eventlog_emit_since_and_cursor():
+    log = EventLog(max_events=16)
+    assert log.head == 0 and len(log) == 0
+    log.emit("job.submit", trace_id="t1", job_id="j1", priority=5)
+    log.emit("job.lease", trace_id="t1", job_id="j1", worker_id="w0")
+    page = log.since(0)
+    assert [e["event"] for e in page["events"]] == ["job.submit",
+                                                   "job.lease"]
+    assert page["cursor"] == 2 and page["dropped"] == 0
+    rec = page["events"][0]
+    assert rec["trace_id"] == "t1" and rec["job_id"] == "j1"
+    assert rec["worker_id"] == "" and rec["attrs"] == {"priority": 5}
+    assert rec["seq"] == 1 and rec["ts"] <= time.time()
+    # resuming from the cursor sees only what is new
+    assert log.since(page["cursor"])["events"] == []
+    assert log.since(page["cursor"])["cursor"] == page["cursor"]
+    log.emit("job.complete", trace_id="t1", job_id="j1")
+    nxt = log.since(page["cursor"])
+    assert [e["event"] for e in nxt["events"]] == ["job.complete"]
+    assert nxt["cursor"] == 3 and log.head == 3
+
+
+def test_eventlog_ring_reports_dropped_gap():
+    log = EventLog(max_events=4)
+    for i in range(10):
+        log.emit("e", trace_id=f"t{i}")
+    page = log.since(0)                  # seqs 7..10 retained
+    assert [e["seq"] for e in page["events"]] == [7, 8, 9, 10]
+    assert page["dropped"] == 6          # 1..6 fell off unseen
+    # a reader who already saw seq 8 lost nothing
+    assert log.since(8)["dropped"] == 0
+    assert [e["seq"] for e in log.since(8)["events"]] == [9, 10]
+
+
+def test_eventlog_limit_and_validation():
+    log = EventLog(max_events=8)
+    for _ in range(5):
+        log.emit("e")
+    page = log.since(0, limit=2)
+    assert [e["seq"] for e in page["events"]] == [1, 2]
+    assert page["cursor"] == 2           # paging resumes mid-ring
+    with pytest.raises(ValueError):
+        log.since(-1)
+    with pytest.raises(ValueError):
+        EventLog(max_events=0)
+
+
+# =========================================================== SLO engine
+def test_slo_gauge_rule_full_lifecycle_with_holddowns():
+    """ok -> pending -> (for_s held) firing -> (resolve_s held) ok,
+    with exactly one event per lifecycle transition."""
+    reg = MetricsRegistry()
+    log = EventLog()
+    eng = SloEngine(reg, events=log)
+    g = reg.gauge("queue.oldest_age_s")
+    g.set(200.0)                         # rule: > 120 for 5s
+    assert eng.evaluate(now=1000.0) == ["alert.pending"]
+    assert eng.evaluate(now=1004.0) == []        # hold-down not met
+    assert eng.evaluate(now=1005.0) == ["alert.firing"]
+    assert eng.n_firing() == 1
+    snap = eng.snapshot()
+    (rule,) = [r for r in snap["rules"]
+               if r["name"] == "queue-oldest-age"]
+    assert rule["state"] == "firing" and rule["value"] == 200.0
+    assert snap["firing"] == ["queue-oldest-age"]
+    assert snap["critical_firing"] == []         # not a critical rule
+    g.set(10.0)                          # clears; resolve_s=5 holds
+    assert eng.evaluate(now=1006.0) == []
+    assert eng.evaluate(now=1010.9) == []
+    assert eng.evaluate(now=1011.0) == ["alert.resolved"]
+    assert eng.n_firing() == 0
+    names = [e["event"] for e in log.since(0)["events"]]
+    assert names == ["alert.pending", "alert.firing", "alert.resolved"]
+    # every alert record joins the common schema via the engine's trace
+    for e in log.since(0)["events"]:
+        assert e["trace_id"] == eng.trace_id
+        assert e["attrs"]["rule"] == "queue-oldest-age"
+    assert reg.counter("alerts.fired").value == 1
+    assert reg.counter("alerts.resolved").value == 1
+    (rule,) = [r for r in eng.snapshot()["rules"]
+               if r["name"] == "queue-oldest-age"]
+    assert rule["fired"] == 1 and rule["resolved"] == 1
+
+
+def test_slo_pending_that_never_fires_folds_back_silently():
+    reg = MetricsRegistry()
+    log = EventLog()
+    eng = SloEngine(reg, events=log)
+    g = reg.gauge("queue.oldest_age_s")
+    g.set(500.0)
+    assert eng.evaluate(now=0.0) == ["alert.pending"]
+    g.set(0.0)                           # clear before for_s elapsed
+    assert eng.evaluate(now=1.0) == []
+    assert eng.n_firing() == 0
+    assert [e["event"] for e in log.since(0)["events"]] == \
+        ["alert.pending"]                # no firing, no resolved
+    assert reg.counter("alerts.fired").value == 0
+
+
+def test_slo_rate_rule_fires_on_counter_increase_and_resolves():
+    """kind="rate" reads the counter's increase over window_s: a lease
+    expiry fires the critical rule immediately (for_s=0) and the rule
+    resolves once the window slides past the increase."""
+    reg = MetricsRegistry()
+    log = EventLog()
+    eng = SloEngine(reg, events=log)
+    c = reg.counter("lease.expired")
+    assert eng.evaluate(now=0.0) == []           # increase of 0
+    c.inc()
+    assert eng.evaluate(now=1.0) == ["alert.pending", "alert.firing"]
+    (detail,) = eng.critical_firing()
+    assert detail["name"] == "lease-expiry-rate"
+    assert detail["value"] == 1.0
+    # inside the 30s window the rule stays firing...
+    assert eng.evaluate(now=20.0) == []
+    assert eng.n_firing() == 1
+    # ...and resolves once the window slides past the expiry
+    assert eng.evaluate(now=32.0) == ["alert.resolved"]
+    assert eng.critical_firing() == [] and eng.n_firing() == 0
+
+
+def test_slo_quantile_rule_ignores_empty_histogram():
+    reg = MetricsRegistry()
+    eng = SloEngine(reg)
+    reg.histogram("job.latency.e2e")     # empty: quantile() is None
+    assert eng.evaluate(now=0.0) == []
+    for _ in range(3):
+        reg.histogram("job.latency.e2e").observe(400.0)  # p99 > 300
+    assert eng.evaluate(now=1.0) == ["alert.pending"]
+    assert eng.evaluate(now=6.0) == ["alert.firing"]     # for_s=5
+
+
+def test_slo_missing_metric_never_breaches():
+    eng = SloEngine(MetricsRegistry())   # registry has no metrics at all
+    assert eng.evaluate(now=0.0) == []
+    assert all(r["state"] == "ok" and r["value"] is None
+               for r in eng.snapshot()["rules"])
+
+
+def test_rules_from_spec_patch_add_disable():
+    names = {r.name for r in default_rules()}
+    assert names == {"queue-oldest-age", "job-latency-p99",
+                     "lease-expiry-rate", "ingest-lag",
+                     "executable-rejects"}
+    rules = rules_from_spec({
+        "lease-expiry-rate": {"window_s": 5.0},          # patch
+        "my-depth": {"metric": "queue.depth",            # add
+                     "threshold": 50.0, "critical": True},
+        "ingest-lag": None,                              # disable
+    })
+    by_name = {r.name: r for r in rules}
+    assert by_name["lease-expiry-rate"].window_s == 5.0
+    assert by_name["lease-expiry-rate"].critical is True  # kept
+    assert by_name["my-depth"].metric == "queue.depth"
+    assert by_name["my-depth"].critical is True
+    assert "ingest-lag" not in by_name
+    assert len(rules) == 5
+
+
+def test_rules_from_spec_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        rules_from_spec({"queue-oldest-age": {"nope": 1}})
+    with pytest.raises(ValueError):
+        rules_from_spec({"queue-oldest-age": 42})
+    with pytest.raises(ValueError):
+        rules_from_spec({"new-rule": {"metric": "queue.depth"}})
+    with pytest.raises(ValueError):
+        SloRule("x", "m", 1.0, kind="nope")
+    with pytest.raises(ValueError):
+        SloRule("x", "m", 1.0, op=">=")
+
+
+# ========================================================== OTLP export
+def test_trace_to_otlp_maps_spans_one_to_one():
+    s1 = Span("queue.wait", 1.0, 2.0, span_id="aaa1")
+    s2 = Span("plugin.fbp.process", 2.0, 3.5, span_id="bbb2",
+              parent_id="aaa1", worker_id="w0",
+              attrs={"flops": 1e9, "gang": 2, "ok": True, "tag": "x"})
+    doc = {"trace_id": "deadbeefdeadbeef",
+           "spans": [s1.to_wire(), s2.to_wire()]}
+    otlp = trace_to_otlp(doc, {"job.id": "j1"})
+    spans = list(iter_spans(otlp))
+    assert len(spans) == 2                       # 1:1, nothing dropped
+    for s in spans:
+        assert len(s["traceId"]) == 32
+        assert s["traceId"].endswith("deadbeefdeadbeef")
+        assert len(s["spanId"]) == 16
+    proc = {s["name"]: s for s in spans}
+    assert proc["queue.wait"]["spanId"] == "aaa1".rjust(16, "0")
+    assert proc["plugin.fbp.process"]["parentSpanId"] == \
+        "aaa1".rjust(16, "0")
+    assert proc["plugin.fbp.process"]["startTimeUnixNano"] == \
+        str(int(2.0e9))
+    attrs = {a["key"]: a["value"]
+             for a in proc["plugin.fbp.process"]["attributes"]}
+    assert attrs["flops"] == {"doubleValue": 1e9}
+    assert attrs["gang"] == {"intValue": "2"}
+    assert attrs["ok"] == {"boolValue": True}
+    assert attrs["tag"] == {"stringValue": "x"}
+    # grouped per recording process; broker-side spans -> "broker"
+    procs = []
+    for rs in otlp["resourceSpans"]:
+        res = {a["key"]: a["value"] for a in rs["resource"]["attributes"]}
+        assert res["service.name"] == {"stringValue": "repro.pipeline"}
+        assert res["job.id"] == {"stringValue": "j1"}
+        procs.append(res["service.instance.id"]["stringValue"])
+    assert procs == ["broker", "w0"]
+
+
+def test_trace_to_otlp_accepts_live_trace_and_open_spans():
+    tr = Trace("job-7", worker_id="w1")
+    with tr.span("attempt", attempt=1):
+        tr.record("compile", 1.0, 2.0)
+    open_span = tr.begin("lease")                # never finished
+    otlp = trace_to_otlp(tr)
+    spans = list(iter_spans(otlp))
+    assert len(spans) == len(tr.spans()) == 3
+    (lease,) = [s for s in spans if s["name"] == "lease"]
+    # OTLP has no "open": an unfinished span exports end == start
+    assert lease["endTimeUnixNano"] == lease["startTimeUnixNano"]
+    tr.finish(open_span)
+
+
+def test_otlp_id_handles_non_hex_ids():
+    doc = {"trace_id": "not hex at all!", "spans": [
+        Span("a", 0.0, 1.0, span_id="zzz").to_wire()]}
+    one = list(iter_spans(trace_to_otlp(doc)))[0]
+    two = list(iter_spans(trace_to_otlp(doc)))[0]
+    assert one["traceId"] == two["traceId"]      # deterministic
+    int(one["traceId"], 16)                      # valid 32-hex
+    assert len(one["traceId"]) == 32
+    int(one["spanId"], 16)
+    assert len(one["spanId"]) == 16
+
+
+def test_metrics_to_otlp_shapes():
+    snap = {"jobs.completed": 3,                 # counter -> sum
+            "queue.depth": 2.5,                  # gauge
+            "bad.scrape": float("nan"),          # NaN -> empty points
+            "job.latency.e2e": {"count": 3, "sum": 0.6, "p50": 0.2,
+                                "p95": 0.3, "p99": 0.3},
+            "not_a_metric": "text", "flag": True}
+    otlp = metrics_to_otlp(snap, identity="w9", now=100.0)
+    (rm,) = otlp["resourceMetrics"]
+    res = {a["key"]: a["value"] for a in rm["resource"]["attributes"]}
+    assert res["service.instance.id"] == {"stringValue": "w9"}
+    metrics = {m["name"]: m for m in rm["scopeMetrics"][0]["metrics"]}
+    # strings/bools are not samples
+    assert set(metrics) == {"jobs.completed", "queue.depth",
+                            "bad.scrape", "job.latency.e2e"}
+    ctr = metrics["jobs.completed"]["sum"]
+    assert ctr["isMonotonic"] is True
+    assert ctr["dataPoints"][0] == {"timeUnixNano": str(int(100e9)),
+                                    "asDouble": 3.0}
+    assert metrics["queue.depth"]["gauge"]["dataPoints"][0][
+        "asDouble"] == 2.5
+    assert metrics["bad.scrape"]["gauge"]["dataPoints"] == []
+    summ = metrics["job.latency.e2e"]["summary"]["dataPoints"][0]
+    assert summ["count"] == "3" and summ["sum"] == 0.6
+    assert [q["quantile"] for q in summ["quantileValues"]] == \
+        [0.5, 0.95, 0.99]
+
+
+def test_otlp_spool_write_sanitise_evict(tmp_path):
+    import json
+    spool = OtlpSpool(str(tmp_path / "otlp"), max_files=2)
+    tr = Trace("job-1")
+    tr.record("a", 0.0, 1.0)
+    p1 = spool.export_trace("job/../1 x", tr)
+    assert os.path.basename(p1) == "trace-job_.._1_x.otlp.json"
+    with open(p1) as fh:
+        doc = json.load(fh)
+    assert len(list(iter_spans(doc))) == 1
+    res = {a["key"]: a["value"] for a in
+           doc["resourceSpans"][0]["resource"]["attributes"]}
+    assert res["job.id"] == {"stringValue": "job/../1 x"}
+    # bounded: oldest (mtime) beyond max_files are evicted at put time
+    p2 = spool.put("two", {"resourceSpans": []})
+    os.utime(p1, (1, 1))
+    os.utime(p2, (2, 2))
+    p3 = spool.put("three", {"resourceSpans": []})
+    assert len(spool) == 2
+    assert not os.path.exists(p1)
+    assert os.path.exists(p2) and os.path.exists(p3)
+    with pytest.raises(ValueError):
+        OtlpSpool(str(tmp_path / "x"), max_files=0)

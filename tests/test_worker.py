@@ -136,6 +136,115 @@ def test_worker_crash_job_resumes_on_survivor(tmp_path):
         svc.stop()
 
 
+# ============================================ alert lifecycle (health plane)
+def test_alert_lifecycle_on_worker_kill(tmp_path):
+    """The health plane end-to-end: SIGKILL the worker holding a lease
+    and watch the critical ``lease-expiry-rate`` rule walk the full
+    alert lifecycle — ``/healthz?ready=1`` flips to 503 while it fires
+    and back to 200 once the job resumes and the rate window slides
+    past the expiry; the event log records exactly one firing and one
+    resolved edge, and the job's own submit→lease→expire→requeue→
+    complete chain shares one trace id."""
+    svc = PipelineService(
+        workers_remote=True, lease_ttl=1.0, sweep_interval=0.1,
+        slo_interval=0.1,
+        # tighten the rate window so the rule resolves in seconds, not
+        # the default 30s
+        slo_spec={"lease-expiry-rate": {"window_s": 3.0}})
+    host, port = svc.serve(port=0)
+    url = f"http://{host}:{port}"
+    client = PipelineClient(url, timeout=60.0)
+    workers = spawn_local_workers(
+        url, 1, transport="inmemory", poll=0.05, heartbeat=0.3,
+        imports=("slow_plugins",), worker_ids=["w0"],
+        pythonpath_extra=(TESTS_DIR,))
+    try:
+        assert client.health(ready=True)["ready"] is True
+        jid = client.submit(_spec(seed=4, delay=0.3), job_id="slo-job")
+        deadline = time.time() + 120
+        while True:                      # wait until w0 holds the lease
+            snap = client.status(jid)
+            if snap["state"] == "running" and snap["worker_id"] == "w0":
+                break
+            assert snap["state"] not in ("done", "failed"), snap
+            assert time.time() < deadline, snap
+            time.sleep(0.05)
+        os.kill(workers[0].pid, signal.SIGKILL)
+
+        # lease expires -> the critical rule fires -> readiness is 503
+        # with a machine-readable reason
+        while True:
+            health = client.health(ready=True)
+            if not health["ready"]:
+                break
+            assert time.time() < deadline, "rule never fired"
+            time.sleep(0.05)
+        assert "lease-expiry-rate" in health["firing"]
+        assert health["error"] == "critical SLO rule firing"
+        assert client.slo()["critical_firing"] == ["lease-expiry-rate"]
+
+        # a replacement worker drains the requeued job...
+        workers += spawn_local_workers(
+            url, 1, transport="inmemory", poll=0.05, heartbeat=0.3,
+            imports=("slow_plugins",), worker_ids=["w1"],
+            pythonpath_extra=(TESTS_DIR,))
+        snap = client.wait(jid, timeout=120)
+        assert snap["state"] == "done" and snap["attempt"] >= 2, snap
+        # ...and once the rate window slides past the expiry the rule
+        # resolves: readiness flips back to 200
+        while True:
+            health = client.health(ready=True)
+            if health["ready"]:
+                break
+            assert time.time() < deadline, "rule never resolved"
+            time.sleep(0.1)
+
+        events = client.events()["events"]
+        by_name = {}
+        for e in events:
+            by_name.setdefault(e["event"], []).append(e)
+        fire = [e for e in by_name.get("alert.firing", [])
+                if e["attrs"]["rule"] == "lease-expiry-rate"]
+        resolved = [e for e in by_name.get("alert.resolved", [])
+                    if e["attrs"]["rule"] == "lease-expiry-rate"]
+        assert len(fire) == 1 and len(resolved) == 1, by_name
+        assert fire[0]["trace_id"] and fire[0]["trace_id"] == \
+            resolved[0]["trace_id"]
+        # the job's full transition chain shares ONE trace id
+        trace_id = by_name["job.submit"][0]["trace_id"]
+        assert trace_id
+        for name in ("job.submit", "job.lease", "lease.expire",
+                     "job.requeue", "job.complete"):
+            mine = [e for e in by_name.get(name, [])
+                    if e["job_id"] == jid]
+            assert mine, (name, sorted(by_name))
+            assert all(e["trace_id"] == trace_id for e in mine), name
+        assert by_name["lease.expire"][0]["worker_id"] == "w0"
+        (done,) = [e for e in by_name["job.complete"]
+                   if e["job_id"] == jid]
+        assert done["worker_id"] == "w1"
+        assert done["attrs"]["state"] == "done"
+        # every record in the log carries a trace id (CI contract)
+        assert all(e["trace_id"] for e in events)
+
+        # the cluster scoreboard shows the dead worker's staleness and
+        # the survivor with no active leases
+        cluster = client.cluster()
+        by_worker = {w["worker_id"]: w for w in cluster["workers"]}
+        assert set(by_worker) == {"w0", "w1"}
+        assert by_worker["w1"]["jobs_done"] >= 1
+        assert by_worker["w1"]["leases"] == []
+        assert by_worker["w0"]["heartbeat_staleness_s"] > 1.0
+        assert cluster["leases_expired"] >= 1
+    finally:
+        for p in workers:
+            if p.poll() is None:
+                p.kill()
+        for p in workers:
+            p.wait(timeout=10)
+        svc.stop()
+
+
 # ================================================== lease state machine
 def test_lease_expiry_exactly_one_owner(broker):
     """A heartbeat after expiry is rejected; after the requeue exactly
